@@ -1,0 +1,73 @@
+"""Kernel microbenches: name,us_per_call,derived CSV.
+
+On CPU the Pallas kernels run in interpret mode (orders of magnitude
+slower than compiled TPU); we therefore time the *ref* path (XLA-compiled
+jnp) for wall numbers and report the kernels' analytic FLOPs as
+`derived` (GFLOP per call) so the CSV stays meaningful on this host.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _time_us(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    b, h, kv, s, d = 1, 8, 2, 1024, 128
+    q = jax.random.normal(key, (b, h, s, d), jnp.float32)
+    k = jax.random.normal(key, (b, kv, s, d), jnp.float32)
+    v = jax.random.normal(key, (b, kv, s, d), jnp.float32)
+    fa = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    us = _time_us(fa, q, k, v)
+    flops = 4 * b * h * s * s * d / 2  # causal
+    rows.append(("flash_attention_1k", us, flops / 1e9))
+
+    s2 = 8192
+    kc = jax.random.normal(key, (b, kv, s2, d), jnp.float32)
+    vc = jax.random.normal(key, (b, kv, s2, d), jnp.float32)
+    qd = jax.random.normal(key, (b, h, d), jnp.float32)
+    pos = jnp.full((b,), s2 - 1, jnp.int32)
+    da = jax.jit(lambda q, k, v, p: ref.decode_attention_ref(q, k, v, p))
+    us = _time_us(da, qd, kc, vc, pos)
+    rows.append(("decode_attention_8k", us, 4 * b * h * s2 * d / 1e9))
+
+    bt, t, di, ds = 2, 512, 512, 16
+    dt = jax.nn.softplus(jax.random.normal(key, (bt, t, di)))
+    bm = jax.random.normal(key, (bt, t, ds))
+    cm = jax.random.normal(key, (bt, t, ds))
+    x = jax.random.normal(key, (bt, t, di))
+    an = -jnp.abs(jax.random.normal(key, (di, ds)))
+    h0 = jnp.zeros((bt, di, ds))
+    ss = jax.jit(lambda *a: ref.selective_scan_ref(*a))
+    us = _time_us(ss, dt, bm, cm, x, an, h0)
+    rows.append(("selective_scan_512", us, 8 * bt * t * di * ds / 1e9))
+
+    xn = jax.random.normal(key, (4096, 1024))
+    sc = jnp.ones((1024,))
+    rn = jax.jit(lambda x, s: ref.rmsnorm_ref(x, s))
+    us = _time_us(rn, xn, sc)
+    rows.append(("rmsnorm_4kx1k", us, 4096 * 1024 * 4 / 1e9))
+
+    print("name,us_per_call,derived_gflop")
+    for name, us, gf in rows:
+        print(f"{name},{us:.1f},{gf:.3f}")
+
+
+if __name__ == "__main__":
+    main()

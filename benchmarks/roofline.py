@@ -1,0 +1,194 @@
+import os
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Roofline analysis (EXPERIMENTS.md §Roofline).
+
+`cost_analysis()` counts lax.scan bodies ONCE (calibrated in
+EXPERIMENTS.md §Dry-run), so lowering the full stacked-layer model
+undercounts FLOPs by ~n_layers.  We instead compile small *audit* models
+with layers unrolled (Python loop) and extrapolate exactly:
+
+  pattern has cyclic period p, n_layers = units*p + remainder
+  cost(total) = cost(unit) + (units-1) * [cost(2*unit) - cost(unit)]
+                + sum_{k in remainder} [cost(unit + k) - cost(unit)]
+
+This is exact for per-layer-additive quantities (flops, bytes, collective
+bytes) because each audit compile shares the mesh/shardings of the real
+model; embed/head/encoder costs live in cost(unit) and cancel in the
+differences.
+
+Mamba time-scan correction: the recurrence inside a mamba block is a
+lax.scan over T which the audit cannot unroll (T up to 512k).  We add the
+kernel-model analytic terms (the deployable Pallas path keeps state in
+VMEM):  flops += 8*B*T*di*ds,  hbm += B*T*(3*di+2*ds)*2.
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.config import SHAPES  # noqa: E402
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
+from repro.launch.hlo_analysis import (  # noqa: E402
+    HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16, collective_stats,
+    roofline_terms)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import make_step  # noqa: E402
+from repro.sharding.specs import use_mesh_rules  # noqa: E402
+
+
+def pattern_period(pattern) -> int:
+    n = len(pattern)
+    for p in range(1, n + 1):
+        if all(pattern[i] == pattern[i % p] for i in range(n)):
+            return p
+    return n
+
+
+def _audit_cfg(cfg, pattern):
+    return dataclasses.replace(cfg, n_layers=len(pattern),
+                               block_pattern=tuple(pattern))
+
+
+def _measure(cfg, shape, mesh, layout="heads") -> dict:
+    from repro.launch import steps as steps_mod
+    from repro.models import model as model_mod
+    # build with unrolled layers so every block's FLOPs are counted
+    orig = model_mod.build_model
+
+    def build_unrolled(c, unroll=False):
+        return orig(c, unroll=True)
+
+    steps_mod.build_model = build_unrolled
+    try:
+        fn, args = make_step(cfg, shape, mesh, decode_cache_layout=layout)
+        lowered = jax.jit(fn).lower(*args)
+        compiled = lowered.compile()
+    finally:
+        steps_mod.build_model = orig
+    cost = compiled.cost_analysis()
+    coll = collective_stats(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "hbm": sum(float(v) for k, v in cost.items()
+                   if k.startswith("bytes accessed")),
+        "coll": float(coll.total_bytes),
+    }
+
+
+def _mamba_correction(cfg, shape, mesh) -> dict:
+    """Analytic kernel-model terms for the in-block time recurrence."""
+    n_mamba = sum(1 for b in cfg.block_pattern if b.startswith("mamba"))
+    if n_mamba == 0:
+        return {"flops": 0.0, "hbm": 0.0, "coll": 0.0}
+    di, ds = cfg.d_inner_eff, cfg.ssm_state
+    t = 1 if shape.is_decode else shape.seq_len
+    # per-device batch (batch shards over data(+pod) axes)
+    bsh = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.shape:
+            bsh *= mesh.shape[ax]
+    b_local = max(1, shape.global_batch // bsh)
+    di_local = di // mesh.shape.get("model", 1) if (
+        di % mesh.shape.get("model", 1) == 0) else di
+    flops = 8.0 * b_local * t * di_local * ds * n_mamba
+    hbm = b_local * t * (3 * di_local + 2 * ds) * 2.0 * n_mamba
+    return {"flops": flops, "hbm": hbm, "coll": 0.0}
+
+
+def audit(arch: str, shape_name: str, layout: str = "heads",
+          multi_pod: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "layout": layout,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not cfg.supports_shape(shape):
+        rec["status"] = "skipped"
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pattern = list(cfg.block_pattern)
+    p = pattern_period(pattern)
+    units = cfg.n_layers // p
+    rem = pattern[units * p:]
+
+    with mesh, use_mesh_rules(mesh):
+        c_u = _measure(_audit_cfg(cfg, pattern[:p]), shape, mesh, layout)
+        if units > 1 or rem:
+            c_2u = _measure(_audit_cfg(cfg, pattern[:p] * 2), shape, mesh,
+                            layout)
+        else:
+            c_2u = c_u
+        rem_costs = []
+        for k in rem:
+            c_k = _measure(_audit_cfg(cfg, pattern[:p] + [k]), shape, mesh,
+                           layout)
+            rem_costs.append({x: c_k[x] - c_u[x] for x in c_u})
+
+    unit_delta = {x: c_2u[x] - c_u[x] for x in c_u}
+    total = {x: c_u[x] + (units - 1) * unit_delta[x]
+             + sum(rc[x] for rc in rem_costs) for x in c_u}
+    corr = _mamba_correction(cfg, shape, mesh)
+    total = {x: total[x] + corr[x] for x in total}
+
+    terms = roofline_terms(total["flops"], total["hbm"], total["coll"],
+                           mesh.devices.size)
+    # MODEL_FLOPS: useful per-device flops
+    tokens = shape.global_batch * (1 if shape.is_decode else shape.seq_len)
+    n_active = cfg.num_active_params()
+    factor = 6 if shape.kind == "train" else 2
+    model_flops_global = factor * n_active * tokens
+    model_flops_dev = model_flops_global / mesh.devices.size
+    rec.update(terms)
+    rec.update({
+        "status": "ok",
+        "flops": total["flops"],
+        "hbm_bytes": total["hbm"],
+        "collective_bytes": total["coll"],
+        "model_flops_per_dev": model_flops_dev,
+        "useful_ratio": model_flops_dev / total["flops"]
+        if total["flops"] else 0.0,
+        "period": p,
+        "units": units,
+    })
+    return rec
+
+
+BOTTLENECK_HINT = {
+    "compute": "more chips or lower-precision matmuls; check remat ratio",
+    "memory": "fuse/kernelize the dominant bandwidth op (attention/scan) "
+              "or shard the biggest resident tensor further",
+    "collective": "reshard to cut the dominant collective, overlap it "
+                  "with compute, or move it to a faster axis",
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--layout", default="heads")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    print("arch,shape,layout,status,t_compute_s,t_memory_s,t_collective_s,"
+          "dominant,useful_ratio,hint")
+    for a in archs:
+        for s in shapes:
+            r = audit(a, s, layout=args.layout)
+            if r.get("status") != "ok":
+                print(f"{a},{s},{args.layout},{r.get('status')},,,,,,")
+                continue
+            print(f"{a},{s},{args.layout},ok,{r['t_compute_s']:.3e},"
+                  f"{r['t_memory_s']:.3e},{r['t_collective_s']:.3e},"
+                  f"{r['dominant']},{r['useful_ratio']:.3f},"
+                  f"\"{BOTTLENECK_HINT[r['dominant']]}\"", flush=True)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(r) + "\n")
+
+
+if __name__ == "__main__":
+    main()

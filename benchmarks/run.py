@@ -1,0 +1,53 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+  fig3   four-strategy violin distributions  (Sec. IV, Fig. 3)
+  fig4   load scaling proposal vs PropAvg    (Sec. IV, Fig. 4)
+  kernels  Pallas hot-spot microbenches      (name,us_per_call,derived)
+
+Roofline (EXPERIMENTS.md §Roofline) is a separate entry point because it
+needs the 512-device XLA flag *before* jax init:
+  PYTHONPATH=src python -m benchmarks.roofline
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer trials (CI-sized)")
+    ap.add_argument("--only", default=None,
+                    choices=[None, "fig3", "fig4", "kernels"])
+    args = ap.parse_args()
+    trials3 = 4 if args.quick else 8
+    trials4 = 2 if args.quick else 4
+    horizon = 50 if args.quick else 70
+
+    if args.only in (None, "fig3"):
+        print("=" * 72)
+        print("## Fig. 3 — strategy distributions "
+              "(on-time completion, total cost)")
+        from benchmarks.fig3_strategies import main as fig3
+        fig3(n_trials=trials3, horizon=horizon, out="bench_fig3.json")
+
+    if args.only in (None, "fig4"):
+        print("=" * 72)
+        print("## Fig. 4 — escalating load (1.0x / 1.5x / 2.0x)")
+        from benchmarks.fig4_load_scaling import main as fig4
+        fig4(n_trials=trials4, horizon=horizon, out="bench_fig4.json")
+
+    if args.only in (None, "kernels"):
+        print("=" * 72)
+        print("## Kernel microbenches")
+        from benchmarks.kernels_bench import main as kb
+        kb()
+
+    print("=" * 72)
+    print("done. roofline: PYTHONPATH=src python -m benchmarks.roofline")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Every assigned architecture, reduced, one forward + one decode step.
+
+  PYTHONPATH=src python examples/multiarch_demo.py [--arch <id>]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS))
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    key = jax.random.PRNGKey(0)
+    print(f"{'arch':24s} {'family':7s} {'full params':>12s} "
+          f"{'fwd ms':>8s} {'decode ms':>10s}")
+    for a in archs:
+        full = get_config(a)
+        cfg = get_smoke_config(a)
+        model = build_model(cfg)
+        params = model.init(key)
+        b, s = 2, 16
+        batch = {"tokens": jnp.ones((b, s), jnp.int32)}
+        if cfg.n_image_tokens:
+            batch["frontend"] = jnp.ones((b, cfg.n_image_tokens,
+                                          cfg.d_model))
+        if cfg.is_encoder_decoder:
+            batch["frontend"] = jnp.ones((b, cfg.encoder_seq, cfg.d_model))
+        fwd = jax.jit(lambda p, bt: model.forward(p, bt)[0])
+        out = fwd(params, batch)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fwd(params, batch))
+        fwd_ms = (time.perf_counter() - t0) * 1e3
+
+        _, cache, _ = model.prefill(params, batch, cache_len=s + 4)
+        dec = jax.jit(model.decode_step)
+        step = {"token": jnp.ones((b, 1), jnp.int32),
+                "pos": jnp.full((b,), s, jnp.int32)}
+        lg, cache = dec(params, cache, step)
+        jax.block_until_ready(lg)
+        t0 = time.perf_counter()
+        lg, cache = dec(params, cache, step)
+        jax.block_until_ready(lg)
+        dec_ms = (time.perf_counter() - t0) * 1e3
+        print(f"{a:24s} {full.family:7s} {full.num_params()/1e9:10.1f}B "
+              f"{fwd_ms:8.1f} {dec_ms:10.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Architecture config registry.
+
+Every assigned architecture gets one module; ``get_config(arch_id)`` returns
+its production :class:`~repro.config.ModelConfig`, ``get_smoke_config`` the
+reduced CPU-testable variant.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.config import ModelConfig, ShapeConfig, SHAPES, reduce_config
+
+_ARCH_MODULES = {
+    "qwen2-72b": "qwen2_72b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "command-r-35b": "command_r_35b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "gemma3-12b": "gemma3_12b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "llama-3.2-vision-90b": "llama32_vision_90b",
+    "smollm-360m": "smollm_360m",
+    "zamba2-7b": "zamba2_7b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return reduce_config(get_config(arch_id))
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def all_pairs():
+    """All (arch, shape) pairs that are applicable per DESIGN.md rules."""
+    out = []
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            if cfg.supports_shape(s):
+                out.append((a, s.name))
+    return out

@@ -1,0 +1,17 @@
+"""The paper's contribution: two-tier network-aware microservice deployment.
+
+Modules:
+  paper_params        Table I parameter ranges + samplers
+  graph               microservice + task-DAG model (Fig. 1)
+  network             heterogeneous edge network (Fig. 2)
+  latency             eqs (1)-(5)
+  qos                 mean-value heuristics z~, d~, Q (eqs 15-16)
+  static_placement    sparsity-constrained integer program (14)+(16)
+  effective_capacity  eqs (20)-(21): E_c(theta), g_{m,eps}(y)
+  lyapunov            virtual queues (18) + drift-plus-penalty (19)
+  online_controller   Algorithm 1 (greedy light-MS deployment)
+  baselines           LBRR / GA / PropAvg
+  simulator           event-driven slot simulator (Sec. IV)
+"""
+from repro.core.graph import Application, Microservice, TaskType  # noqa: F401
+from repro.core.network import EdgeNetwork  # noqa: F401

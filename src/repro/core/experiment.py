@@ -1,0 +1,63 @@
+"""Trial runner: sample an application + network, run all strategies."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.baselines import GAStrategy, LBRRStrategy
+from repro.core.graph import make_application
+from repro.core.network import make_network
+from repro.core.online_controller import PropAvgStrategy, ProposalStrategy
+from repro.core.simulator import Simulator
+
+STRATEGIES = {
+    "proposal": ProposalStrategy,
+    "prop_avg": PropAvgStrategy,
+    "lbrr": LBRRStrategy,
+    "ga": GAStrategy,
+}
+
+
+def run_trial(seed: int, strategy_names=None, rate_multiplier: float = 1.0,
+              horizon_slots: int = 100, eps: float = 0.2) -> List[Dict]:
+    rng = np.random.default_rng(seed)
+    app = make_application(rng, rate_multiplier=rate_multiplier)
+    net = make_network(rng)
+    out = []
+    for name in (strategy_names or STRATEGIES):
+        cls = STRATEGIES[name]
+        kw = {"horizon_slots": horizon_slots} if name in (
+            "proposal", "prop_avg") else {}
+        if name == "proposal" or name == "prop_avg":
+            kw["eps"] = eps
+        strat = cls(**kw)
+        sim = Simulator(app, net, strat,
+                        rng=np.random.default_rng((seed, hash(name) % 2**31)),
+                        horizon_slots=horizon_slots)
+        m = sim.run()
+        m["seed"] = seed
+        m["rate_multiplier"] = rate_multiplier
+        out.append(m)
+    return out
+
+
+def summarize(rows: List[Dict]) -> Dict[str, Dict[str, float]]:
+    by = {}
+    for r in rows:
+        by.setdefault(r["strategy"], []).append(r)
+    out = {}
+    for k, rs in by.items():
+        def col(c):
+            return np.array([r[c] for r in rs], dtype=float)
+        out[k] = {
+            "n_trials": len(rs),
+            "on_time_mean": col("on_time").mean(),
+            "on_time_p10": float(np.percentile(col("on_time"), 10)),
+            "on_time_p90": float(np.percentile(col("on_time"), 90)),
+            "on_time_std": col("on_time").std(),
+            "completed_mean": col("completed").mean(),
+            "cost_mean": col("total_cost").mean(),
+            "cost_std": col("total_cost").std(),
+        }
+    return out

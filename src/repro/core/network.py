@@ -1,0 +1,144 @@
+"""Heterogeneous edge network (Fig. 2): EDs + ESs, links, users.
+
+Topology: ESs form a full mesh among themselves (backhaul); every ED
+attaches to its two nearest ESs; users attach to one ED each over a
+Nakagami-fading wireless uplink.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import paper_params as pp
+
+
+@dataclass
+class EdgeNetwork:
+    n_nodes: int
+    is_es: np.ndarray            # (V,) bool
+    R: np.ndarray                # (V, K) capacities
+    bw: np.ndarray               # (V, V) link bandwidth MB/ms (0 = no link)
+    dist: np.ndarray             # (V, V) km
+    user_ed: np.ndarray          # (U,) ED index of each user
+    user_bw: np.ndarray          # (U,) uplink bandwidth b_u MB/ms
+    snr_m: np.ndarray            # (U,) Nakagami shape
+    snr_omega: np.ndarray        # (U,) Nakagami spread
+    prop_speed: float = pp.TABLE_I["prop_speed_km_per_ms"]
+
+    # filled by prepare()
+    hop_next: np.ndarray = field(default=None, repr=False)
+    net_ms: np.ndarray = field(default=None, repr=False)
+
+    @property
+    def n_users(self) -> int:
+        return len(self.user_ed)
+
+    # ------------------------------------------------------------------
+    def link_ms(self, v1: int, v2: int, mb: float) -> float:
+        """Transmission + propagation delay for `mb` MB over one hop
+        (eq. 2); 0 if same node."""
+        if v1 == v2:
+            return 0.0
+        bw = self.bw[v1, v2]
+        assert bw > 0, f"no link {v1}->{v2}"
+        return mb / bw + self.dist[v1, v2] / self.prop_speed
+
+    def path_ms(self, v1: int, v2: int, mb: float) -> float:
+        """Multi-hop routed transfer delay using the precomputed
+        shortest-hop tables."""
+        if v1 == v2:
+            return 0.0
+        total = 0.0
+        cur = v1
+        guard = 0
+        while cur != v2:
+            nxt = int(self.hop_next[cur, v2])
+            total += self.link_ms(cur, nxt, mb)
+            cur = nxt
+            guard += 1
+            assert guard <= self.n_nodes, "routing loop"
+        return total
+
+    def sample_uplink_ms(self, rng, u: int, payload_mb: float) -> float:
+        """Eq. (1) with Nakagami-m fading SNR."""
+        m, omega = self.snr_m[u], self.snr_omega[u]
+        gamma = rng.gamma(m, omega / m)  # Nakagami power ~ Gamma(m, omega/m)
+        rate = self.user_bw[u] * np.log2(1.0 + gamma)
+        return payload_mb / max(rate, 1e-6)
+
+    def mean_uplink_ms(self, u: int, payload_mb: float) -> float:
+        """Mean-value analysis version of eq. (1): E[gamma] = omega for
+        Nakagami-m power (Jensen approx on log2)."""
+        omega = self.snr_omega[u]
+        rate = self.user_bw[u] * np.log2(1.0 + omega)
+        return payload_mb / max(rate, 1e-6)
+
+    # ------------------------------------------------------------------
+    def prepare(self, mean_transfer_mb: float = 1.0):
+        """All-pairs shortest paths (Floyd-Warshall) with edge weight =
+        transfer(1MB) + propagation; stores next-hop for routing."""
+        v = self.n_nodes
+        w = np.full((v, v), np.inf)
+        np.fill_diagonal(w, 0.0)
+        for i in range(v):
+            for j in range(v):
+                if i != j and self.bw[i, j] > 0:
+                    w[i, j] = (mean_transfer_mb / self.bw[i, j]
+                               + self.dist[i, j] / self.prop_speed)
+        nxt = np.tile(np.arange(v), (v, 1))
+        nxt[w == np.inf] = -1
+        for i in range(v):
+            nxt[i, i] = i
+        for k in range(v):
+            for i in range(v):
+                improved = w[i, k] + w[k] < w[i]
+                w[i, improved] = w[i, k] + w[k, improved]
+                nxt[i, improved] = nxt[i, k]
+        self.hop_next = nxt
+        self.net_ms = w
+        return self
+
+
+def make_network(rng: np.random.Generator,
+                 n_eds: int = pp.N_EDS, n_ess: int = pp.N_ESS,
+                 n_users: int = pp.N_USERS) -> EdgeNetwork:
+    v = n_eds + n_ess
+    is_es = np.array([False] * n_eds + [True] * n_ess)
+    R = np.zeros((v, pp.K_RESOURCES))
+    for i in range(v):
+        spec = pp.TABLE_I["es" if is_es[i] else "ed"]["R"]
+        R[i] = [rng.uniform(lo, hi) for lo, hi in spec]
+
+    lo, hi = pp.TABLE_I["link_dist_km"]
+    pos = rng.uniform(0, hi, size=(v, 2))  # km field
+    dist = np.clip(np.linalg.norm(pos[:, None] - pos[None, :], axis=-1),
+                   lo, None)
+
+    bw = np.zeros((v, v))
+
+    def connect(i, j):
+        w = rng.uniform(*pp.TABLE_I["link_bw"])
+        bw[i, j] = bw[j, i] = w
+
+    # ES full mesh
+    for i in range(n_eds, v):
+        for j in range(i + 1, v):
+            connect(i, j)
+    # each ED -> two nearest ESs
+    for i in range(n_eds):
+        es_order = np.argsort(dist[i, n_eds:]) + n_eds
+        for j in es_order[:2]:
+            connect(i, int(j))
+
+    user_ed = rng.integers(0, n_eds, size=n_users)
+    net = EdgeNetwork(
+        n_nodes=v, is_es=is_es, R=R, bw=bw, dist=dist,
+        user_ed=user_ed,
+        user_bw=rng.uniform(*pp.TABLE_I["user_bw"], size=n_users),
+        snr_m=rng.uniform(*pp.TABLE_I["snr_nakagami_m"], size=n_users),
+        snr_omega=rng.uniform(*pp.TABLE_I["snr_nakagami_omega"],
+                              size=n_users),
+    )
+    return net.prepare()

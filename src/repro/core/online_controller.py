@@ -1,0 +1,174 @@
+"""The proposal: static IP placement + Algorithm 1 online light-MS control.
+
+Greedy per-slot deployment: repeatedly evaluate, for every feasible
+incremental deployment (one instance of light MS m on node v), the
+marginal drift-plus-penalty change
+
+  dL(v,m) = eta * c_new  -  sum_{j captured} phi * H_j * (defer_j - dT_j)
+
+where dT_j = transfer + propagation + g_{m,eps}(y+1) (QoS-aware next-hop
+latency, eq. below Alg. 1) and defer_j is what task j faces without the
+new instance (its best existing instance, or one slot of queueing).
+Implement the deployment with the most negative dL, repeat until none
+helps; finally route every waiting task to its min-dT instance (lines
+14-16), updating parallelism as we go.
+
+Interpretation notes vs. the paper's pseudocode are in DESIGN.md §8.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import static_placement as sp
+from repro.core.effective_capacity import build_ec_maps
+from repro.core.lyapunov import ETA, PHI_DEFAULT, VirtualQueues, ZETA
+from repro.core.qos import qos_scores
+from repro.core.simulator import SLOT_MS, Simulator
+
+Y_MAX = 16  # practical parallelism cap (duration scales with y_eff)
+
+
+class ProposalStrategy:
+    """Two-tier: static core IP + effective-capacity Lyapunov controller."""
+
+    name = "proposal"
+    use_mean_estimate = False   # PropAvg ablation flips this
+
+    def __init__(self, eps: float = 0.2, kappa: int = 8,
+                 xi: float = sp.XI_DEFAULT, eta: float = ETA,
+                 phi: float = PHI_DEFAULT, horizon_slots: int = 100):
+        self.eps = eps
+        self.kappa = kappa
+        self.xi = xi
+        self.eta = eta
+        self.phi = phi
+        self.horizon = horizon_slots
+        self.queues = VirtualQueues(zeta=ZETA)
+
+    # ------------------------------------------------------------------
+    def place_core(self, app, net) -> Dict[int, np.ndarray]:
+        self.app, self.net = app, net
+        self.ec = build_ec_maps(app, self.eps)
+        z, q = qos_scores(app, net)
+        prob = sp.build_problem(app, net, z, q, kappa=self.kappa,
+                                xi=self.xi, horizon_slots=self.horizon)
+        return sp.solve(prob)
+
+    # ------------------------------------------------------------------
+    def admit(self, task):
+        self.queues.admit(task.id)
+
+    def task_done(self, task):
+        self.queues.drop(task.id)
+
+    def end_slot(self, t: float, sim: Simulator):
+        # eq. (18) update for tasks still in flight
+        for tid, task in sim.tasks.items():
+            if task.finish is None:
+                self.queues.update(tid, (t + 1) - task.t_gen,
+                                   task.tt.deadline)
+
+    # ------------------------------------------------------------------
+    def _estimate(self, m: int, y: int) -> float:
+        ec = self.ec[m]
+        return ec.g_mean(y) if self.use_mean_estimate else ec.g(y)
+
+    def _dt(self, sim, task, m, v, y, now) -> float:
+        """Next-hop latency from `now`: remaining transfer+prop of inputs
+        to v + QoS-aware processing estimate."""
+        arrive = task.data_ready_at(m, sim.net, v)
+        return max(0.0, arrive - now) + self._estimate(m, y)
+
+    def assign_light(self, t: float, sim: Simulator,
+                     waiting: List[tuple]) -> List[tuple]:
+        app, net = sim.app, sim.net
+        waiting = [(tid, m) for tid, m in waiting]
+        if not waiting:
+            return []
+
+        # live instances and remaining capacity (busy instances are
+        # reusable — g_{m,eps}(y+1) prices their contention)
+        live = {i.id: i for i in sim.alive_instances(t)}
+        for i in live.values():
+            i.y_now = i.y_at(t)
+        free_r = net.R - sim.light_resources_used(t)
+        for m, xv in sim.x_cr.items():   # cores always reserve their share
+            free_r -= xv[:, None] * app.ms(m).r[None, :]
+        free_r = np.maximum(free_r, 0.0)
+
+        new_instances: List = []
+
+        def feasible(v, m):
+            if v in sim.dead_nodes:
+                return False
+            return bool((free_r[v] >= app.ms(m).r).all())
+
+        def candidates(ms_needed):
+            return [(v, m) for m in ms_needed for v in range(net.n_nodes)
+                    if feasible(v, m)]
+
+        # ---------------- greedy deployment loop (Algorithm 1) ----------
+        while True:
+            ms_needed = {m for _, m in waiting}
+            best = (0.0, None, None)
+            for v, m in candidates(ms_needed):
+                ms = app.ms(m)
+                cost_new = self.eta * (ms.c_dp + ms.c_mt + ms.c_pl)
+                gain = 0.0
+                y_hyp = 0
+                for tid, mm in waiting:
+                    if mm != m:
+                        continue
+                    task = sim.tasks[tid]
+                    dt_new = self._dt(sim, task, m, v, y_hyp + 1, t)
+                    # defer option: best existing instance or 1-slot wait
+                    defer = SLOT_MS + self._estimate(m, 1)
+                    for inst in live.values():
+                        if inst.m == m:
+                            defer = min(defer, self._dt(
+                                sim, task, m, inst.v, inst.y_now + 1, t))
+                    for inst in new_instances:
+                        if inst.m == m:
+                            defer = min(defer, self._dt(
+                                sim, task, m, inst.v, inst.y_now + 1, t))
+                    if dt_new < defer:
+                        h = self.queues.get(tid)
+                        gain += self.phi * h * (defer - dt_new)
+                        y_hyp += 1
+                dl = cost_new - gain
+                if dl < best[0]:
+                    best = (dl, v, m)
+            if best[1] is None:
+                break
+            _, v, m = best
+            inst = sim.spawn_instance(v, m, t)
+            new_instances.append(inst)
+            free_r[v] -= app.ms(m).r
+
+        # ---------------- routing (lines 14-16) -------------------------
+        pool = list(live.values()) + new_instances
+        still = []
+        order = sorted(waiting,
+                       key=lambda wm: -self.queues.get(wm[0]))
+        for tid, m in order:
+            task = sim.tasks[tid]
+            opts = [i for i in pool if i.m == m and i.y_now < Y_MAX]
+            if not opts:
+                still.append((tid, m))
+                continue
+            dts = [self._dt(sim, task, m, i.v, i.y_now + 1, t)
+                   for i in opts]
+            k = int(np.argmin(dts))
+            inst = opts[k]
+            sim.commit_light(task, m, inst, now=t)
+            inst.y_now += 1
+        return still
+
+
+class PropAvgStrategy(ProposalStrategy):
+    """Ablation: identical two-tier logic, mean-value delay estimates."""
+
+    name = "prop_avg"
+    use_mean_estimate = True

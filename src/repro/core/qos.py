@@ -1,0 +1,114 @@
+"""Mean-value analysis heuristics for static core placement (Sec. III-A).
+
+For a typical task of type n requiring core MS m at node v:
+  d_pr(v, m): preceding latency — mean-value completion time of m's
+              parents, routed along shortest (network + mean compute) paths
+              from the task's source user to v;
+  d_cu(v, m): processing time a_m / f_m at v;
+  d_su(v, m): succeeding latency — sum of mean processing of descendants.
+
+Then (eq. 15): load estimate z~_{v,m} apportions each (u, n)'s arrival
+rate over nodes by exp(-delta * d_pr); and (eq. 16): urgency
+d~ = capped ratio of remaining budget to future work, Q = z~ * d~.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.graph import Application, TaskType
+from repro.core.network import EdgeNetwork
+
+DELTA = 0.05     # exponential-decay load apportioning constant
+C1_FLOOR = 0.5   # constant C1 in the urgency metric (floor of the ratio)
+URG_CAP = 50.0   # numerical-sanity cap (d_su -> 0 for sink-adjacent MSs)
+
+
+@dataclass
+class MeanLatencyModel:
+    """Mean-value latency primitives shared by QoS scoring and baselines."""
+
+    app: Application
+    net: EdgeNetwork
+
+    def __post_init__(self):
+        self._memo = {}
+
+    def mean_proc(self, m: int) -> float:
+        return self.app.ms(m).mean_proc_ms()
+
+    def d_pr(self, u: int, tt: TaskType, v: int, m: int) -> float:
+        """Mean completion time of everything before m, if m runs at v.
+
+        Recursive eq. (4) with mean values; parent services are assumed
+        placed along the min-latency node (shortest-path relaxation of the
+        circular routing dependency — see DESIGN.md §7).  Memoized.
+        """
+        key = (u, tt.idx, v, m)
+        if key in self._memo:
+            return self._memo[key]
+        ed = self.net.user_ed[u]
+        parents = tt.parents(m)
+        if not parents:
+            # first service: uplink + transfer of the input payload
+            up = self.net.mean_uplink_ms(u, tt.payload)
+            move = (self.net.net_ms[ed, v] / 1.0) * tt.payload
+            out = up + move
+            self._memo[key] = out
+            return out
+        vals = []
+        for p in parents:
+            # parent served at its own best node v', then ships b_p to v
+            best = np.inf
+            for vp in range(self.net.n_nodes):
+                t_prev = self.d_pr(u, tt, vp, p) + self.mean_proc(p)
+                move = (self.net.net_ms[vp, v] / 1.0) * self.app.ms(p).b
+                best = min(best, t_prev + move)
+            vals.append(best)
+        out = max(vals)
+        self._memo[key] = out
+        return out
+
+    def d_su(self, tt: TaskType, m: int) -> float:
+        return sum(self.mean_proc(d) for d in tt.descendants(m))
+
+
+def qos_scores(app: Application, net: EdgeNetwork):
+    """Returns (z_tilde, Q): both (V, M_core-indexed dict of arrays)."""
+    model = MeanLatencyModel(app, net)
+    v_n = net.n_nodes
+    core = app.core_ids
+    z_tilde = {m: np.zeros(v_n) for m in core}
+    q_score = {m: np.zeros(v_n) for m in core}
+
+    # memoize d_pr per (u, tt, v, m)
+    memo = {}
+
+    def dpr(u, tt, v, m):
+        key = (u, tt.idx, v, m)
+        if key not in memo:
+            memo[key] = model.d_pr(u, tt, v, m)
+        return memo[key]
+
+    for m in core:
+        for tt in app.types_using(m):
+            d_su = model.d_su(tt, m)
+            d_cu = model.mean_proc(m)
+            # Little's law: concurrent load = arrival rate x service time
+            # (constraint (10) counts tasks *in service*, not arrivals)
+            conc = tt.rate * model.mean_proc(m)
+            for u in range(net.n_users):
+                d_pre = np.array([dpr(u, tt, v, m) for v in range(v_n)])
+                # eq. (15): exponential-decay apportioning of E[z]
+                wgt = np.exp(-DELTA * d_pre)
+                wgt = wgt / wgt.sum()
+                z_tilde[m] += wgt * conc
+                # eq. (16) upper: max{remaining budget / future work, C1}
+                # — Q rewards placements whose tasks *comfortably* meet
+                # deadlines (paper Sec. III-A); URG_CAP guards d_su -> 0
+                denom = max(d_su, 1e-3)
+                ratio = (tt.deadline - d_pre - d_cu) / denom
+                urg = np.clip(ratio, C1_FLOOR, URG_CAP)
+                q_score[m] += wgt * tt.rate * urg
+    return z_tilde, q_score

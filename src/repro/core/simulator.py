@@ -1,0 +1,323 @@
+"""Event-driven slot simulator for the paper's evaluation (Sec. IV).
+
+Continuous-time event engine (heapq) for stage completions; control
+decisions at 1 ms slot boundaries:
+
+* core MS stages dispatch immediately on readiness to the min-finish-time
+  instance (static placement fixed by the strategy);
+* light MS stages queue and are assigned by the strategy's per-slot
+  controller (Algorithm 1 for the proposal; RR / GA / mean-value for the
+  baselines);
+* light-service durations are *sampled* from the Gamma contention model —
+  strategies only see their own estimates (effective-capacity or mean).
+
+Costs follow eqs (6)-(7); metrics: completion rate, on-time rate, cost.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.graph import Application, TaskType
+from repro.core.network import EdgeNetwork
+
+SLOT_MS = 1.0
+
+
+@dataclass
+class Task:
+    id: int
+    tt: TaskType
+    user: int
+    t_gen: float
+    ed: int                      # entry node
+    done: Dict[int, float] = field(default_factory=dict)   # ms -> finish t
+    loc: Dict[int, int] = field(default_factory=dict)      # ms -> node
+    dispatched: set = field(default_factory=set)
+    finish: Optional[float] = None
+
+    @property
+    def deadline_abs(self) -> float:
+        return self.t_gen + self.tt.deadline
+
+    def ready_stages(self) -> List[int]:
+        out = []
+        for m in self.tt.ms_ids:
+            if m in self.done or m in self.dispatched:
+                continue
+            if all(p in self.done for p in self.tt.parents(m)):
+                out.append(m)
+        return out
+
+    def data_ready_at(self, m: int, net: EdgeNetwork, v: int) -> float:
+        """When all of m's input data can be present on node v."""
+        parents = self.tt.parents(m)
+        if not parents:
+            # input payload sits at the entry ED after uplink (t_gen
+            # already includes uplink; payload moves ED -> v)
+            return self.t_gen + net.path_ms(self.ed, v, self.tt.payload)
+        t = 0.0
+        for p in parents:
+            tp = self.done[p] + net.path_ms(self.loc[p], v,
+                                            self._b(p))
+            t = max(t, tp)
+        return t
+
+    def _b(self, m):  # filled by simulator (app reference shortcut)
+        return self._app.ms(m).b
+
+
+@dataclass
+class LightInstance:
+    id: int
+    v: int
+    m: int
+    born: float
+    busy_until: float = 0.0
+    y_now: int = 0                                   # assigned this slot
+    persistent: bool = False                         # static allocation
+    active: List[float] = field(default_factory=list)  # finish times
+
+    def y_at(self, now: float) -> int:
+        """Concurrent tasks on this instance at time `now`."""
+        self.active = [f for f in self.active if f > now]
+        return len(self.active)
+
+
+class Simulator:
+    def __init__(self, app: Application, net: EdgeNetwork, strategy,
+                 rng: np.random.Generator, horizon_slots: int = 100,
+                 drain_slots: int = 400, fail_node: Optional[int] = None,
+                 fail_at: Optional[int] = None):
+        self.app = app
+        self.net = net
+        self.strategy = strategy
+        self.rng = rng
+        self.horizon = horizon_slots
+        self.drain = drain_slots
+        # fault-injection (validates the kappa diversity constraint C6):
+        # at slot `fail_at`, node `fail_node` dies — its core instances
+        # stop serving and no light instance can be (re)placed there
+        self.fail_node = fail_node
+        self.fail_at = fail_at
+        self.dead_nodes: set = set()
+        self.tasks: Dict[int, Task] = {}
+        self.events: list = []      # (time, seq, task_id, ms)
+        self._seq = itertools.count()
+        self._task_ids = itertools.count()
+        self.waiting: List[tuple] = []   # (task_id, ms) light stages queued
+        # core state
+        self.x_cr: Dict[int, np.ndarray] = {}
+        self.core_free: Dict[tuple, np.ndarray] = {}
+        # light state
+        self.instances: List[LightInstance] = []
+        self._inst_ids = itertools.count()
+        self.light_cost = 0.0
+        self.prev_alive: Dict[tuple, int] = {}
+        # metrics
+        self.n_generated = 0
+
+    # ------------------------------------------------------------------
+    # Setup
+    # ------------------------------------------------------------------
+    def place_core(self):
+        self.x_cr = self.strategy.place_core(self.app, self.net)
+        for m, xv in self.x_cr.items():
+            for v in range(self.net.n_nodes):
+                if xv[v] > 0:
+                    self.core_free[(v, m)] = np.zeros(int(xv[v]))
+        # capacity left for lights
+        used = np.zeros_like(self.net.R)
+        for m, xv in self.x_cr.items():
+            used += xv[:, None] * self.app.ms(m).r[None, :]
+        self.R_lt = self.net.R - used
+
+    def core_cost(self) -> float:
+        total = 0.0
+        for m, xv in self.x_cr.items():
+            ms = self.app.ms(m)
+            total += (ms.c_dp + ms.c_mt * self.horizon) * xv.sum()
+        return float(total)
+
+    # ------------------------------------------------------------------
+    # Arrivals
+    # ------------------------------------------------------------------
+    def _generate(self, t_slot: int):
+        for u in range(self.net.n_users):
+            for tt in self.app.task_types:
+                n = self.rng.poisson(tt.rate * SLOT_MS)
+                for _ in range(n):
+                    t_gen = t_slot + self.rng.uniform(0, SLOT_MS)
+                    tid = next(self._task_ids)
+                    up = self.net.sample_uplink_ms(self.rng, u, tt.payload)
+                    task = Task(id=tid, tt=tt, user=u,
+                                t_gen=t_gen + up,
+                                ed=int(self.net.user_ed[u]))
+                    task.t_gen = t_gen  # E2E measured from generation
+                    task._uplink_done = t_gen + up
+                    task._app = self.app
+                    self.tasks[tid] = task
+                    self.n_generated += 1
+                    if hasattr(self.strategy, "admit"):
+                        self.strategy.admit(task)
+                    self._advance_task(task, now=t_gen + up)
+
+    # ------------------------------------------------------------------
+    # DAG progression
+    # ------------------------------------------------------------------
+    def _advance_task(self, task: Task, now: float):
+        for m in task.ready_stages():
+            if self.app.ms(m).is_core:
+                self._dispatch_core(task, m, now)
+            else:
+                task.dispatched.add(m)
+                self.waiting.append((task.id, m))
+
+    def _dispatch_core(self, task: Task, m: int, now: float):
+        ms = self.app.ms(m)
+        best = None
+        for (v, mm), free in self.core_free.items():
+            if mm != m or v in self.dead_nodes:
+                continue
+            ready = max(task.data_ready_at(m, self.net, v), now)
+            i = int(np.argmin(free))
+            start = max(ready, free[i])
+            fin = start + ms.a / ms.f_det
+            if best is None or fin < best[0]:
+                best = (fin, v, i)
+        if best is None:   # no instance anywhere: task cannot complete
+            task.dispatched.add(m)
+            return
+        fin, v, i = best
+        self.core_free[(v, m)][i] = fin
+        task.dispatched.add(m)
+        heapq.heappush(self.events,
+                       (fin, next(self._seq), task.id, m, v))
+
+    def commit_light(self, task: Task, m: int, inst: LightInstance,
+                     now: float):
+        """Strategy decided: run stage m of task on `inst`.
+
+        True duration follows the paper's cumulative service process
+        F(0,t) = sum_tau f_m(tau) with i.i.d. Gamma per-slot rates: the
+        task (admitted at concurrency y_eff, so it must see y_eff * a of
+        aggregate work through its share) completes in the first slot
+        where the cumulative service reaches its scaled workload."""
+        ms = self.app.ms(m)
+        ready = max(task.data_ready_at(m, self.net, inst.v), now)
+        y_eff = inst.y_at(ready) + 1
+        work = ms.a * y_eff
+        # vectorized: draw a block sized ~3x the expected slot count
+        n_exp = max(4, int(3 * work / max(ms.f_mean, 1e-6)) + 4)
+        dur = 0.0
+        for _ in range(8):  # geometric retry, cap ~8*n_exp slots
+            f = np.maximum(self.rng.gamma(ms.f_shape, ms.f_scale,
+                                          size=n_exp), 1e-6)
+            cum = np.cumsum(f) * SLOT_MS
+            if cum[-1] >= work:
+                i = int(np.searchsorted(cum, work))
+                prev = cum[i - 1] if i else 0.0
+                dur += i * SLOT_MS + (work - prev) / f[i]
+                break
+            work -= cum[-1]
+            dur += n_exp * SLOT_MS
+        fin = ready + dur
+        inst.busy_until = max(inst.busy_until, fin)
+        inst.active.append(fin)
+        heapq.heappush(self.events,
+                       (fin, next(self._seq), task.id, m, inst.v))
+
+    def spawn_instance(self, v: int, m: int, now: float,
+                       persistent: bool = False) -> LightInstance:
+        assert v not in self.dead_nodes, "cannot place on a failed node"
+        inst = LightInstance(id=next(self._inst_ids), v=v, m=m, born=now,
+                             persistent=persistent)
+        self.instances.append(inst)
+        return inst
+
+    # ------------------------------------------------------------------
+    # Per-slot accounting
+    # ------------------------------------------------------------------
+    def alive_instances(self, now: float) -> List[LightInstance]:
+        return [i for i in self.instances
+                if i.v not in self.dead_nodes
+                and (i.persistent or i.busy_until > now
+                     or i.born >= now - SLOT_MS)]
+
+    def light_resources_used(self, now: float) -> np.ndarray:
+        used = np.zeros_like(self.net.R)
+        for inst in self.alive_instances(now):
+            used[inst.v] += self.app.ms(inst.m).r
+        return used
+
+    def _accrue_light_cost(self, t: float):
+        alive = self.alive_instances(t)
+        counts: Dict[tuple, int] = {}
+        for inst in alive:
+            counts[(inst.v, inst.m)] = counts.get((inst.v, inst.m), 0) + 1
+        for (v, m), c in counts.items():
+            ms = self.app.ms(m)
+            newly = max(0, c - self.prev_alive.get((v, m), 0))
+            self.light_cost += ms.c_dp * newly + (ms.c_mt + ms.c_pl) * c
+        self.prev_alive = counts
+
+    # ------------------------------------------------------------------
+    # Main loop
+    # ------------------------------------------------------------------
+    def run(self) -> dict:
+        self.place_core()
+        if hasattr(self.strategy, "init_light"):
+            self.strategy.init_light(self)
+        t_end = self.horizon + self.drain
+        for t_slot in range(t_end):
+            if self.fail_at is not None and t_slot == self.fail_at:
+                self.dead_nodes.add(self.fail_node)
+            if t_slot < self.horizon:
+                self._generate(t_slot)
+            # controller at slot boundary
+            if self.waiting:
+                still = self.strategy.assign_light(float(t_slot), self,
+                                                   self.waiting)
+                self.waiting = still
+            self._accrue_light_cost(float(t_slot))
+            # drain events due this slot
+            while self.events and self.events[0][0] < t_slot + 1:
+                fin, _, tid, m, v = heapq.heappop(self.events)
+                task = self.tasks[tid]
+                task.done[m] = fin
+                task.loc[m] = v
+                if m == task.tt.sink():
+                    task.finish = fin
+                    if hasattr(self.strategy, "task_done"):
+                        self.strategy.task_done(task)
+                else:
+                    self._advance_task(task, now=fin)
+            if hasattr(self.strategy, "end_slot"):
+                self.strategy.end_slot(float(t_slot), self)
+            if (t_slot >= self.horizon and not self.events
+                    and not self.waiting):
+                break
+        return self.metrics()
+
+    def metrics(self) -> dict:
+        fin = [t for t in self.tasks.values() if t.finish is not None]
+        on_time = [t for t in fin
+                   if t.finish - t.t_gen <= t.tt.deadline]
+        n = max(self.n_generated, 1)
+        lat = [t.finish - t.t_gen for t in fin]
+        return {
+            "strategy": getattr(self.strategy, "name", "?"),
+            "generated": self.n_generated,
+            "completed": len(fin) / n,
+            "on_time": len(on_time) / n,
+            "core_cost": self.core_cost(),
+            "light_cost": self.light_cost,
+            "total_cost": self.core_cost() + self.light_cost,
+            "mean_latency_ms": float(np.mean(lat)) if lat else float("nan"),
+            "p95_latency_ms": float(np.percentile(lat, 95)) if lat
+            else float("nan"),
+        }

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the serving hot spots.
+
+<name>.py: pl.pallas_call + explicit BlockSpec VMEM tiling;
+ops.py: jit'd public wrappers; ref.py: pure-jnp oracles.
+Validated on CPU via interpret=True (see tests/test_kernels.py).
+"""
+from repro.kernels.ops import (  # noqa: F401
+    decode_attention, flash_attention, rmsnorm, selective_scan)

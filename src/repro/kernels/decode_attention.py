@@ -1,0 +1,103 @@
+"""Flash-decode Pallas TPU kernel: one query token vs. a long KV cache.
+
+Grid: (batch*heads, num_s_blocks) — cache blocks innermost, running
+softmax in VMEM scratch.  The per-batch valid length (`pos`) masks stale
+cache slots; it is prefetched to SMEM via PrefetchScalarGridSpec so the
+index map can, on real TPU, skip blocks entirely past `pos` (we mask in
+interpret mode).  This kernel is the single-chip building block of the
+seq-parallel distributed decode in repro.serving.decode (shard_map over
+the `model` axis + psum-combine of (m, l, acc)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.flash_attention import pl_scratch
+
+DEFAULT_BLOCK_S = 256
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   scale: float, block_s: int, seq_len: int,
+                   batch: int, heads: int):
+    bh = pl.program_id(0)
+    si = pl.program_id(1)
+    ns = pl.num_programs(1)
+    b = bh // heads
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)           # (1, d)
+    k = k_ref[0].astype(jnp.float32)           # (bs, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    kpos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+    valid = (kpos <= pos_ref[b]) & (kpos < seq_len)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k_cache, v_cache, pos, *, scale=None,
+                            block_s: int = DEFAULT_BLOCK_S,
+                            interpret: bool = True):
+    """q: (B,H,D); caches: (B,KV,S,D); pos: (B,) int32.  -> (B,H,D)."""
+    b, h, d = q.shape
+    kv, s = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    scale = d ** -0.5 if scale is None else scale
+    block_s = min(block_s, s)
+    ns = -(-s // block_s)
+
+    qf = q.reshape(b * h, 1, d)
+    kf = k_cache.reshape(b * kv, s, d)
+    vf = v_cache.reshape(b * kv, s, d)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, block_s=block_s, seq_len=s,
+        batch=b, heads=h)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, ns),
+        in_specs=[
+            # pos: whole (B,) vector visible to every program instance
+            pl.BlockSpec((b,), lambda bh, si: (0,)),
+            pl.BlockSpec((1, 1, d), lambda bh, si: (bh, 0, 0)),
+            pl.BlockSpec((1, block_s, d),
+                         lambda bh, si, g=g: (bh // g, si, 0)),
+            pl.BlockSpec((1, block_s, d),
+                         lambda bh, si, g=g: (bh // g, si, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda bh, si: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, 1, d), q.dtype),
+        scratch_shapes=[
+            pl_scratch((1, 1)), pl_scratch((1, 1)), pl_scratch((1, d)),
+        ],
+        interpret=interpret,
+    )(pos.astype(jnp.int32), qf, kf, vf)
+    return out.reshape(b, h, d)

@@ -1,0 +1,66 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute with interpret=True for
+correctness validation; on TPU set REPRO_PALLAS_COMPILE=1 (or pass
+interpret=False) to compile for real.  Each op falls back to the ref.py
+oracle with use_pallas=False.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.selective_scan import selective_scan_pallas
+
+
+def _interpret_default() -> bool:
+    if os.environ.get("REPRO_PALLAS_COMPILE"):
+        return False
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                             "use_pallas", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    use_pallas: bool = True, interpret: bool | None = None):
+    if not use_pallas:
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    interpret = _interpret_default() if interpret is None else interpret
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def decode_attention(q, k_cache, v_cache, pos, *, use_pallas: bool = True,
+                     interpret: bool | None = None):
+    if not use_pallas:
+        return ref.decode_attention_ref(q, k_cache, v_cache, pos)
+    interpret = _interpret_default() if interpret is None else interpret
+    return decode_attention_pallas(q, k_cache, v_cache, pos,
+                                   interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def selective_scan(dt, b_mat, c_mat, x, a_neg, h0, *,
+                   use_pallas: bool = True, interpret: bool | None = None):
+    if not use_pallas:
+        return ref.selective_scan_ref(dt, b_mat, c_mat, x, a_neg, h0)
+    interpret = _interpret_default() if interpret is None else interpret
+    return selective_scan_pallas(dt, b_mat, c_mat, x, a_neg, h0,
+                                 interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "use_pallas",
+                                             "interpret"))
+def rmsnorm(x, scale, eps: float = 1e-5, *, use_pallas: bool = True,
+            interpret: bool | None = None):
+    if not use_pallas:
+        return ref.rmsnorm_ref(x, scale, eps)
+    interpret = _interpret_default() if interpret is None else interpret
+    return rmsnorm_pallas(x, scale, eps, interpret=interpret)

@@ -1,0 +1,45 @@
+"""Fused RMSNorm Pallas TPU kernel (row tiles in VMEM, fp32 reduction)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)
+                  * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(x, scale, eps: float = 1e-5,
+                   block_rows: int = DEFAULT_BLOCK_ROWS,
+                   interpret: bool = True):
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    xf = x.reshape(-1, d)
+    rows = xf.shape[0]
+    block_rows = min(block_rows, rows)
+    nr = -(-rows // block_rows)
+    pad = nr * block_rows - rows
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(nr,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
+        interpret=interpret,
+    )(xf, scale)
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)

@@ -1,0 +1,118 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the
+production meshes, with no device allocation.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m \
+      --shape train_4k --mesh both --out results.json
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.config import SHAPES  # noqa: E402
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
+from repro.launch.hlo_analysis import collective_stats, roofline_terms  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import make_step  # noqa: E402
+from repro.sharding.specs import use_mesh_rules  # noqa: E402
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
+               decode_cache_layout: str = "heads",
+               verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "layout": decode_cache_layout}
+    if not cfg.supports_shape(shape):
+        rec["status"] = "skipped(DESIGN.md rule)"
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_chips = mesh.devices.size
+        with mesh, use_mesh_rules(mesh):
+            fn, args = make_step(cfg, shape, mesh,
+                                 decode_cache_layout=decode_cache_layout)
+            lowered = jax.jit(fn).lower(*args)
+            compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        mem = compiled.memory_analysis()
+        flops = float(cost.get("flops", 0.0))
+        hbm_bytes = sum(float(v) for k, v in cost.items()
+                        if k.startswith("bytes accessed"))
+        coll = collective_stats(compiled.as_text())
+        rec.update(coll.row())
+        rec.update(roofline_terms(flops, hbm_bytes, coll.total_bytes,
+                                  n_chips))
+        rec.update({
+            "status": "ok",
+            "flops": flops,
+            "hbm_bytes": hbm_bytes,
+            "n_chips": n_chips,
+            "compile_s": round(time.time() - t0, 1),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0)
+                           + getattr(mem, "temp_size_in_bytes", 0)),
+        })
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']} "
+                  f"({decode_cache_layout}): OK "
+                  f"flops={flops:.3e} hbm={hbm_bytes:.3e} "
+                  f"coll={coll.total_bytes:.3e} "
+                  f"dom={rec['dominant']} {rec['compile_s']}s", flush=True)
+            print(f"  memory_analysis: args={rec['argument_bytes']:.3e} "
+                  f"temp={rec['temp_bytes']:.3e} out={rec['output_bytes']:.3e}",
+                  flush=True)
+    except Exception as e:  # noqa: BLE001 — record and continue
+        rec["status"] = f"FAIL: {type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: "
+                  f"FAILED {type(e).__name__}: {str(e)[:300]}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS) + [None])
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--layout", default="heads", choices=["heads", "seq"])
+    ap.add_argument("--out", default=None, help="append JSONL results here")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                rec = dryrun_one(arch, shape, multi,
+                                 decode_cache_layout=args.layout)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+                if str(rec.get("status", "")).startswith("FAIL"):
+                    n_fail += 1
+    print(f"[dryrun] done, {n_fail} failures", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Parse lowered/compiled HLO for roofline terms.
+
+``cost_analysis()`` gives FLOPs and bytes accessed; collective bytes are NOT
+included there, so we parse the HLO text and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum bytes over every `dtype[a,b,...]` group in a shape string
+    (handles tuples `(f32[2,3], s32[4])`)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def row(self) -> dict:
+        out = {}
+        for k in _COLLECTIVES:
+            out[f"{k}_bytes"] = self.bytes_by_kind.get(k, 0)
+            out[f"{k}_count"] = self.count_by_kind.get(k, 0)
+        out["collective_bytes"] = self.total_bytes
+        return out
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum *output* shape bytes of every collective op instruction.
+
+    HLO lines look like:
+      %ag = f32[16,4096]{1,0} all-gather(f32[1,4096]{1,0} %x), ...
+    We take the result shape on the lhs (bytes actually moved per device
+    scale with this; for all-reduce in/out sizes match).
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for kind in _COLLECTIVES:
+            # match `= <shape> <kind>(` or `<kind>-start(` / `-done(`
+            m = re.search(
+                r"=\s+((?:\([^)]*\))|(?:[\w\[\],{}:#*\s]*?))\s*" + kind +
+                r"(?:-start|-done)?\(", stripped)
+            if m is None:
+                continue
+            if kind + "-done(" in stripped:
+                continue  # counted at -start
+            shape_str = m.group(1)
+            b = _shape_bytes(shape_str)
+            stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + b
+            stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+            break
+    return stats
+
+
+# ----------------------------------------------------------------------
+# Roofline terms
+# ----------------------------------------------------------------------
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW_PER_LINK = 50e9        # B/s  (~50 GB/s/link)
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   n_chips: int) -> dict:
+    """The three roofline times (seconds).
+
+    Calibration (see EXPERIMENTS.md §Dry-run): ``cost_analysis()`` of an
+    SPMD-partitioned module reports PER-DEVICE flops/bytes, and collective
+    shapes in the partitioned HLO are per-device too — so none of the
+    terms divide by n_chips.  (Ring all-gather actually moves
+    (n-1)/n x bytes per link; we use the x1 upper bound.)
+    """
+    del n_chips
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = hbm_bytes / HBM_BW
+    t_collective = coll_bytes / ICI_BW_PER_LINK
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_collective)), key=lambda kv: kv[1])[0]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+    }

@@ -1,0 +1,33 @@
+"""Production meshes.
+
+``make_production_mesh`` is a function (not a module constant) so importing
+this module never touches jax device state.  Single pod = 16x16 = 256 chips
+(v5e pod slice); multi-pod = 2 pods = 512 chips with a leading "pod" axis.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import (see launch/dryrun.py)")
+    devs = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """Trivial 1x1 mesh over the single real device (smoke tests)."""
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))

@@ -1,0 +1,191 @@
+"""Step factories + abstract input specs + sharding assignment.
+
+`make_step(cfg, shape, mesh)` returns (fn, args_structs) where every leaf of
+args_structs is a ShapeDtypeStruct carrying its NamedSharding — ready for
+``jax.jit(fn).lower(*args)`` without any device allocation.
+"""
+from __future__ import annotations
+
+import math
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models import build_model
+from repro.models.transformer import build_segments
+from repro.sharding.specs import fit_spec, param_spec
+from repro.training.optimizer import AdamWState, adamw_init
+from repro.training.train_step import make_train_step
+
+
+def _batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=fit_spec(shape, spec, mesh))
+
+
+# ----------------------------------------------------------------------
+# Param / optimizer shardings
+# ----------------------------------------------------------------------
+def param_shardings(mesh: Mesh, model, params_struct):
+    segs = model.segments
+    enc_layers = model.cfg.n_encoder_layers
+
+    def to_spec(path, leaf):
+        keys = []
+        for k in path:
+            keys.append(getattr(k, "key", getattr(k, "idx", None)))
+        spath = "/".join(str(k) for k in keys)
+        stacked = False
+        if "segments" in keys:
+            i = keys.index("segments")
+            seg_idx = keys[i + 1]
+            if keys[0] == "encoder":
+                stacked = enc_layers > 1
+            else:
+                seg = segs[seg_idx]
+                stacked = seg.length > 1 and not seg.shared
+        prefix = "seg:" if stacked else ""
+        return NamedSharding(mesh, param_spec(prefix + spath, leaf.shape,
+                                              mesh))
+
+    return jax.tree_util.tree_map_with_path(to_spec, params_struct)
+
+
+def _cache_shardings(mesh: Mesh, cfg: ModelConfig, cache_struct_,
+                     layout: str = "heads"):
+    b = _batch_axes(mesh)
+
+    def spec_for(path, leaf):
+        name = str(path[-1].key)
+        if name in ("k", "v"):
+            if layout == "seq":
+                return fit_spec(leaf.shape, P(None, b, "model", None, None),
+                                mesh)
+            return fit_spec(leaf.shape, P(None, b, None, "model", None), mesh)
+        if name in ("xk", "xv"):
+            return fit_spec(leaf.shape, P(None, b, None, "model", None), mesh)
+        if name == "h":  # ssm state: (L,B,di,ds) or (L,B,nh,hd,ds)
+            spec = [None, b] + [None] * (leaf.ndim - 2)
+            spec[2] = "model"
+            return fit_spec(leaf.shape, P(*spec), mesh)
+        if name == "conv":
+            return fit_spec(leaf.shape, P(None, b, None, "model"), mesh)
+        return fit_spec(leaf.shape, P(*([None] * leaf.ndim)), mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_struct_)
+
+
+def _with_shardings(structs, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        structs, shardings)
+
+
+# ----------------------------------------------------------------------
+# Abstract input specs per shape kind
+# ----------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                decode_cache_layout: str = "heads"):
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    b = _batch_axes(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    model = build_model(cfg)
+    specs = {}
+    if shape.kind in ("train", "prefill"):
+        specs["tokens"] = _sds((B, S), jnp.int32, mesh, P(b, None))
+        if cfg.n_image_tokens:
+            specs["frontend"] = _sds((B, cfg.n_image_tokens, cfg.d_model),
+                                     jnp.bfloat16, mesh, P(b, None, None))
+        if cfg.is_encoder_decoder:
+            specs["frontend"] = _sds((B, cfg.encoder_seq, cfg.d_model),
+                                     jnp.bfloat16, mesh, P(b, None, None))
+    else:  # decode
+        specs["token"] = _sds((B, 1), jnp.int32, mesh, P(b, None))
+        specs["pos"] = _sds((B,), jnp.int32, mesh, P(b))
+        cache = jax.eval_shape(lambda: model.init_cache(B, S))
+        shardings = _cache_shardings(mesh, cfg, cache,
+                                     layout=decode_cache_layout)
+        specs["cache"] = _with_shardings(cache, shardings)
+    return specs
+
+
+# ----------------------------------------------------------------------
+# Step functions
+# ----------------------------------------------------------------------
+def make_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+              decode_cache_layout: str = "heads"):
+    """Returns (fn, args) with sharded ShapeDtypeStruct args.
+
+    train  : fn(params, opt_state, batch) -> (params, opt_state, metrics)
+    prefill: fn(params, batch) -> (logits, cache)
+    decode : fn(params, cache, batch) -> (next_token, cache)
+    """
+    model = build_model(cfg)
+    pstruct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pshard = param_shardings(mesh, model, pstruct)
+    params_in = _with_shardings(pstruct, pshard)
+    batch = input_specs(cfg, shape, mesh, decode_cache_layout)
+
+    if shape.kind == "train":
+        step = make_train_step(model)
+        ostruct = jax.eval_shape(adamw_init, pstruct)
+        mom_shard = pshard
+        if os.environ.get("REPRO_ZERO1"):
+            # ZeRO-1 (§Perf hillclimb): additionally shard optimizer
+            # moments over the data axes on the first free divisible dim
+            b_axes = _batch_axes(mesh)
+            n_data = 1
+            for ax in b_axes:
+                n_data *= mesh.shape[ax]
+
+            def zero1(ns, leaf):
+                spec = list(ns.spec) + [None] * (
+                    len(leaf.shape) - len(ns.spec))
+                for i, (dim, ax) in enumerate(zip(leaf.shape, spec)):
+                    if ax is None and dim % n_data == 0 and dim >= n_data:
+                        spec[i] = b_axes if len(b_axes) > 1 else b_axes[0]
+                        break
+                return NamedSharding(mesh, P(*spec))
+
+            mom_shard = jax.tree.map(zero1, pshard, pstruct)
+        oshard = AdamWState(step=NamedSharding(mesh, P()),
+                            mu=mom_shard, nu=mom_shard)
+        opt_in = _with_shardings(ostruct, oshard)
+
+        def fn(params, opt_state, b):
+            return step(params, opt_state, b)
+
+        return fn, (params_in, opt_in, batch)
+
+    if shape.kind == "prefill":
+        def fn(params, b):
+            # serving prefill: populate the cache, return ONLY the
+            # last-position logits (what the sampler needs)
+            hidden, caches, _ = model.forward(
+                params, b, mode="prefill",
+                caches=model.init_cache(shape.global_batch, shape.seq_len),
+                return_hidden=True)
+            logits = jnp.einsum("bd,vd->bv", hidden[:, -1],
+                                model.head_weight(params))
+            return logits, caches
+
+        return fn, (params_in, batch)
+
+    # decode
+    cache_in = batch.pop("cache")
+
+    def fn(params, caches, b):
+        logits, new_caches = model.decode_step(params, caches, b)
+        # greedy sampler over the logical vocab (head table is padded)
+        next_tok = jnp.argmax(logits[..., :cfg.vocab_size], axis=-1)
+        return next_tok.astype(jnp.int32), new_caches
+
+    return fn, (params_in, cache_in, batch)

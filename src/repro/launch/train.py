@@ -1,0 +1,78 @@
+"""Training driver.
+
+Smoke scale (this host):
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+      --smoke --steps 100 --batch 8 --seq 64
+
+Production scale (TPU pod): drop --smoke; the mesh comes from
+make_production_mesh() and params/optimizer shard per repro.sharding.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import build_model
+from repro.sharding.specs import use_mesh_rules
+from repro.training import checkpoint
+from repro.training.data import SyntheticLM
+from repro.training.optimizer import adamw_init
+from repro.training.train_step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m", choices=list(ARCH_IDS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + trivial mesh (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = (make_host_mesh() if args.smoke
+            else make_production_mesh(multi_pod=args.multi_pod))
+    model = build_model(cfg)
+    data = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=0)
+
+    with mesh, use_mesh_rules(mesh):
+        params = model.init(jax.random.PRNGKey(0))
+        opt = adamw_init(params)
+        step = jax.jit(make_train_step(model, base_lr=args.lr,
+                                       warmup=max(2, args.steps // 10),
+                                       total_steps=args.steps))
+        n = sum(p.size for p in jax.tree.leaves(params))
+        print(f"[train] {cfg.name}: {n/1e6:.1f}M params, "
+              f"mesh={dict(mesh.shape)}", flush=True)
+        t0 = time.time()
+        for i in range(args.steps):
+            batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+            if cfg.n_image_tokens:
+                batch["frontend"] = jnp.zeros(
+                    (args.batch, cfg.n_image_tokens, cfg.d_model))
+            if cfg.is_encoder_decoder:
+                batch["frontend"] = jnp.zeros(
+                    (args.batch, cfg.encoder_seq, cfg.d_model))
+            params, opt, metrics = step(params, opt, batch)
+            if i % args.log_every == 0 or i == args.steps - 1:
+                toks = args.batch * args.seq * (i + 1)
+                print(f"step {i:4d}  ce={float(metrics['ce']):.4f}  "
+                      f"gnorm={float(metrics['grad_norm']):.2f}  "
+                      f"tok/s={toks/(time.time()-t0):,.0f}", flush=True)
+        if args.ckpt:
+            checkpoint.save(args.ckpt, params)
+            print(f"[train] checkpoint -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

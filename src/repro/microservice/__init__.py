@@ -1,0 +1,1 @@
+from repro.microservice.partition import decompose, to_application  # noqa: F401

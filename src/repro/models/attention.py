@@ -1,0 +1,185 @@
+"""Grouped-query attention: full / sliding-window / cross, train + decode.
+
+Rotary is applied to K at *write* time, so decode attention over a cache
+(ring buffer for SWA) is permutation-safe.  Score math is fp32.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init, rotary
+from repro.sharding.specs import constrain
+
+NEG_INF = -1e30
+
+
+def attention_init(key, cfg, dtype, cross: bool = False) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, h * hd), dtype),
+        "wk": _dense_init(ks[1], (d, kv * hd), dtype),
+        "wv": _dense_init(ks[2], (d, kv * hd), dtype),
+        "wo": _dense_init(ks[3], (h * hd, d), dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    return p
+
+
+def _proj_q(params, x, cfg):
+    q = jnp.einsum("...d,dh->...h", x, params["wq"])
+    if "bq" in params:
+        q = q + params["bq"]
+    q = q.reshape(*x.shape[:-1], cfg.n_heads, cfg.head_dim)
+    return constrain(q, "act_bthd")
+
+
+def _proj_kv(params, x, cfg):
+    k = jnp.einsum("...d,dh->...h", x, params["wk"])
+    v = jnp.einsum("...d,dh->...h", x, params["wv"])
+    if "bk" in params:
+        k = k + params["bk"]
+        v = v + params["bv"]
+    k = k.reshape(*x.shape[:-1], cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(*x.shape[:-1], cfg.n_kv_heads, cfg.head_dim)
+    return constrain(k, "act_btkv"), constrain(v, "act_btkv")
+
+
+def _gqa_scores(q, k, cfg):
+    """q: (B,Q,H,hd), k: (B,S,KV,hd) -> (B,KV,G,Q,S) fp32 scores."""
+    b, qlen, h, hd = q.shape
+    kvh = cfg.n_kv_heads
+    g = h // kvh
+    qg = q.reshape(b, qlen, kvh, g, hd)
+    scores = jnp.einsum("bqngh,bsnh->bngqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    return scores * (hd ** -0.5)
+
+
+def _gqa_out(probs, v, params, cfg, out_dtype):
+    """probs: (B,KV,G,Q,S), v: (B,S,KV,hd) -> (B,Q,D)."""
+    b = probs.shape[0]
+    out = jnp.einsum("bngqs,bsnh->bqngh", probs, v.astype(jnp.float32))
+    out = out.reshape(b, out.shape[1], cfg.n_heads * cfg.head_dim)
+    out = out.astype(out_dtype)
+    return jnp.einsum("...h,hd->...d", out, params["wo"])
+
+
+def _causal_mask(qlen: int, klen: int, q_offset, window: int = 0):
+    """(Q, S) additive mask; window>0 limits lookback."""
+    qpos = jnp.arange(qlen)[:, None] + q_offset
+    kpos = jnp.arange(klen)[None, :]
+    ok = kpos <= qpos
+    if window > 0:
+        ok = ok & (kpos > qpos - window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+Q_CHUNK = 4096  # max query-block width for the unrolled blockwise attention
+
+
+def self_attention(params, x, positions, cfg, kind: str,
+                   causal: bool = True) -> Tuple[jnp.ndarray, dict]:
+    """Full-sequence self-attention (train / prefill).
+
+    Long sequences are processed in *statically unrolled* query blocks
+    (Python loop, not lax.scan) so (a) the S x S score buffer never
+    materializes — per-block peak is (B, H, Q_CHUNK, S) — and (b) HLO
+    cost_analysis still counts every block's FLOPs (scan bodies are
+    counted once; unrolled blocks are not).  Sliding-window blocks
+    additionally slice K/V to the reachable window.  This is the jnp
+    analogue of the Pallas flash kernel in repro.kernels.
+
+    Returns (out, {"k","v"}) so prefill can populate the cache.
+    """
+    q = _proj_q(params, x, cfg)
+    k, v = _proj_kv(params, x, cfg)
+    q = rotary(q, positions, cfg.rope_theta)
+    k = rotary(k, positions, cfg.rope_theta)
+    s = x.shape[-2]
+    window = cfg.window if kind == "swa" else 0
+
+    if s <= Q_CHUNK:
+        scores = _gqa_scores(q, k, cfg)
+        if causal:
+            scores = scores + _causal_mask(s, s, 0, window)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = _gqa_out(probs, v, params, cfg, x.dtype)
+        return out, {"k": k, "v": v}
+
+    outs = []
+    for q0 in range(0, s, Q_CHUNK):
+        q1 = min(q0 + Q_CHUNK, s)
+        qb = q[:, q0:q1]
+        if causal:
+            k0 = max(0, q0 - window + 1) if window else 0
+            k1 = q1  # keys beyond the block are masked anyway
+        else:
+            k0, k1 = 0, s
+        kb, vb = k[:, k0:k1], v[:, k0:k1]
+        scores = _gqa_scores(qb, kb, cfg)
+        if causal:
+            qpos = jnp.arange(q0, q1)[:, None]
+            kpos = jnp.arange(k0, k1)[None, :]
+            ok = kpos <= qpos
+            if window:
+                ok = ok & (kpos > qpos - window)
+            scores = scores + jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+        probs = jax.nn.softmax(scores, axis=-1)
+        outs.append(_gqa_out(probs, vb, params, cfg, x.dtype))
+    return jnp.concatenate(outs, axis=1), {"k": k, "v": v}
+
+
+def cross_attention(params, x, kv: dict, cfg) -> jnp.ndarray:
+    """x attends to precomputed (k, v) from another modality/stack."""
+    q = _proj_q(params, x, cfg)  # no rotary across modalities
+    scores = _gqa_scores(q, kv["k"], cfg)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(probs, kv["v"], params, cfg, x.dtype)
+
+
+def make_cross_kv(params, src, cfg) -> dict:
+    k, v = _proj_kv(params, src, cfg)
+    return {"k": k, "v": v}
+
+
+def decode_self_attention(params, x, cache: dict, pos, cfg,
+                          kind: str) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode against a KV cache.
+
+    x: (B,1,D); cache {"k","v"}: (B,S,KV,hd) (S = window for swa);
+    pos: (B,) absolute position of the new token.
+    """
+    b, _, _ = x.shape
+    cache_len = cache["k"].shape[1]
+    q = _proj_q(params, x, cfg)
+    k_new, v_new = _proj_kv(params, x, cfg)
+    q = rotary(q, pos[:, None], cfg.rope_theta)
+    k_new = rotary(k_new, pos[:, None], cfg.rope_theta)
+
+    if kind == "swa":
+        slot = pos % cache_len
+    else:
+        slot = jnp.minimum(pos, cache_len - 1)
+    bidx = jnp.arange(b)
+    k = cache["k"].at[bidx, slot].set(k_new[:, 0])
+    v = cache["v"].at[bidx, slot].set(v_new[:, 0])
+
+    scores = _gqa_scores(q, k, cfg)  # (B,KV,G,1,S)
+    sidx = jnp.arange(cache_len)
+    if kind == "swa":
+        # ring buffer: every slot valid once pos >= window-1
+        valid = (sidx[None, :] <= pos[:, None]) | (pos[:, None] >= cache_len - 1)
+    else:
+        valid = sidx[None, :] <= pos[:, None]
+    mask = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+    scores = scores + mask[:, None, None, None, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, v, params, cfg, x.dtype)
+    return out, {"k": k, "v": v}

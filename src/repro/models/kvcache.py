@@ -1,0 +1,64 @@
+"""Per-segment cache/state construction (abstract — works under eval_shape)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.transformer import build_segments
+
+
+def cache_struct(cfg, batch: int, seq_len: int, dtype) -> list:
+    """One entry per segment, each a dict with leading layer dim."""
+    segs = build_segments(cfg)
+    caches = []
+    for seg in segs:
+        n = seg.length
+        if seg.kind in ("attn", "cross") or (
+                seg.kind == "swa" and not cfg.window):
+            s = seq_len
+        elif seg.kind == "swa":
+            s = min(cfg.window, seq_len)
+        if seg.kind in ("attn", "swa"):
+            c = {
+                "k": jnp.zeros((n, batch, s, cfg.n_kv_heads, cfg.head_dim),
+                               dtype),
+                "v": jnp.zeros((n, batch, s, cfg.n_kv_heads, cfg.head_dim),
+                               dtype),
+            }
+            if cfg.is_encoder_decoder:
+                c["xk"] = jnp.zeros(
+                    (n, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.head_dim),
+                    dtype)
+                c["xv"] = jnp.zeros_like(c["xk"])
+        elif seg.kind == "cross":
+            src = cfg.n_image_tokens or cfg.encoder_seq
+            c = {
+                "xk": jnp.zeros((n, batch, src, cfg.n_kv_heads, cfg.head_dim),
+                                dtype),
+                "xv": jnp.zeros((n, batch, src, cfg.n_kv_heads, cfg.head_dim),
+                                dtype),
+            }
+        elif seg.kind == "mamba1":
+            di, ds = cfg.d_inner_eff, cfg.ssm_state
+            c = {
+                "h": jnp.zeros((n, batch, di, ds), jnp.float32),
+                "conv": jnp.zeros((n, batch, cfg.conv_width - 1, di), dtype),
+            }
+        elif seg.kind == "mamba2":
+            di, ds = cfg.d_inner_eff, cfg.ssm_state
+            nh = di // cfg.mamba2_headdim
+            c = {
+                "h": jnp.zeros((n, batch, nh, cfg.mamba2_headdim, ds),
+                               jnp.float32),
+                "conv": jnp.zeros((n, batch, cfg.conv_width - 1, di), dtype),
+            }
+        else:
+            raise ValueError(seg.kind)
+        caches.append(c)
+    return caches
+
+
+def cache_bytes(cfg, batch: int, seq_len: int, bytes_per_el: int = 2) -> int:
+    import jax
+    struct = jax.eval_shape(lambda: cache_struct(cfg, batch, seq_len,
+                                                 jnp.bfloat16))
+    return sum(x.size * bytes_per_el for x in jax.tree.leaves(struct))

@@ -1,0 +1,95 @@
+"""Shared building blocks: norms, embeddings, rotary, MLPs.
+
+All modules are (init, apply) pairs of pure functions over param pytrees —
+no framework.  Params are dicts of jnp arrays; inits take an explicit key.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.specs import constrain
+
+
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# RMSNorm
+# ----------------------------------------------------------------------
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ----------------------------------------------------------------------
+# Embedding / unembedding
+# ----------------------------------------------------------------------
+def embed_init(key, vocab: int, d: int, dtype, pad_to: int = 256) -> dict:
+    """Vocab is padded up to a multiple of ``pad_to`` so the table and the
+    logits shard cleanly over the `model` axis (MaxText-style padding;
+    sampler slices back to the logical vocab)."""
+    vpad = -(-vocab // pad_to) * pad_to
+    # d^-0.5 keeps init logits O(1) whether the table is used as an
+    # embedding (rmsnorm renormalizes) or as a (tied) unembedding head
+    return {"w": _dense_init(key, (vpad, d), dtype, scale=d ** -0.5)}
+
+
+def embed(params: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    out = jnp.take(params["w"], tokens, axis=0)
+    return constrain(out, "act_btd")
+
+
+def unembed(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    logits = jnp.einsum("...d,vd->...v", x, params["w"])
+    return constrain(logits, "act_btv")
+
+
+# ----------------------------------------------------------------------
+# Rotary embeddings
+# ----------------------------------------------------------------------
+def rotary(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Apply rotary embedding.
+
+    x: (..., seq, n_heads, head_dim); positions: broadcastable to (..., seq).
+    """
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., seq, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:2 * half]
+    rot1 = x1 * cos - x2 * sin
+    rot2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([rot1, rot2, x[..., 2 * half:]], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# SwiGLU MLP
+# ----------------------------------------------------------------------
+def mlp_init(key, d: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(k1, (d, d_ff), dtype),
+        "w_up": _dense_init(k2, (d, d_ff), dtype),
+        "w_down": _dense_init(k3, (d_ff, d), dtype),
+    }
+
+
+def mlp(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = constrain(jax.nn.silu(g) * u, "act_btf")
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])

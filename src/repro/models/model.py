@@ -1,0 +1,139 @@
+"""Unified model: embedding + segments (+ encoder) + head.
+
+Public API
+----------
+``m = build_model(cfg)``
+``params = m.init(key)``
+``logits, aux = m.forward(params, batch)``                       # train
+``logits, cache, aux = m.prefill(params, batch, cache_len)``     # prefill
+``logits, cache = m.decode_step(params, cache, batch)``          # decode
+
+Batch dicts (all jnp arrays / ShapeDtypeStructs):
+  train/prefill: {"tokens": (B,S) i32, ["frontend": (B,T,D)]}
+  decode:        {"token": (B,1) i32, "pos": (B,) i32}
+                 (+ frontend context lives in the cache)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import transformer as tfm
+from repro.models.kvcache import cache_struct
+from repro.models.layers import embed, embed_init, rmsnorm, rmsnorm_init, unembed
+from repro.sharding.specs import constrain
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, unroll: bool = False):
+        self.cfg = cfg
+        self.segments = tfm.build_segments(cfg)
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.unroll = unroll  # Python-loop layers (roofline cost audit)
+
+    # ------------------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        k_embed, k_blocks, k_enc, k_head = jax.random.split(key, 4)
+        params = {
+            "embed": embed_init(k_embed, cfg.vocab_size, cfg.d_model,
+                                self.dtype),
+            "blocks": tfm.init_segments(
+                k_blocks, cfg, self.dtype,
+                has_enc_cross=cfg.is_encoder_decoder),
+            "final_norm": rmsnorm_init(cfg.d_model, self.dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = embed_init(k_head, cfg.vocab_size,
+                                           cfg.d_model, self.dtype)
+        if cfg.is_encoder_decoder:
+            import dataclasses
+            enc_cfg = dataclasses.replace(
+                cfg, n_layers=cfg.n_encoder_layers,
+                block_pattern=tuple(["attn"] * cfg.n_encoder_layers),
+                is_encoder_decoder=False, shared_block_kind="")
+            params["encoder"] = {
+                "blocks": tfm.init_segments(k_enc, enc_cfg, self.dtype),
+                "final_norm": rmsnorm_init(cfg.d_model, self.dtype),
+            }
+        return params
+
+    # ------------------------------------------------------------------
+    def _encode(self, params, frontend):
+        """Bidirectional encoder over stub frontend embeddings."""
+        import dataclasses
+        cfg = self.cfg
+        enc_cfg = dataclasses.replace(
+            cfg, n_layers=cfg.n_encoder_layers,
+            block_pattern=tuple(["attn"] * cfg.n_encoder_layers),
+            is_encoder_decoder=False, shared_block_kind="")
+        b, s, _ = frontend.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        x, _, _ = tfm.apply_segments(
+            params["encoder"]["blocks"], frontend.astype(self.dtype),
+            cfg=enc_cfg, mode="train", positions=positions, causal=False)
+        return rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+    def _head(self, params, x):
+        cfg = self.cfg
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        return unembed(head, x)  # note: vocab dim is padded (see embed_init)
+
+    # ------------------------------------------------------------------
+    def forward(self, params, batch, mode: str = "train",
+                caches: Optional[list] = None, return_hidden: bool = False):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = embed(params["embed"], tokens).astype(self.dtype)
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        frontend = batch.get("frontend")
+        enc_src = None
+        if cfg.is_encoder_decoder:
+            enc_src = self._encode(params, frontend)
+        x, new_caches, aux = tfm.apply_segments(
+            params["blocks"], x, cfg=cfg, mode=mode, segs=self.segments,
+            positions=positions, caches=caches,
+            frontend=frontend.astype(self.dtype) if (
+                frontend is not None and not cfg.is_encoder_decoder) else None,
+            enc_src=enc_src, unroll=self.unroll)
+        if return_hidden:
+            x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+            return x, new_caches, aux
+        logits = self._head(params, x)
+        return logits, new_caches, aux
+
+    def head_weight(self, params):
+        cfg = self.cfg
+        return (params["embed"] if cfg.tie_embeddings
+                else params["lm_head"])["w"]
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, cache_len: int, dtype=None):
+        return cache_struct(self.cfg, batch, cache_len, dtype or self.dtype)
+
+    def prefill(self, params, batch, cache_len: Optional[int] = None):
+        b, s = batch["tokens"].shape
+        caches = self.init_cache(b, cache_len or s)
+        logits, new_caches, aux = self.forward(params, batch, mode="prefill",
+                                               caches=caches)
+        return logits, new_caches, aux
+
+    def decode_step(self, params, caches, batch):
+        """One new token against the cache.  batch: {"token","pos"}."""
+        cfg = self.cfg
+        token, pos = batch["token"], batch["pos"]
+        x = embed(params["embed"], token).astype(self.dtype)
+        x, new_caches, _ = tfm.apply_segments(
+            params["blocks"], x, cfg=cfg, mode="decode", segs=self.segments,
+            pos=pos, caches=caches, unroll=self.unroll)
+        logits = self._head(params, x)
+        return logits, new_caches
+
+
+def build_model(cfg: ModelConfig, unroll: bool = False) -> Model:
+    return Model(cfg, unroll=unroll)

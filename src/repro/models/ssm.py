@@ -1,0 +1,224 @@
+"""Mamba1 selective scan and Mamba2 (SSD, scalar-A-per-head) blocks.
+
+Sequence mode uses `lax.scan` over time with carry (B, ...) state; decode
+mode is the single-step update.  The recurrence is elementwise in d_inner,
+so tensor-parallelism over d_inner introduces no collectives inside the
+scan (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init
+from repro.sharding.specs import constrain
+
+
+# ----------------------------------------------------------------------
+# Shared helpers
+# ----------------------------------------------------------------------
+def _causal_conv(x, conv_w, conv_b):
+    """Depthwise causal conv. x: (B,T,C), conv_w: (W,C) -> (B,T,C)."""
+    w = conv_w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * conv_w[i] for i in range(w))
+    return out + conv_b
+
+
+def _conv_step(conv_state, x_t, conv_w, conv_b):
+    """conv_state: (B, W-1, C) past inputs; x_t: (B, C)."""
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,W,C)
+    out = jnp.einsum("bwc,wc->bc", window, conv_w) + conv_b
+    return out, window[:, 1:, :]
+
+
+# ----------------------------------------------------------------------
+# Mamba 1
+# ----------------------------------------------------------------------
+def mamba1_init(key, cfg, dtype) -> dict:
+    d, di, ds = cfg.d_model, cfg.d_inner_eff, cfg.ssm_state
+    dt_rank = max(1, d // 16)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": _dense_init(ks[1], (cfg.conv_width, di), dtype, scale=0.5),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": _dense_init(ks[2], (di, dt_rank + 2 * ds), dtype),
+        "dt_proj": _dense_init(ks[3], (dt_rank, di), dtype),
+        "dt_bias": jnp.full((di,), -2.0, dtype),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": _dense_init(ks[4], (di, d), dtype),
+    }
+
+
+def _mamba1_inner(params, x_c, z, cfg):
+    """Per-timestep SSM inputs from conv output. x_c: (B,T,di)."""
+    d = cfg.d_model
+    ds = cfg.ssm_state
+    dt_rank = max(1, d // 16)
+    proj = jnp.einsum("btd,de->bte", x_c, params["x_proj"])
+    dt_r = proj[..., :dt_rank]
+    b_mat = proj[..., dt_rank:dt_rank + ds].astype(jnp.float32)
+    c_mat = proj[..., dt_rank + ds:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,rd->btd", dt_r, params["dt_proj"])
+        + params["dt_bias"]).astype(jnp.float32)
+    return dt, b_mat, c_mat
+
+
+def _mamba1_scan_step(h, inputs, a_neg):
+    """h: (B,di,ds). One recurrence step, fp32."""
+    dt_t, b_t, c_t, x_t = inputs  # (B,di), (B,ds), (B,ds), (B,di)
+    decay = jnp.exp(dt_t[..., None] * a_neg[None])  # (B,di,ds)
+    incr = (dt_t * x_t)[..., None] * b_t[:, None, :]
+    h = decay * h + incr
+    y_t = jnp.einsum("bds,bs->bd", h, c_t)
+    return h, y_t
+
+
+def mamba1_seq(params, x, cfg, h0=None, conv_state=None):
+    """Full-sequence forward. x: (B,T,D) -> (y, (h_T, conv_state_T))."""
+    b, t, _ = x.shape
+    di, ds = cfg.d_inner_eff, cfg.ssm_state
+    xz = jnp.einsum("btd,de->bte", x, params["in_proj"])
+    x_i, z = jnp.split(xz, 2, axis=-1)
+    x_c = jax.nn.silu(_causal_conv(x_i, params["conv_w"], params["conv_b"]))
+    dt, b_mat, c_mat = _mamba1_inner(params, x_c, z, cfg)
+    a_neg = -jnp.exp(params["A_log"])  # (di, ds)
+    x32 = x_c.astype(jnp.float32)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, di, ds), jnp.float32)
+    h0 = constrain(h0, "ssm_state")
+
+    def step(h, inp):
+        return _mamba1_scan_step(h, inp, a_neg)
+
+    xs = (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(b_mat, 1, 0),
+          jnp.moveaxis(c_mat, 1, 0), jnp.moveaxis(x32, 1, 0))
+    h_t, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # (B,T,di)
+    y = y + params["D"] * x32
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("btd,de->bte", y, params["out_proj"])
+    new_conv = x_i[:, -(cfg.conv_width - 1):, :]
+    return out, (h_t, new_conv)
+
+
+def mamba1_step(params, x, state, cfg):
+    """Decode step. x: (B,1,D); state = (h: (B,di,ds), conv: (B,W-1,di))."""
+    h, conv_state = state
+    xz = jnp.einsum("btd,de->bte", x, params["in_proj"])[:, 0]
+    x_i, z = jnp.split(xz, 2, axis=-1)  # (B, di)
+    x_c, conv_state = _conv_step(conv_state, x_i, params["conv_w"],
+                                 params["conv_b"])
+    x_c = jax.nn.silu(x_c)
+    dt, b_mat, c_mat = _mamba1_inner(params, x_c[:, None, :], None, cfg)
+    a_neg = -jnp.exp(params["A_log"])
+    h, y = _mamba1_scan_step(
+        h, (dt[:, 0], b_mat[:, 0], c_mat[:, 0],
+            x_c.astype(jnp.float32)), a_neg)
+    y = y + params["D"] * x_c.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bd,de->be", y, params["out_proj"])[:, None, :]
+    return out, (h, conv_state)
+
+
+# ----------------------------------------------------------------------
+# Mamba 2 (SSD with scalar A per head)
+# ----------------------------------------------------------------------
+def mamba2_init(key, cfg, dtype) -> dict:
+    d, di, ds = cfg.d_model, cfg.d_inner_eff, cfg.ssm_state
+    nh = max(1, di // cfg.mamba2_headdim)
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": _dense_init(ks[1], (cfg.conv_width, di), dtype, scale=0.5),
+        "conv_b": jnp.zeros((di,), dtype),
+        "bc_proj": _dense_init(ks[2], (d, 2 * ds), dtype),
+        "dt_w": _dense_init(ks[3], (d, nh), dtype),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "out_proj": _dense_init(ks[4], (di, d), dtype),
+    }
+
+
+def _mamba2_heads(x_c, cfg):
+    b, t, di = x_c.shape
+    hd = cfg.mamba2_headdim
+    return x_c.reshape(b, t, di // hd, hd)
+
+
+def _mamba2_scan_step(h, inputs, a_neg):
+    """h: (B,nh,hd,ds)."""
+    dt_t, b_t, c_t, x_t = inputs  # (B,nh), (B,ds), (B,ds), (B,nh,hd)
+    decay = jnp.exp(dt_t * a_neg)[..., None, None]  # (B,nh,1,1)
+    incr = (dt_t[..., None] * x_t)[..., None] * b_t[:, None, None, :]
+    h = decay * h + incr
+    y_t = jnp.einsum("bnhs,bs->bnh", h, c_t)
+    return h, y_t
+
+
+def mamba2_seq(params, x, cfg, h0=None, conv_state=None):
+    b, t, _ = x.shape
+    di, ds = cfg.d_inner_eff, cfg.ssm_state
+    hd = cfg.mamba2_headdim
+    nh = di // hd
+    xz = jnp.einsum("btd,de->bte", x, params["in_proj"])
+    x_i, z = jnp.split(xz, 2, axis=-1)
+    x_c = jax.nn.silu(_causal_conv(x_i, params["conv_w"], params["conv_b"]))
+    bc = jnp.einsum("btd,de->bte", x, params["bc_proj"]).astype(jnp.float32)
+    b_mat, c_mat = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("btd,dn->btn", x, params["dt_w"]).astype(jnp.float32)
+        + params["dt_bias"])
+    a_neg = -jnp.exp(params["A_log"])  # (nh,)
+    xh = _mamba2_heads(x_c.astype(jnp.float32), cfg)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, hd, ds), jnp.float32)
+
+    def step(h, inp):
+        return _mamba2_scan_step(h, inp, a_neg)
+
+    xs = (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(b_mat, 1, 0),
+          jnp.moveaxis(c_mat, 1, 0), jnp.moveaxis(xh, 1, 0))
+    h_t, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # (B,T,nh,hd)
+    y = y + params["D"][:, None] * xh
+    y = y.reshape(b, t, di)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("btd,de->bte", y, params["out_proj"])
+    new_conv = x_i[:, -(cfg.conv_width - 1):, :]
+    return out, (h_t, new_conv)
+
+
+def mamba2_step(params, x, state, cfg):
+    h, conv_state = state
+    di = cfg.d_inner_eff
+    hd = cfg.mamba2_headdim
+    nh = di // hd
+    x0 = x[:, 0]
+    xz = jnp.einsum("bd,de->be", x0, params["in_proj"])
+    x_i, z = jnp.split(xz, 2, axis=-1)
+    x_c, conv_state = _conv_step(conv_state, x_i, params["conv_w"],
+                                 params["conv_b"])
+    x_c = jax.nn.silu(x_c)
+    bc = jnp.einsum("bd,de->be", x0, params["bc_proj"]).astype(jnp.float32)
+    b_mat, c_mat = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bd,dn->bn", x0, params["dt_w"]).astype(jnp.float32)
+        + params["dt_bias"])
+    a_neg = -jnp.exp(params["A_log"])
+    xh = x_c.astype(jnp.float32).reshape(-1, nh, hd)
+    h, y = _mamba2_scan_step(h, (dt, b_mat, c_mat, xh), a_neg)
+    y = y + params["D"][:, None] * xh
+    y = y.reshape(x.shape[0], di)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bd,de->be", y, params["out_proj"])[:, None, :]
+    return out, (h, conv_state)

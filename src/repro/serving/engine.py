@@ -1,0 +1,112 @@
+"""Continuous-batching serving engine (slot-based, vLLM-style simplified).
+
+Fixed-size decode batch with per-slot KV caches; prefill admits new
+requests into free slots (their prompt KVs are written at the right
+positions), then all active slots decode together.  Greedy or top-k
+sampling on the logical (un-padded) vocab.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import build_model
+
+
+@dataclass
+class Request:
+    id: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    out_tokens: List[int] = field(default_factory=list)
+    t_admit: float = 0.0
+    t_done: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return len(self.out_tokens) >= self.max_new_tokens
+
+
+class ServingEngine:
+    def __init__(self, cfg, params=None, *, max_batch: int = 4,
+                 cache_len: int = 128, seed: int = 0):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        key = jax.random.PRNGKey(seed)
+        self.params = params if params is not None else self.model.init(key)
+        self.caches = self.model.init_cache(max_batch, cache_len)
+        self.pos = np.zeros(max_batch, dtype=np.int32)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.queue: List[Request] = []
+        self._decode = jax.jit(self.model.decode_step)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def _admit(self):
+        """Prefill queued requests into free slots, token by token via
+        decode_step (prompt processing; keeps one compiled program)."""
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            self.slots[slot] = req
+            self.pos[slot] = 0
+            for t in req.prompt[:-1]:
+                self._step_one(slot, t)
+            self._last_token = {slot: req.prompt[-1]}
+
+    def _step_one(self, slot: int, token: int):
+        tok = jnp.zeros((self.max_batch, 1), jnp.int32
+                        ).at[slot, 0].set(token)
+        pos = jnp.asarray(self.pos)
+        _, self.caches = self._decode(self.params, self.caches,
+                                      {"token": tok, "pos": pos})
+        self.pos[slot] += 1
+
+    # ------------------------------------------------------------------
+    def step(self) -> List[Request]:
+        """One engine iteration: admit + batched decode.  Returns
+        finished requests."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return []
+        tokens = np.zeros((self.max_batch, 1), dtype=np.int32)
+        for i in active:
+            req = self.slots[i]
+            last = (req.prompt[-1] if not req.out_tokens
+                    else req.out_tokens[-1])
+            tokens[i, 0] = last
+        logits, self.caches = self._decode(
+            self.params, self.caches,
+            {"token": jnp.asarray(tokens), "pos": jnp.asarray(self.pos)})
+        nxt = np.asarray(
+            jnp.argmax(logits[..., :self.cfg.vocab_size], axis=-1))[:, 0]
+        finished = []
+        for i in active:
+            req = self.slots[i]
+            req.out_tokens.append(int(nxt[i]))
+            self.pos[i] += 1
+            if req.done or self.pos[i] >= self.cache_len - 1:
+                finished.append(req)
+                self.slots[i] = None
+        return finished
+
+    def run(self, max_steps: int = 512) -> List[Request]:
+        done = []
+        for _ in range(max_steps):
+            done += self.step()
+            if not self.queue and all(s is None for s in self.slots):
+                break
+        return done

@@ -1,0 +1,1 @@
+from repro.sharding.specs import constrain, sharding_rules, use_mesh_rules  # noqa: F401

@@ -1,0 +1,166 @@
+"""Sharding rules: logical activation/param names -> PartitionSpec.
+
+The model code calls :func:`constrain` with a *logical* name; outside any
+mesh context this is a no-op (CPU smoke tests), inside `use_mesh_rules`
+(set by the launcher) it applies `jax.lax.with_sharding_constraint`.
+
+Logical axes:
+  * data axes ("data", and "pod" when multi-pod) shard the batch;
+  * "model" shards heads / ffn-hidden / experts / vocab / d_inner.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def sharding_rules(mesh: Mesh) -> dict:
+    """Logical activation name -> PartitionSpec for this mesh."""
+    b = _batch_axes(mesh)
+    return {
+        # activations
+        "act_btd": P(b, None, None),          # (batch, seq, d_model)
+        "act_btf": P(b, None, "model"),       # (batch, seq, d_ff)
+        "act_btv": P(b, None, "model"),       # (batch, seq, vocab)
+        "act_bthd": P(b, None, "model", None),  # (batch, seq, heads, head_dim)
+        "act_btkv": P(b, None, None, None),   # kv heads usually < model axis
+        "kv_cache_heads": P(b, None, None, None),
+        "kv_cache_seq": P(b, "model", None, None),  # seq-parallel decode cache
+        "ssm_state": P(b, "model", None),     # (batch, d_inner, d_state)
+        # (experts, cap, d_model): expert-parallel when E divides the model
+        # axis, else shard the capacity dim (all-to-all dispatch either way)
+        "moe_buf": (
+            # ep_dp (§Perf hillclimb): ALSO shard capacity over the data
+            # axes so expert FLOPs scale with data parallelism
+            [P("model", b, None), P("model", None, None),
+             P(None, b + ("model",), None), P(None, "model", None)]
+            if os.environ.get("REPRO_MOE_LAYOUT") == "ep_dp" else
+            [P("model", None, None), P(None, "model", None)]),
+    }
+
+
+def param_spec(path: str, shape: tuple, mesh: Mesh) -> P:
+    """PartitionSpec for a parameter identified by its pytree path.
+
+    Heuristics keyed on dimension names in the model code; divisibility is
+    checked and falls back to replication per-dim.
+    """
+    size = mesh.shape.get("model", 1)
+
+    def ok(dim):
+        return dim % size == 0 and dim >= size
+
+    leaf = path.split("/")[-1]
+    # stacked segment params have a leading layer dim -> never shard dim 0
+    offset = 1 if path.startswith("seg:") else 0
+    spec = [None] * len(shape)
+
+    def set_model(dim_idx):
+        if 0 <= dim_idx < len(shape) and ok(shape[dim_idx]):
+            spec[dim_idx] = "model"
+
+    if leaf in ("w_gate", "w_up"):
+        set_model(offset + 1)
+    elif leaf == "w_down":
+        set_model(offset + 0)
+    elif leaf in ("wq", "wo"):
+        # wq: (d, H*hd) sharded on heads; wo: (H*hd, d) sharded dim0
+        set_model(offset + (1 if leaf == "wq" else 0))
+    elif leaf in ("wk", "wv"):
+        set_model(offset + 1)  # falls back to replicated if kv*hd % size != 0
+    elif leaf == "w" and ("embed" in path or "lm_head" in path):
+        set_model(offset + 0 if "embed" in path else offset + 0)
+    elif leaf in ("we_gate", "we_up", "we_down"):
+        # moe expert weights: (E, d, f) / (E, f, d) — prefer expert dim
+        if ok(shape[offset + 0]):
+            spec[offset + 0] = "model"
+        else:  # tensor-parallel inside experts
+            hid = offset + (2 if leaf in ("we_gate", "we_up") else 1)
+            set_model(hid)
+    elif leaf in ("in_proj", "out_proj"):
+        set_model(offset + (1 if leaf == "in_proj" else 0))
+    elif leaf in ("conv_w", "A_log", "D", "dt_bias", "x_proj", "dt_proj"):
+        # mamba internals: shard d_inner dim where divisible
+        for i in range(len(shape) - 1, offset - 1, -1):
+            if ok(shape[i]):
+                spec[i] = "model"
+                break
+    return P(*spec)
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh: Optional[Mesh]):
+    prev = getattr(_state, "mesh", None)
+    _state.mesh = mesh
+    _state.rules = sharding_rules(mesh) if mesh is not None else None
+    try:
+        yield
+    finally:
+        _state.mesh = prev
+        _state.rules = sharding_rules(prev) if prev is not None else None
+
+
+def constrain(x, name: str):
+    mesh = getattr(_state, "mesh", None)
+    if mesh is None:
+        return x
+    rules = _state.rules
+    if name not in rules:
+        return x
+    spec = rules[name]
+    if isinstance(spec, list):  # fallback chain: first fully-applicable wins
+        chosen = None
+        for cand in spec:
+            if len(cand) != x.ndim:
+                continue
+            if all(_fits(x.shape[i], cand[i], mesh) for i in range(x.ndim)):
+                chosen = cand
+                break
+        spec = chosen if chosen is not None else spec[0]
+    if len(spec) != x.ndim:
+        return x
+    # check divisibility; drop axes that don't divide
+    fixed = []
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        fixed.append(ax if dim % n == 0 and dim >= n else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def _fits(dim: int, ax, mesh: Mesh) -> bool:
+    if ax is None:
+        return True
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return dim % n == 0 and dim >= n
+
+
+def fit_spec(shape: tuple, spec: P, mesh: Mesh) -> NamedSharding:
+    """NamedSharding with non-dividing axes dropped (for explicit in_shardings)."""
+    fixed = [ax if _fits(d, ax, mesh) else None for d, ax in zip(shape, spec)]
+    fixed = fixed + [None] * (len(shape) - len(fixed))
+    return NamedSharding(mesh, P(*fixed))

@@ -1,0 +1,2 @@
+from repro.training.optimizer import adamw_init, adamw_update, cosine_lr  # noqa: F401
+from repro.training.train_step import loss_fn, make_train_step  # noqa: F401

@@ -1,0 +1,36 @@
+"""Minimal-dependency checkpointing: pytree -> .npz (+ treedef JSON).
+
+Works for params and optimizer state; restores exact dtypes/shapes.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    paths, leaves, _ = _flatten_with_paths(tree)
+    arrays = {f"a{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    np.savez(path, __paths__=json.dumps(paths), **arrays)
+
+
+def restore(path: str, like):
+    """Restore into the structure of `like` (a template pytree)."""
+    data = np.load(path, allow_pickle=False)
+    paths_saved = json.loads(str(data["__paths__"]))
+    paths_t, leaves_t, treedef = _flatten_with_paths(like)
+    assert paths_saved == paths_t, "checkpoint/template structure mismatch"
+    leaves = [jax.numpy.asarray(data[f"a{i}"]).astype(l.dtype)
+              for i, l in enumerate(leaves_t)]
+    return jax.tree_util.tree_unflatten(treedef, leaves)

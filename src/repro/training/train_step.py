@@ -1,0 +1,71 @@
+"""Loss + train step factory."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import adamw_update, cosine_lr
+
+
+def chunked_ce(x, head_w, targets, mask, chunk: int = 512):
+    """Cross-entropy without materializing (B, S, V) float32 logits.
+
+    Scans over sequence chunks; `jax.checkpoint` on the body makes the
+    backward pass recompute each chunk's logits instead of storing them —
+    peak memory goes from O(S·V) to O(chunk·V).
+    """
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1
+    n = s // chunk
+    xc = x.reshape(b, n, chunk, d).swapaxes(0, 1)           # (n,B,C,D)
+    tc = targets.reshape(b, n, chunk).swapaxes(0, 1)        # (n,B,C)
+    mc = mask.reshape(b, n, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        xx, tt, mm = inp
+        lg = jnp.einsum("bcd,vd->bcv", xx, head_w).astype(jnp.float32)
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, tt[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mm
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(mm)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (xc, tc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(model, params, batch):
+    """Next-token cross entropy (+ MoE aux), chunked over the sequence."""
+    hidden, _, aux = model.forward(params, batch, mode="train",
+                                   return_hidden=True)
+    tokens = batch["tokens"]
+    # predict t+1 from t; last position masked out
+    targets = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+    mask = jnp.concatenate(
+        [jnp.ones_like(tokens[:, 1:], dtype=jnp.float32),
+         jnp.zeros_like(tokens[:, :1], dtype=jnp.float32)], axis=1)
+    if batch.get("loss_mask") is not None:
+        mask = mask * batch["loss_mask"].astype(jnp.float32)
+    ce = chunked_ce(hidden, model.head_weight(params), targets, mask)
+    total = ce + aux["moe_aux_loss"]
+    return total, {"ce": ce, **aux}
+
+
+def make_train_step(model, *, base_lr=3e-4, warmup=100, total_steps=10_000,
+                    weight_decay=0.1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(model, p, batch), has_aux=True)(params)
+        lr = cosine_lr(opt_state.step, base_lr, warmup, total_steps)
+        params, opt_state, gnorm = adamw_update(
+            grads, opt_state, params, lr=lr, weight_decay=weight_decay)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,62 @@
+"""Config registry: published param counts, applicability rules."""
+import pytest
+
+from repro.config import SHAPES, reduce_config
+from repro.configs import ARCH_IDS, all_pairs, get_config, get_smoke_config
+
+# published totals (tolerance: embedding/rounding conventions)
+EXPECTED_PARAMS_B = {
+    "qwen2-72b": (72.7, 0.06),
+    "mixtral-8x7b": (46.7, 0.06),
+    "command-r-35b": (30.3, 0.20),     # tied-embedding counting varies
+    "kimi-k2-1t-a32b": (1042.0, 0.08),
+    "falcon-mamba-7b": (7.27, 0.10),
+    "gemma3-12b": (11.8, 0.10),
+    "seamless-m4t-medium": (0.98, 0.30),
+    "llama-3.2-vision-90b": (87.7, 0.10),
+    "smollm-360m": (0.36, 0.10),
+    "zamba2-7b": (5.7, 0.35),          # shared-attn counting varies
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_counts(arch):
+    cfg = get_config(arch)
+    n = cfg.num_params() / 1e9
+    exp, tol = EXPECTED_PARAMS_B[arch]
+    assert abs(n - exp) / exp <= tol, f"{arch}: {n:.2f}B vs {exp}B"
+
+
+def test_active_params_moe():
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert 28 <= kimi.num_active_params() / 1e9 <= 36  # "A32B"
+    mix = get_config("mixtral-8x7b")
+    assert 11 <= mix.num_active_params() / 1e9 <= 15
+
+
+def test_all_pairs_rules():
+    pairs = all_pairs()
+    assert len(pairs) == 34  # 10 archs x 4 shapes - 6 long_500k skips
+    longs = {a for a, s in pairs if s == "long_500k"}
+    assert longs == {"falcon-mamba-7b", "zamba2-7b", "gemma3-12b",
+                     "mixtral-8x7b"}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduce_config(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.n_layers <= 2
+    assert cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+    # keeps the family's block kinds
+    orig_kinds = set(get_config(arch).block_pattern)
+    assert set(cfg.block_pattern) <= orig_kinds
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1

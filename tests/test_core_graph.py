@@ -1,0 +1,81 @@
+"""Task-DAG model + latency recursion properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import make_application
+from repro.core.network import make_network
+from repro.core.qos import MeanLatencyModel, qos_scores
+
+
+@given(seed=st.integers(0, 500))
+@settings(max_examples=20, deadline=None)
+def test_dags_are_inverse_trees(seed):
+    app = make_application(np.random.default_rng(seed))
+    for tt in app.task_types:
+        assert tt.validate_inverse_tree()
+        assert tt.sink() in tt.ms_ids
+        for m in tt.ms_ids:
+            # unique path to sink
+            desc = tt.descendants(m)
+            assert len(desc) == len(set(desc))
+            if m != tt.sink():
+                assert desc[-1] == tt.sink()
+
+
+def test_application_scale_matches_paper():
+    app = make_application(np.random.default_rng(0))
+    assert len(app.core_ids) == 6
+    assert len(app.light_ids) == 9
+    assert len(app.task_types) == 4
+    # every core + light MS is used by at least one task type
+    used = set()
+    for tt in app.task_types:
+        used |= set(tt.ms_ids)
+    assert used == set(range(15))
+
+
+@given(seed=st.integers(0, 200))
+@settings(max_examples=10, deadline=None)
+def test_network_connectivity(seed):
+    net = make_network(np.random.default_rng(seed))
+    # all-pairs routing exists and is symmetric-ish
+    assert np.isfinite(net.net_ms).all()
+    for i in range(net.n_nodes):
+        for j in range(net.n_nodes):
+            d = net.path_ms(i, j, 1.0)
+            assert d >= 0
+            if i != j:
+                assert d > 0
+
+
+@given(seed=st.integers(0, 200))
+@settings(max_examples=8, deadline=None)
+def test_dpr_monotone_along_dag(seed):
+    """Preceding latency of a child (plus its parent's processing) is at
+    least the *best-placed* parent's preceding latency."""
+    rng = np.random.default_rng(seed)
+    app = make_application(rng)
+    net = make_network(rng)
+    model = MeanLatencyModel(app, net)
+    tt = app.task_types[0]
+    u, v = 0, 0
+    for s, d in tt.edges:
+        best_parent = min(model.d_pr(u, tt, vp, s)
+                          for vp in range(net.n_nodes))
+        assert (model.d_pr(u, tt, v, d) + 1e-9
+                >= best_parent + model.mean_proc(s))
+
+
+def test_qos_scores_shapes_and_signs():
+    rng = np.random.default_rng(1)
+    app = make_application(rng)
+    net = make_network(rng)
+    z, q = qos_scores(app, net)
+    total_conc = 0.0
+    for m in app.core_ids:
+        assert z[m].shape == (net.n_nodes,)
+        assert (z[m] >= 0).all() and (q[m] >= 0).all()
+        total_conc += z[m].sum()
+    # z~ apportions (rate x service) mass — strictly positive overall
+    assert total_conc > 0

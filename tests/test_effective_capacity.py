@@ -1,0 +1,70 @@
+"""Effective capacity map g_{m,eps}(y): theory properties + Monte-Carlo
+validation of the violation probability."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.effective_capacity import (ECMap, effective_capacity,
+                                           latency_budget)
+
+
+@given(shape=st.floats(0.8, 3.0), scale=st.floats(0.5, 20.0),
+       theta=st.floats(0.01, 10.0))
+@settings(max_examples=50, deadline=None)
+def test_ec_below_mean(shape, scale, theta):
+    """E_c(theta) <= E[f] always (Jensen), approaches it as theta -> 0."""
+    ec = effective_capacity(theta, shape, scale)
+    assert ec <= shape * scale + 1e-9
+    ec_small = effective_capacity(1e-6, shape, scale)
+    assert ec_small == pytest.approx(shape * scale, rel=1e-3)
+
+
+@given(shape=st.floats(0.8, 3.0), scale=st.floats(0.5, 20.0))
+@settings(max_examples=30, deadline=None)
+def test_g_monotone(shape, scale):
+    ec = ECMap(a_mb=1.0, shape=shape, scale=scale, eps=0.2, y_max=16)
+    tbl = ec.table
+    assert (np.diff(tbl) > 0).all()              # g grows with y
+    assert (tbl >= ec.mean_table[:16] - 1e-9).all()  # conservative vs mean
+
+
+@given(eps1=st.floats(0.05, 0.3), eps2=st.floats(0.35, 0.8))
+@settings(max_examples=20, deadline=None)
+def test_g_decreases_with_eps(eps1, eps2):
+    g1 = latency_budget(1.5, 5.0, eps1, workload=2.0)
+    g2 = latency_budget(1.5, 5.0, eps2, workload=2.0)
+    assert g1 >= g2  # stricter guarantee -> bigger budget
+
+
+@pytest.mark.parametrize("shape,scale,y", [(1.0, 5.0, 1), (2.0, 10.0, 4),
+                                           (1.5, 2.0, 8)])
+def test_violation_probability_monte_carlo(shape, scale, y):
+    """Empirical P{completion time > g(y)} <= eps for the paper's
+    cumulative service process F(0,t) = sum of i.i.d. Gamma slot rates
+    (the process the simulator implements)."""
+    eps = 0.2
+    a = 1.0
+    ec = ECMap(a_mb=a, shape=shape, scale=scale, eps=eps, y_max=16)
+    g = ec.g(y)
+    rng = np.random.default_rng(0)
+    n = 20_000
+    work = a * y
+    # vectorized cumulative-service completion times
+    max_slots = int(np.ceil(g)) + 40
+    rates = rng.gamma(shape, scale, size=(n, max_slots))
+    cum = np.cumsum(rates, axis=1)
+    done_slot = np.argmax(cum >= work, axis=1)
+    unfinished = cum[:, -1] < work
+    prev = np.where(done_slot > 0,
+                    cum[np.arange(n), np.maximum(done_slot - 1, 0)], 0.0)
+    frac = (work - prev) / rates[np.arange(n), done_slot]
+    latency = done_slot + frac
+    latency[unfinished] = max_slots + 1.0
+    viol = float(np.mean(latency > g))
+    assert viol <= eps + 0.02, (viol, g)
+
+
+def test_max_parallelism():
+    ec = ECMap(a_mb=1.0, shape=1.5, scale=10.0, eps=0.2, y_max=32)
+    assert ec.max_parallelism(ec.g(4) + 1e-9) >= 4
+    assert ec.max_parallelism(0.0) == 0

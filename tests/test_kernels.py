@@ -1,0 +1,92 @@
+"""Per-kernel shape/dtype sweeps vs the ref.py oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.selective_scan import selective_scan_pallas
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _tol(dtype):
+    return TOL[jnp.bfloat16] if dtype == jnp.bfloat16 else TOL[jnp.float32]
+
+
+@pytest.mark.parametrize("b,h,kv,s,d", [
+    (1, 4, 4, 128, 64),    # MHA
+    (2, 8, 2, 256, 64),    # GQA
+    (1, 4, 1, 192, 128),   # MQA, ragged seq vs 128 blocks
+    (2, 2, 2, 64, 256),    # wide head (gemma3-like)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64),
+                                           (False, 0)])
+def test_flash_attention(b, h, kv, s, d, dtype, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), dtype)
+    k = jax.random.normal(ks[1], (b, kv, s, d), dtype)
+    v = jax.random.normal(ks[2], (b, kv, s, d), dtype)
+    out = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 block_q=64, block_k=64, interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    assert out.shape == exp.shape and out.dtype == q.dtype
+    err = jnp.max(jnp.abs(out.astype(jnp.float32)
+                          - exp.astype(jnp.float32)))
+    assert float(err) < _tol(dtype) * 10, float(err)
+
+
+@pytest.mark.parametrize("b,h,kv,s,d", [
+    (1, 4, 4, 256, 64),
+    (2, 8, 2, 512, 64),
+    (3, 4, 1, 384, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(b, h, kv, s, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (b, h, d), dtype)
+    kc = jax.random.normal(ks[1], (b, kv, s, d), dtype)
+    vc = jax.random.normal(ks[2], (b, kv, s, d), dtype)
+    pos = jnp.arange(b, dtype=jnp.int32) * (s // max(b, 1)) + 5
+    out = decode_attention_pallas(q, kc, vc, pos, block_s=128,
+                                  interpret=True)
+    exp = ref.decode_attention_ref(q, kc, vc, pos)
+    err = jnp.max(jnp.abs(out.astype(jnp.float32)
+                          - exp.astype(jnp.float32)))
+    assert float(err) < _tol(dtype) * 10, float(err)
+
+
+@pytest.mark.parametrize("b,t,di,ds", [
+    (1, 64, 128, 16),
+    (2, 100, 256, 16),     # t not a multiple of the chunk
+    (2, 128, 512, 8),
+])
+def test_selective_scan(b, t, di, ds):
+    ks = jax.random.split(jax.random.PRNGKey(2), 6)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (b, t, di)))
+    bm = jax.random.normal(ks[1], (b, t, ds))
+    cm = jax.random.normal(ks[2], (b, t, ds))
+    x = jax.random.normal(ks[3], (b, t, di))
+    a_neg = -jnp.abs(jax.random.normal(ks[4], (di, ds)))
+    h0 = jax.random.normal(ks[5], (b, di, ds))
+    y, h_t = selective_scan_pallas(dt, bm, cm, x, a_neg, h0,
+                                   block_di=128, chunk_t=64, interpret=True)
+    y_exp, h_exp = ref.selective_scan_ref(dt, bm, cm, x, a_neg, h0)
+    assert float(jnp.max(jnp.abs(y - y_exp))) < 1e-3
+    assert float(jnp.max(jnp.abs(h_t - h_exp))) < 1e-3
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (3, 37, 256), (2, 5, 7, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    x = jax.random.normal(k1, shape, dtype)
+    scale = jax.random.normal(k2, shape[-1:], dtype)
+    out = rmsnorm_pallas(x, scale, interpret=True)
+    exp = ref.rmsnorm_ref(x, scale)
+    err = jnp.max(jnp.abs(out.astype(jnp.float32)
+                          - exp.astype(jnp.float32)))
+    assert float(err) < _tol(dtype) * 5

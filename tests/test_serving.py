@@ -1,0 +1,59 @@
+"""Serving engine + microservice bridge."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.microservice.partition import decompose, to_application
+from repro.serving.engine import Request, ServingEngine
+
+
+def test_engine_completes_requests():
+    cfg = get_smoke_config("smollm-360m")
+    eng = ServingEngine(cfg, max_batch=3, cache_len=48)
+    for i in range(5):
+        eng.submit(Request(id=i, prompt=[1 + i, 2, 3], max_new_tokens=6))
+    done = eng.run()
+    assert len(done) == 5
+    assert all(len(r.out_tokens) == 6 for r in done)
+
+
+def test_engine_batched_decode_isolated_slots():
+    """Tokens generated for one request must not depend on co-batched
+    requests (cache/pos isolation)."""
+    cfg = get_smoke_config("smollm-360m")
+    eng1 = ServingEngine(cfg, max_batch=1, cache_len=32)
+    eng1.submit(Request(id=0, prompt=[5, 6, 7], max_new_tokens=4))
+    solo = eng1.run()[0].out_tokens
+
+    eng2 = ServingEngine(cfg, max_batch=3, cache_len=32)
+    eng2.submit(Request(id=0, prompt=[5, 6, 7], max_new_tokens=4))
+    eng2.submit(Request(id=1, prompt=[9, 10], max_new_tokens=4))
+    eng2.submit(Request(id=2, prompt=[11], max_new_tokens=4))
+    batched = {r.id: r.out_tokens for r in eng2.run()}
+    assert batched[0] == solo
+
+
+def test_decompose_and_application():
+    cfg = get_smoke_config("mixtral-8x7b")
+    stages = decompose(cfg, n_core_stages=2)
+    names = [s.name for s in stages]
+    assert names[0] == "tokenize" and names[-1] == "detokenize"
+    assert sum(1 for s in stages if s.kind == "core") == 2
+    app = to_application(cfg, stages, np.random.default_rng(0),
+                         measured_ms={"stage0": 1.0, "stage1": 1.0})
+    tt = app.task_types[0]
+    assert tt.validate_inverse_tree()
+    assert len(app.core_ids) == 2
+    assert len(app.light_ids) == 3
+    # calibration: core stage latency == measured
+    for m in app.core_ids:
+        ms = app.ms(m)
+        assert ms.a / ms.f_det == pytest.approx(1.0, rel=1e-6)
+
+
+def test_encdec_decompose_has_encoder_core():
+    cfg = get_smoke_config("seamless-m4t-medium")
+    stages = decompose(cfg, n_core_stages=2)
+    assert any(s.name == "encoder" for s in stages)

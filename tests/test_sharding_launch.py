@@ -1,0 +1,93 @@
+"""Sharding rules + launch plumbing (1x1 host mesh: no 512-device flag —
+the big-mesh path is exercised by launch/dryrun.py, see EXPERIMENTS.md)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.config import SHAPES
+from repro.configs import get_smoke_config
+from repro.launch.hlo_analysis import (collective_stats, roofline_terms,
+                                       _shape_bytes)
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import input_specs, make_step, param_shardings
+from repro.models import build_model
+from repro.sharding.specs import constrain, fit_spec, param_spec
+
+
+def test_fit_spec_drops_nondividing():
+    mesh = make_host_mesh()
+    ns = fit_spec((7, 3), P("data", "model"), mesh)
+    assert ns.spec == P(None, None) or all(
+        s is None or mesh.shape[s] == 1 for s in ns.spec)
+
+
+def test_constrain_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    assert constrain(x, "act_btd") is x
+
+
+def test_param_spec_heuristics():
+    mesh = make_host_mesh()  # sizes 1 -> everything fits
+    spec = param_spec("blocks/segments/0/mlp/w_gate", (64, 128), mesh)
+    assert isinstance(spec, P)
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "mixtral-8x7b",
+                                  "falcon-mamba-7b", "seamless-m4t-medium"])
+@pytest.mark.parametrize("shape", ["train_4k", "decode_32k"])
+def test_make_step_lowers_on_host_mesh(arch, shape):
+    """Every step kind lowers+compiles on the trivial mesh with a smoke
+    config (fast proxy for the production dry-run)."""
+    import dataclasses
+    cfg = get_smoke_config(arch)
+    shp = dataclasses.replace(SHAPES[shape], seq_len=32, global_batch=2)
+    mesh = make_host_mesh()
+    with mesh:
+        fn, args = make_step(cfg, shp, mesh)
+        compiled = jax.jit(fn).lower(*args).compile()
+    assert compiled.cost_analysis() is not None
+
+
+def test_param_shardings_cover_tree():
+    cfg = get_smoke_config("zamba2-7b")
+    model = build_model(cfg)
+    mesh = make_host_mesh()
+    ps = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    sh = param_shardings(mesh, model, ps)
+    n_leaves = len(jax.tree.leaves(ps))
+    assert len(jax.tree.leaves(sh)) == n_leaves
+
+
+# ----------------------------------------------------------------------
+# HLO collective parsing
+# ----------------------------------------------------------------------
+def test_shape_bytes():
+    assert _shape_bytes("f32[2,3]") == 24
+    assert _shape_bytes("bf16[128]") == 256
+    assert _shape_bytes("(f32[2], s32[4])") == 24
+
+
+def test_collective_stats_parsing():
+    hlo = """
+  %ag = f32[16,4096]{1,0} all-gather(f32[1,4096]{1,0} %x), dims={0}
+  %ar = bf16[1024]{0} all-reduce(bf16[1024]{0} %y), to_apply=%add
+  %rs = f32[8]{0} reduce-scatter(f32[64]{0} %z), dimensions={0}
+  %nop = f32[2]{0} add(f32[2]{0} %a, f32[2]{0} %b)
+"""
+    st = collective_stats(hlo)
+    assert st.count_by_kind["all-gather"] == 1
+    assert st.bytes_by_kind["all-gather"] == 16 * 4096 * 4
+    assert st.count_by_kind["all-reduce"] == 1
+    assert st.bytes_by_kind["reduce-scatter"] == 32
+    assert st.total_bytes > 0
+
+
+def test_roofline_terms_dominance():
+    r = roofline_terms(flops=1e15, hbm_bytes=1e9, coll_bytes=1e6,
+                       n_chips=256)
+    assert r["dominant"] == "compute"
+    r = roofline_terms(flops=1e9, hbm_bytes=1e13, coll_bytes=1e6,
+                       n_chips=256)
+    assert r["dominant"] == "memory"

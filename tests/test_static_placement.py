@@ -1,0 +1,56 @@
+"""Static placement IP: feasibility always; optimality vs brute force on
+small random instances (hypothesis property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.static_placement import (PlacementProblem, brute_force,
+                                         solve)
+
+
+def _problem(rng, v=3, m=2, kappa=0):
+    cost = {i: float(rng.uniform(1, 10)) for i in range(m)}
+    q = {i: rng.uniform(0, 20, size=v) for i in range(m)}
+    z = {i: rng.uniform(0, 1.2, size=v) for i in range(m)}
+    box = {i: rng.integers(1, 4, size=v) for i in range(m)}
+    return PlacementProblem(cost=cost, q=q, z=z, box=box, kappa=kappa,
+                            xi=float(rng.uniform(0.0, 1.0)))
+
+
+@given(seed=st.integers(0, 10_000), kappa=st.integers(0, 4))
+@settings(max_examples=60, deadline=None)
+def test_solver_feasible(seed, kappa):
+    rng = np.random.default_rng(seed)
+    prob = _problem(rng, v=4, m=3, kappa=kappa)
+    x = solve(prob)
+    # demand always covered; box always respected
+    for m in prob.core_ids:
+        assert (x[m] <= prob.box[m]).all()
+        assert (x[m] >= 0).all()
+        assert x[m].sum() >= prob.demand(m)
+    # kappa honored when honorable
+    max_sites = sum((prob.box[m] > 0).sum() for m in prob.core_ids)
+    if kappa <= max_sites:
+        assert prob.open_sites(x) >= min(kappa, max_sites)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_solver_matches_bruteforce(seed):
+    rng = np.random.default_rng(seed)
+    prob = _problem(rng, v=3, m=2, kappa=int(rng.integers(0, 4)))
+    x = solve(prob)
+    best = brute_force(prob, max_inst=3)
+    if best is None:  # kappa infeasible for brute force too
+        return
+    obj = prob.objective(x)
+    obj_best = prob.objective(best)
+    # exact on these instances (allow fp noise)
+    assert obj <= obj_best + 1e-6, (obj, obj_best)
+
+
+def test_diversity_prevents_single_point():
+    rng = np.random.default_rng(0)
+    prob = _problem(rng, v=5, m=2, kappa=6)
+    x = solve(prob)
+    assert prob.open_sites(x) >= 6
