@@ -1,0 +1,15 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test smoke ci
+
+# tier-1: must collect and pass with or without hypothesis installed
+test:
+	$(PY) -m pytest -x -q
+
+# CI-sized end-to-end gate: fig3/fig4 through the parallel replication
+# runner on the baseline scenario, machine-readable JSON outputs
+smoke:
+	$(PY) -m benchmarks.run --quick --scenario baseline
+
+ci: test smoke

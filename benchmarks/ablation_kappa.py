@@ -1,10 +1,12 @@
 """Ablation: the diversity constraint C6 (kappa) under node failure.
 
-The paper motivates C4–C6 by single-point vulnerability: solvers
-"consolidate all instances of an MS onto a single node".  We inject an
-edge-server failure mid-run and sweep kappa: with kappa=0 the static
-backbone concentrates and the failure takes out whole core-MS types;
-higher kappa spreads instances and completion survives, at extra cost.
+The paper motivates C4-C6 by single-point vulnerability: solvers
+"consolidate all instances of an MS onto a single node".  The
+`failure_churn` scenario rolls a staggered outage window over every
+edge server, so any concentrated backbone is guaranteed to be hit;
+sweeping kappa shows completion surviving (at extra cost) as instances
+spread.  The (kappa x scenario x seed) grid runs through the parallel
+replication runner.
 
   PYTHONPATH=src python -m benchmarks.ablation_kappa
 """
@@ -12,43 +14,38 @@ from __future__ import annotations
 
 import argparse
 
-import numpy as np
+from repro.experiments.results import save_results, summarize_rows
+from repro.experiments.runner import make_grid, run_grid
 
-from repro.core import paper_params as pp
-from repro.core.graph import make_application
-from repro.core.network import make_network
-from repro.core.online_controller import ProposalStrategy
-from repro.core.simulator import Simulator
+KAPPAS = (0, 6, 12)
+SCENARIOS = ("baseline", "failure_churn")
 
 
-def run(kappa: int, seed: int, fail: bool, horizon: int = 60):
-    rng = np.random.default_rng(seed)
-    app = make_application(rng)
-    net = make_network(rng)
-    # fail the busiest ES halfway through
-    fail_node = pp.N_EDS if fail else None  # first edge server
-    sim = Simulator(app, net, ProposalStrategy(kappa=kappa),
-                    rng=np.random.default_rng(seed + 77),
-                    horizon_slots=horizon,
-                    fail_node=fail_node,
-                    fail_at=horizon // 2 if fail else None)
-    return sim.run()
-
-
-def main(trials: int = 3):
-    print("kappa,failure,on_time_mean,completed_mean,cost_mean")
-    for kappa in (0, 6, 12):
-        for fail in (False, True):
-            ms = [run(kappa, s, fail) for s in range(trials)]
-            ot = np.mean([m["on_time"] for m in ms])
-            comp = np.mean([m["completed"] for m in ms])
-            cost = np.mean([m["total_cost"] for m in ms])
-            print(f"{kappa},{fail},{ot:.4f},{comp:.4f},{cost:.1f}",
-                  flush=True)
+def main(trials: int = 3, horizon: int = 60, out: str | None = None,
+         n_workers: int | None = None):
+    specs = make_grid(seeds=range(trials), strategies=("proposal",),
+                      scenarios=SCENARIOS, horizon_slots=horizon,
+                      kappas=KAPPAS)
+    rows = run_grid(specs, n_workers=n_workers)
+    print("kappa,scenario,on_time_mean,completed_mean,cost_mean")
+    for s in summarize_rows(rows, keys=("kappa", "scenario")):
+        print(f"{s['kappa']},{s['scenario']},{s['on_time_mean']:.4f},"
+              f"{s['completed_mean']:.4f},{s['cost_mean']:.1f}",
+              flush=True)
+    if out:
+        save_results(out, rows, meta={"section": "ablation_kappa",
+                                      "kappas": KAPPAS,
+                                      "scenarios": SCENARIOS,
+                                      "n_trials": trials,
+                                      "horizon_slots": horizon})
+    return rows
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--trials", type=int, default=3)
+    ap.add_argument("--horizon", type=int, default=60)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--workers", type=int, default=None)
     args = ap.parse_args()
-    main(args.trials)
+    main(args.trials, args.horizon, args.out, n_workers=args.workers)

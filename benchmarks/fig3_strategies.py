@@ -1,8 +1,13 @@
 """Fig. 3: violin-style distribution of on-time completion rate and total
 system cost across the four deployment strategies.
 
+Trials fan out across processes via the replication runner
+(`repro.experiments.runner`); pass `--scenario` to evaluate under any
+registered workload/environment dynamics (EXPERIMENTS.md).
+
 Output: one CSV row per (strategy, trial) + a distribution summary that
-maps onto the paper's violins (mean / p10 / p50 / p90 / std).
+maps onto the paper's violins (mean / p10 / p50 / p90 / std), plus the
+versioned JSON results file when `--out` is given.
 Paper claims validated here:
   * proposal: compact distribution, on-time > 84%
   * LBRR: low-cost / low-performance regime
@@ -12,38 +17,36 @@ Paper claims validated here:
 from __future__ import annotations
 
 import argparse
-import json
 
-import numpy as np
-
-from repro.core.experiment import run_trial, summarize
+from repro.experiments.results import save_results, summarize_rows
+from repro.experiments.runner import make_grid, run_grid
 
 
 def main(n_trials: int = 12, horizon: int = 80, out: str | None = None,
-         strategies=None):
-    rows = []
-    for seed in range(n_trials):
-        rows += run_trial(seed, strategy_names=strategies,
-                          horizon_slots=horizon)
-        print(f"# trial {seed + 1}/{n_trials} done", flush=True)
-    print("strategy,seed,on_time,completed,total_cost,p95_latency_ms")
+         strategies=None, scenario: str = "baseline",
+         n_workers: int | None = None):
+    specs = make_grid(seeds=range(n_trials), strategies=strategies,
+                      scenarios=(scenario,), horizon_slots=horizon)
+    rows = run_grid(specs, n_workers=n_workers, progress=True)
+    print("scenario,strategy,seed,on_time,completed,total_cost,"
+          "p95_latency_ms")
     for r in rows:
-        print(f"{r['strategy']},{r['seed']},{r['on_time']:.4f},"
-              f"{r['completed']:.4f},{r['total_cost']:.1f},"
-              f"{r['p95_latency_ms']:.2f}")
+        print(f"{r['scenario']},{r['strategy']},{r['seed']},"
+              f"{r['on_time']:.4f},{r['completed']:.4f},"
+              f"{r['total_cost']:.1f},{r['p95_latency_ms']:.2f}")
     print("\n# distribution summary (the violins)")
     print("strategy,on_time_mean,on_time_p10,on_time_p50,on_time_p90,"
           "on_time_std,cost_mean,cost_std")
-    summ = summarize(rows)
-    for k, v in summ.items():
-        ot = np.array([r["on_time"] for r in rows if r["strategy"] == k])
-        print(f"{k},{v['on_time_mean']:.4f},{v['on_time_p10']:.4f},"
-              f"{np.median(ot):.4f},{v['on_time_p90']:.4f},"
-              f"{v['on_time_std']:.4f},{v['cost_mean']:.1f},"
-              f"{v['cost_std']:.1f}")
+    for s in summarize_rows(rows, keys=("strategy",)):
+        print(f"{s['strategy']},{s['on_time_mean']:.4f},"
+              f"{s['on_time_p10']:.4f},{s['on_time_p50']:.4f},"
+              f"{s['on_time_p90']:.4f},{s['on_time_std']:.4f},"
+              f"{s['cost_mean']:.1f},{s['cost_std']:.1f}")
     if out:
-        with open(out, "w") as f:
-            json.dump(rows, f)
+        save_results(out, rows, meta={"section": "fig3",
+                                      "scenario": scenario,
+                                      "n_trials": n_trials,
+                                      "horizon_slots": horizon})
     return rows
 
 
@@ -52,5 +55,8 @@ if __name__ == "__main__":
     ap.add_argument("--trials", type=int, default=12)
     ap.add_argument("--horizon", type=int, default=80)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--scenario", default="baseline")
+    ap.add_argument("--workers", type=int, default=None)
     args = ap.parse_args()
-    main(args.trials, args.horizon, args.out)
+    main(args.trials, args.horizon, args.out, scenario=args.scenario,
+         n_workers=args.workers)

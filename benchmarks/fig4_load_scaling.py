@@ -1,6 +1,10 @@
 """Fig. 4: proposal vs PropAvg under escalating load (1.0x / 1.5x / 2.0x
 multipliers on the mean task-arrival rate).
 
+The (multiplier x seed x strategy) grid fans out across processes via
+the replication runner; `--scenario` layers any registered dynamics
+(e.g. bursty_mmpp) under the load sweep.
+
 Reports total + on-time completion (bars in the paper) and system cost
 (markers).  Paper claims: PropAvg's total/on-time gap widens with load;
 the proposal keeps both high with controlled cost scaling.
@@ -8,40 +12,38 @@ the proposal keeps both high with controlled cost scaling.
 from __future__ import annotations
 
 import argparse
-import json
 
-import numpy as np
-
-from repro.core.experiment import run_trial
+from repro.experiments.results import save_results, summarize_rows
+from repro.experiments.runner import make_grid, run_grid
 
 MULTIPLIERS = (1.0, 1.5, 2.0)
 
+SEED_BASE = 1000   # disjoint from fig3's seed range
 
-def main(n_trials: int = 6, horizon: int = 80, out: str | None = None):
-    recs = []
-    for mult in MULTIPLIERS:
-        for seed in range(n_trials):
-            recs += run_trial(seed + 1000, strategy_names=["proposal",
-                                                           "prop_avg"],
-                              rate_multiplier=mult, horizon_slots=horizon)
-            print(f"# x{mult} trial {seed + 1}/{n_trials}", flush=True)
+
+def main(n_trials: int = 6, horizon: int = 80, out: str | None = None,
+         scenario: str = "baseline", n_workers: int | None = None):
+    specs = make_grid(seeds=range(SEED_BASE, SEED_BASE + n_trials),
+                      strategies=("proposal", "prop_avg"),
+                      scenarios=(scenario,),
+                      rate_multipliers=MULTIPLIERS,
+                      horizon_slots=horizon)
+    rows = run_grid(specs, n_workers=n_workers, progress=True)
     print("load,strategy,completed_mean,completed_std,on_time_mean,"
           "on_time_std,gap_mean,cost_mean,cost_std")
-    for mult in MULTIPLIERS:
-        for strat in ("proposal", "prop_avg"):
-            rs = [r for r in recs if r["rate_multiplier"] == mult
-                  and r["strategy"] == strat]
-            comp = np.array([r["completed"] for r in rs])
-            ont = np.array([r["on_time"] for r in rs])
-            cost = np.array([r["total_cost"] for r in rs])
-            print(f"{mult},{strat},{comp.mean():.4f},{comp.std():.4f},"
-                  f"{ont.mean():.4f},{ont.std():.4f},"
-                  f"{(comp - ont).mean():.4f},{cost.mean():.1f},"
-                  f"{cost.std():.1f}")
+    for s in summarize_rows(rows, keys=("rate_multiplier", "strategy")):
+        print(f"{s['rate_multiplier']},{s['strategy']},"
+              f"{s['completed_mean']:.4f},{s['completed_std']:.4f},"
+              f"{s['on_time_mean']:.4f},{s['on_time_std']:.4f},"
+              f"{s['gap_mean']:.4f},{s['cost_mean']:.1f},"
+              f"{s['cost_std']:.1f}")
     if out:
-        with open(out, "w") as f:
-            json.dump(recs, f)
-    return recs
+        save_results(out, rows, meta={"section": "fig4",
+                                      "scenario": scenario,
+                                      "n_trials": n_trials,
+                                      "horizon_slots": horizon,
+                                      "rate_multipliers": MULTIPLIERS})
+    return rows
 
 
 if __name__ == "__main__":
@@ -49,5 +51,8 @@ if __name__ == "__main__":
     ap.add_argument("--trials", type=int, default=6)
     ap.add_argument("--horizon", type=int, default=80)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--scenario", default="baseline")
+    ap.add_argument("--workers", type=int, default=None)
     args = ap.parse_args()
-    main(args.trials, args.horizon, args.out)
+    main(args.trials, args.horizon, args.out, scenario=args.scenario,
+         n_workers=args.workers)

@@ -13,8 +13,13 @@ TPU-fused implementation (our Pallas kernels) must move:
 
 Dominance is reported under BOTH memory columns.
 
+Also renders EXPERIMENTS.md §JSON-schema result files from the
+replication runner (bench_fig3.json / bench_fig4.json / ...) as
+markdown summary tables via `--experiments`.
+
 Usage: PYTHONPATH=src python -m benchmarks.report \
-           [--dryrun dryrun_results.jsonl] [--roofline roofline_results.jsonl]
+           [--dryrun dryrun_results.jsonl] [--roofline roofline_results.jsonl] \
+           [--experiments bench_fig3.json bench_fig4.json]
 """
 from __future__ import annotations
 
@@ -73,11 +78,36 @@ def load(path):
     return list(seen.values())
 
 
+def experiments_tables(paths) -> None:
+    """Markdown summaries of replication-runner JSON result files."""
+    from repro.experiments.results import (load_results, markdown_table,
+                                           summarize_rows)
+    for path in paths:
+        try:
+            rows, meta = load_results(path)
+        except FileNotFoundError:
+            print(f"\n### §Experiments — {path}: missing, skipped\n")
+            continue
+        section = meta.get("section", path)
+        scen = meta.get("scenario") or meta.get("scenarios", "?")
+        keys = ["scenario", "strategy", "rate_multiplier"]
+        if any(r.get("kappa") is not None for r in rows):
+            keys.append("kappa")   # don't collapse ablation sweeps
+        print(f"\n### §Experiments — {section} "
+              f"({len(rows)} trials, scenario={scen})\n")
+        print(markdown_table(summarize_rows(rows, keys=keys), keys=keys))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun", default="dryrun_results.jsonl")
     ap.add_argument("--roofline", default="roofline_results.jsonl")
+    ap.add_argument("--experiments", nargs="*", default=[],
+                    help="replication-runner JSON files to summarize")
     args = ap.parse_args()
+
+    if args.experiments:
+        experiments_tables(args.experiments)
 
     dry = load(args.dryrun)
     roof = load(args.roofline)

@@ -1,14 +1,21 @@
 """Benchmark orchestrator — one section per paper table/figure.
 
-  fig3   four-strategy violin distributions  (Sec. IV, Fig. 3)
-  fig4   load scaling proposal vs PropAvg    (Sec. IV, Fig. 4)
-  kernels  Pallas hot-spot microbenches      (name,us_per_call,derived)
+  fig3     four-strategy violin distributions  (Sec. IV, Fig. 3)
+  fig4     load scaling proposal vs PropAvg    (Sec. IV, Fig. 4)
+  ablation kappa-diversity under failure churn (Sec. IV, C6)
+  kernels  Pallas hot-spot microbenches        (name,us_per_call,derived)
+
+Simulation sections fan trials out across processes through the
+replication runner (EXPERIMENTS.md §Harness) and write versioned JSON;
+`--scenario` selects any registered workload/environment dynamics
+(EXPERIMENTS.md §Scenario registry; `--list-scenarios` enumerates).
 
 Roofline (EXPERIMENTS.md §Roofline) is a separate entry point because it
 needs the 512-device XLA flag *before* jax init:
   PYTHONPATH=src python -m benchmarks.roofline
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+           [--scenario NAME] [--only SECTION] [--workers N]
 """
 from __future__ import annotations
 
@@ -20,24 +27,55 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="fewer trials (CI-sized)")
     ap.add_argument("--only", default=None,
-                    choices=[None, "fig3", "fig4", "kernels"])
+                    choices=[None, "fig3", "fig4", "ablation", "kernels"])
+    ap.add_argument("--scenario", default="baseline",
+                    help="registered scenario for fig3/fig4 "
+                         "(see --list-scenarios)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="worker processes (default: cpu count)")
+    ap.add_argument("--list-scenarios", action="store_true")
     args = ap.parse_args()
+
+    if args.list_scenarios:
+        from repro.experiments.scenarios import list_scenarios
+        for name, desc in list_scenarios().items():
+            print(f"{name:16s} {desc}")
+        return
+
+    from repro.experiments.scenarios import get_scenario, list_scenarios
+    try:
+        get_scenario(args.scenario)   # fail fast on unknown names
+    except KeyError:
+        ap.error(f"unknown scenario {args.scenario!r} "
+                 f"(registered: {', '.join(list_scenarios())})")
+
     trials3 = 4 if args.quick else 8
     trials4 = 2 if args.quick else 4
+    trials_abl = 2 if args.quick else 3
     horizon = 50 if args.quick else 70
 
     if args.only in (None, "fig3"):
         print("=" * 72)
         print("## Fig. 3 — strategy distributions "
-              "(on-time completion, total cost)")
+              f"(on-time completion, total cost) [{args.scenario}]")
         from benchmarks.fig3_strategies import main as fig3
-        fig3(n_trials=trials3, horizon=horizon, out="bench_fig3.json")
+        fig3(n_trials=trials3, horizon=horizon, out="bench_fig3.json",
+             scenario=args.scenario, n_workers=args.workers)
 
     if args.only in (None, "fig4"):
         print("=" * 72)
-        print("## Fig. 4 — escalating load (1.0x / 1.5x / 2.0x)")
+        print("## Fig. 4 — escalating load (1.0x / 1.5x / 2.0x) "
+              f"[{args.scenario}]")
         from benchmarks.fig4_load_scaling import main as fig4
-        fig4(n_trials=trials4, horizon=horizon, out="bench_fig4.json")
+        fig4(n_trials=trials4, horizon=horizon, out="bench_fig4.json",
+             scenario=args.scenario, n_workers=args.workers)
+
+    if args.only in (None, "ablation"):
+        print("=" * 72)
+        print("## Ablation — kappa diversity under failure churn")
+        from benchmarks.ablation_kappa import main as abl
+        abl(trials=trials_abl, horizon=horizon,
+            out="bench_ablation_kappa.json", n_workers=args.workers)
 
     if args.only in (None, "kernels"):
         print("=" * 72)

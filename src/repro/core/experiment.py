@@ -1,15 +1,25 @@
-"""Trial runner: sample an application + network, run all strategies."""
+"""Trial primitives: strategy registry, stable seeding, summaries.
+
+Replication-grade seeding: every stream is derived from
+`np.random.SeedSequence` entropy lists, and strategy/scenario names are
+folded in via `zlib.crc32` — NOT the builtin `hash()`, which is salted
+per-process by PYTHONHASHSEED and silently breaks "fixed-seed"
+reproducibility across runs.
+
+The parallel grid runner lives in `repro.experiments.runner`;
+`run_trial` below is the sequential one-seed convenience wrapper that
+routes through the same code path (so its rows are byte-identical to
+the runner's for the same spec).
+"""
 from __future__ import annotations
 
-from typing import Dict, List
+import zlib
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core.baselines import GAStrategy, LBRRStrategy
-from repro.core.graph import make_application
-from repro.core.network import make_network
 from repro.core.online_controller import PropAvgStrategy, ProposalStrategy
-from repro.core.simulator import Simulator
 
 STRATEGIES = {
     "proposal": ProposalStrategy,
@@ -19,45 +29,51 @@ STRATEGIES = {
 }
 
 
+def stable_seed(name: str) -> int:
+    """PYTHONHASHSEED-independent sub-seed for a strategy/scenario name."""
+    return zlib.crc32(name.encode("utf-8"))
+
+
+def spawn_rng(*entropy: int) -> np.random.Generator:
+    """Deterministic generator from an entropy tuple (SeedSequence)."""
+    return np.random.default_rng(np.random.SeedSequence(list(entropy)))
+
+
+def build_strategy(name: str, horizon_slots: int = 100, eps: float = 0.2,
+                   kappa: Optional[int] = None, seed: int = 0):
+    """Instantiate a registered strategy with per-kind kwargs.
+
+    `kappa` overrides the proposal's diversity constraint (ablations);
+    `seed` feeds the GA's internal generator so replications differ.
+    """
+    cls = STRATEGIES[name]
+    if name in ("proposal", "prop_avg"):
+        kw = {"horizon_slots": horizon_slots, "eps": eps}
+        if kappa is not None:
+            kw["kappa"] = kappa
+        return cls(**kw)
+    if name == "ga":
+        return cls(seed=seed)
+    return cls()
+
+
 def run_trial(seed: int, strategy_names=None, rate_multiplier: float = 1.0,
-              horizon_slots: int = 100, eps: float = 0.2) -> List[Dict]:
-    rng = np.random.default_rng(seed)
-    app = make_application(rng, rate_multiplier=rate_multiplier)
-    net = make_network(rng)
+              horizon_slots: int = 100, eps: float = 0.2,
+              scenario: str = "baseline") -> List[Dict]:
+    """Run every requested strategy on one sampled environment."""
+    from repro.experiments.runner import TrialSpec, run_one
     out = []
     for name in (strategy_names or STRATEGIES):
-        cls = STRATEGIES[name]
-        kw = {"horizon_slots": horizon_slots} if name in (
-            "proposal", "prop_avg") else {}
-        if name == "proposal" or name == "prop_avg":
-            kw["eps"] = eps
-        strat = cls(**kw)
-        sim = Simulator(app, net, strat,
-                        rng=np.random.default_rng((seed, hash(name) % 2**31)),
-                        horizon_slots=horizon_slots)
-        m = sim.run()
-        m["seed"] = seed
-        m["rate_multiplier"] = rate_multiplier
-        out.append(m)
+        out.append(run_one(TrialSpec(
+            seed=seed, strategy=name, scenario=scenario,
+            rate_multiplier=rate_multiplier, horizon_slots=horizon_slots,
+            eps=eps)))
     return out
 
 
 def summarize(rows: List[Dict]) -> Dict[str, Dict[str, float]]:
-    by = {}
-    for r in rows:
-        by.setdefault(r["strategy"], []).append(r)
-    out = {}
-    for k, rs in by.items():
-        def col(c):
-            return np.array([r[c] for r in rs], dtype=float)
-        out[k] = {
-            "n_trials": len(rs),
-            "on_time_mean": col("on_time").mean(),
-            "on_time_p10": float(np.percentile(col("on_time"), 10)),
-            "on_time_p90": float(np.percentile(col("on_time"), 90)),
-            "on_time_std": col("on_time").std(),
-            "completed_mean": col("completed").mean(),
-            "cost_mean": col("total_cost").mean(),
-            "cost_std": col("total_cost").std(),
-        }
-    return out
+    """Per-strategy aggregate view of trial rows (delegates to the
+    general grouped aggregation in repro.experiments.results)."""
+    from repro.experiments.results import summarize_rows
+    return {s["strategy"]: s
+            for s in summarize_rows(rows, keys=("strategy",))}

@@ -147,8 +147,20 @@ _DAG_TEMPLATES = [
 
 
 def make_application(rng: np.random.Generator,
-                     rate_multiplier: float = 1.0) -> Application:
-    """Sample a paper-scale application instance from Table I ranges."""
+                     rate_multiplier: float = 1.0,
+                     type_rate_multipliers: Optional[Sequence[float]] = None,
+                     deadline_multiplier: float = 1.0) -> Application:
+    """Sample a paper-scale application instance from Table I ranges.
+
+    `type_rate_multipliers` skews arrival rates per task type (scenario
+    registry: skewed-workload mixes) on top of the global
+    `rate_multiplier`; `deadline_multiplier` uniformly tightens or
+    relaxes deadlines.  Sampling order is fixed, so the same rng seed
+    yields the same base instance regardless of the multipliers.
+    """
+    if type_rate_multipliers is not None:
+        assert len(type_rate_multipliers) == len(_DAG_TEMPLATES), \
+            "one multiplier per task type"
     services = []
     for i in range(pp.N_CORE_MS):
         services.append(_sample_ms(rng, i, f"C{i}", "core"))
@@ -158,13 +170,17 @@ def make_application(rng: np.random.Generator,
 
     task_types = []
     for n, (nodes, edges) in enumerate(_DAG_TEMPLATES):
+        type_mult = (type_rate_multipliers[n]
+                     if type_rate_multipliers is not None else 1.0)
         tt = TaskType(
             idx=n, name=f"type{n}",
             ms_ids=[name_to_idx[x] for x in nodes],
             edges=[(name_to_idx[s], name_to_idx[d]) for s, d in edges],
-            deadline=rng.uniform(*pp.TABLE_I["deadline"]),
+            deadline=rng.uniform(*pp.TABLE_I["deadline"])
+            * deadline_multiplier,
             payload=rng.uniform(*pp.TABLE_I["input_payload"]),
-            rate=rng.uniform(*pp.TABLE_I["arrival_rate"]) * rate_multiplier,
+            rate=rng.uniform(*pp.TABLE_I["arrival_rate"])
+            * rate_multiplier * type_mult,
         )
         assert tt.validate_inverse_tree()
         task_types.append(tt)

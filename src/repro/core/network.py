@@ -14,6 +14,10 @@ import numpy as np
 from repro.core import paper_params as pp
 
 
+# node tiers for heterogeneous topologies (make_tiered_network)
+TIER_DEVICE, TIER_ED, TIER_ES, TIER_CLOUD = 0, 1, 2, 3
+
+
 @dataclass
 class EdgeNetwork:
     n_nodes: int
@@ -21,15 +25,23 @@ class EdgeNetwork:
     R: np.ndarray                # (V, K) capacities
     bw: np.ndarray               # (V, V) link bandwidth MB/ms (0 = no link)
     dist: np.ndarray             # (V, V) km
-    user_ed: np.ndarray          # (U,) ED index of each user
+    user_ed: np.ndarray          # (U,) entry-node index of each user
     user_bw: np.ndarray          # (U,) uplink bandwidth b_u MB/ms
     snr_m: np.ndarray            # (U,) Nakagami shape
     snr_omega: np.ndarray        # (U,) Nakagami spread
     prop_speed: float = pp.TABLE_I["prop_speed_km_per_ms"]
+    tier: np.ndarray = field(default=None, repr=False)  # (V,) TIER_* ints
 
     # filled by prepare()
     hop_next: np.ndarray = field(default=None, repr=False)
     net_ms: np.ndarray = field(default=None, repr=False)
+
+    def __post_init__(self):
+        if self.tier is None:  # classic two-tier topology
+            self.tier = np.where(self.is_es, TIER_ES, TIER_ED)
+
+    def nodes_in_tier(self, t: int) -> np.ndarray:
+        return np.flatnonzero(self.tier == t)
 
     @property
     def n_users(self) -> int:
@@ -140,5 +152,95 @@ def make_network(rng: np.random.Generator,
         snr_m=rng.uniform(*pp.TABLE_I["snr_nakagami_m"], size=n_users),
         snr_omega=rng.uniform(*pp.TABLE_I["snr_nakagami_omega"],
                               size=n_users),
+    )
+    return net.prepare()
+
+
+# capacity scaling / backhaul parameters for the four-tier topology
+TIERED = {
+    "device_R_scale": 0.25,      # device caps = scale * ED range
+    "cloud_R_scale": 8.0,        # cloud caps = scale * ES range
+    "cloud_bw": (2.0, 5.0),      # MB/ms ES <-> cloud backhaul
+    "cloud_dist_km": (200.0, 500.0),   # long-haul propagation dominates
+    "device_bw": (0.05, 0.3),    # MB/ms constrained device <-> ED link
+}
+
+
+def make_tiered_network(rng: np.random.Generator,
+                        n_devices: int = 4,
+                        n_eds: int = pp.N_EDS, n_ess: int = pp.N_ESS,
+                        n_cloud: int = 1,
+                        n_users: int = pp.N_USERS) -> EdgeNetwork:
+    """Heterogeneous cloud/edge/device topology (scenario `tiered`).
+
+    Node order: devices [0, nd), EDs, ESs, cloud last.  Devices are
+    weak near-user nodes on constrained links; the cloud is a huge
+    far-away pool reached over high-bandwidth, high-propagation-delay
+    backhaul.  Users enter at a device when devices exist, so payloads
+    must either execute on starved local silicon or pay the haul up.
+    """
+    v = n_devices + n_eds + n_ess + n_cloud
+    tier = np.array([TIER_DEVICE] * n_devices + [TIER_ED] * n_eds
+                    + [TIER_ES] * n_ess + [TIER_CLOUD] * n_cloud)
+    is_es = tier >= TIER_ES
+    ed0, es0, cl0 = n_devices, n_devices + n_eds, n_devices + n_eds + n_ess
+
+    R = np.zeros((v, pp.K_RESOURCES))
+    for i in range(v):
+        if tier[i] == TIER_DEVICE:
+            spec, scale = pp.TABLE_I["ed"]["R"], TIERED["device_R_scale"]
+        elif tier[i] == TIER_ED:
+            spec, scale = pp.TABLE_I["ed"]["R"], 1.0
+        elif tier[i] == TIER_ES:
+            spec, scale = pp.TABLE_I["es"]["R"], 1.0
+        else:
+            spec, scale = pp.TABLE_I["es"]["R"], TIERED["cloud_R_scale"]
+        R[i] = [scale * rng.uniform(lo, hi) for lo, hi in spec]
+
+    lo, hi = pp.TABLE_I["link_dist_km"]
+    pos = rng.uniform(0, hi, size=(v, 2))
+    dist = np.clip(np.linalg.norm(pos[:, None] - pos[None, :], axis=-1),
+                   lo, None)
+    # the cloud sits far outside the metro field
+    for c in range(cl0, v):
+        dist[c, :] = dist[:, c] = rng.uniform(*TIERED["cloud_dist_km"],
+                                              size=v)
+        dist[c, c] = 0.0
+
+    bw = np.zeros((v, v))
+
+    def connect(i, j, rng_range):
+        w = rng.uniform(*rng_range)
+        bw[i, j] = bw[j, i] = w
+
+    # ES full mesh
+    for i in range(es0, cl0):
+        for j in range(i + 1, cl0):
+            connect(i, j, pp.TABLE_I["link_bw"])
+    # each ED -> two nearest ESs
+    for i in range(ed0, es0):
+        es_order = es0 + np.argsort(dist[i, es0:cl0])
+        for j in es_order[:2]:
+            connect(i, int(j), pp.TABLE_I["link_bw"])
+    # each device -> its nearest ED, over a constrained link
+    for i in range(n_devices):
+        j = ed0 + int(np.argmin(dist[i, ed0:es0]))
+        connect(i, j, TIERED["device_bw"])
+    # cloud -> every ES over fat long-haul pipes
+    for c in range(cl0, v):
+        for j in range(es0, cl0):
+            connect(c, j, TIERED["cloud_bw"])
+
+    entry_pool = n_devices if n_devices > 0 else n_eds
+    entry_off = 0 if n_devices > 0 else ed0
+    user_ed = entry_off + rng.integers(0, entry_pool, size=n_users)
+    net = EdgeNetwork(
+        n_nodes=v, is_es=is_es, R=R, bw=bw, dist=dist,
+        user_ed=user_ed,
+        user_bw=rng.uniform(*pp.TABLE_I["user_bw"], size=n_users),
+        snr_m=rng.uniform(*pp.TABLE_I["snr_nakagami_m"], size=n_users),
+        snr_omega=rng.uniform(*pp.TABLE_I["snr_nakagami_omega"],
+                              size=n_users),
+        tier=tier,
     )
     return net.prepare()

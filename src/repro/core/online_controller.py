@@ -13,7 +13,8 @@ Implement the deployment with the most negative dL, repeat until none
 helps; finally route every waiting task to its min-dT instance (lines
 14-16), updating parallelism as we go.
 
-Interpretation notes vs. the paper's pseudocode are in DESIGN.md §8.
+Interpretation notes vs. the paper's pseudocode are in
+EXPERIMENTS.md §Algorithm 1 notes.
 """
 from __future__ import annotations
 

@@ -18,7 +18,7 @@ from __future__ import annotations
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -26,6 +26,19 @@ from repro.core.graph import Application, TaskType
 from repro.core.network import EdgeNetwork
 
 SLOT_MS = 1.0
+
+
+@dataclass(frozen=True)
+class ChurnEvent:
+    """A scheduled node state change: at slot `slot`, `node` fails or
+    recovers.  Generalizes the old single (fail_node, fail_at) pair to
+    multi-node failure/recovery schedules (scenario registry)."""
+    slot: int
+    node: int
+    action: str                  # "fail" | "recover"
+
+    def __post_init__(self):
+        assert self.action in ("fail", "recover"), self.action
 
 
 @dataclass
@@ -92,7 +105,10 @@ class Simulator:
     def __init__(self, app: Application, net: EdgeNetwork, strategy,
                  rng: np.random.Generator, horizon_slots: int = 100,
                  drain_slots: int = 400, fail_node: Optional[int] = None,
-                 fail_at: Optional[int] = None):
+                 fail_at: Optional[int] = None,
+                 churn: Optional[Sequence[ChurnEvent]] = None,
+                 arrival_modulation: Optional[
+                     Callable[[int], float]] = None):
         self.app = app
         self.net = net
         self.strategy = strategy
@@ -100,10 +116,20 @@ class Simulator:
         self.horizon = horizon_slots
         self.drain = drain_slots
         # fault-injection (validates the kappa diversity constraint C6):
-        # at slot `fail_at`, node `fail_node` dies — its core instances
-        # stop serving and no light instance can be (re)placed there
-        self.fail_node = fail_node
-        self.fail_at = fail_at
+        # a churn schedule of fail/recover events per node — a failed
+        # node's core instances stop serving and no light instance can
+        # be (re)placed there until (if ever) it recovers.  The legacy
+        # (fail_node, fail_at) pair is folded into the schedule.
+        events = list(churn or [])
+        if fail_node is not None and fail_at is not None:
+            events.append(ChurnEvent(slot=fail_at, node=fail_node,
+                                     action="fail"))
+        self._churn_by_slot: Dict[int, List[ChurnEvent]] = {}
+        for ev in events:
+            self._churn_by_slot.setdefault(ev.slot, []).append(ev)
+        # per-slot multiplier on mean arrival rates (MMPP / diurnal
+        # scenarios); called once per generation slot, in order
+        self.arrival_modulation = arrival_modulation
         self.dead_nodes: set = set()
         self.tasks: Dict[int, Task] = {}
         self.events: list = []      # (time, seq, task_id, ms)
@@ -147,9 +173,11 @@ class Simulator:
     # Arrivals
     # ------------------------------------------------------------------
     def _generate(self, t_slot: int):
+        mult = (self.arrival_modulation(t_slot)
+                if self.arrival_modulation is not None else 1.0)
         for u in range(self.net.n_users):
             for tt in self.app.task_types:
-                n = self.rng.poisson(tt.rate * SLOT_MS)
+                n = self.rng.poisson(tt.rate * mult * SLOT_MS)
                 for _ in range(n):
                     t_gen = t_slot + self.rng.uniform(0, SLOT_MS)
                     tid = next(self._task_ids)
@@ -274,8 +302,11 @@ class Simulator:
             self.strategy.init_light(self)
         t_end = self.horizon + self.drain
         for t_slot in range(t_end):
-            if self.fail_at is not None and t_slot == self.fail_at:
-                self.dead_nodes.add(self.fail_node)
+            for ev in self._churn_by_slot.get(t_slot, ()):
+                if ev.action == "fail":
+                    self.dead_nodes.add(ev.node)
+                else:
+                    self.dead_nodes.discard(ev.node)
             if t_slot < self.horizon:
                 self._generate(t_slot)
             # controller at slot boundary

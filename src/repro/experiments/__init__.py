@@ -1,0 +1,17 @@
+"""Monte-Carlo experiment harness: scenario registry + parallel runner.
+
+Entry points:
+
+  * `repro.experiments.runner.make_grid` / `run_grid` — build and fan a
+    seed x strategy x scenario replication grid across processes;
+  * `repro.experiments.scenarios.get_scenario` / `list_scenarios` — the
+    named workload/environment dynamics registry;
+  * `repro.experiments.results` — versioned machine-readable JSON.
+
+See EXPERIMENTS.md for the CLI and schema documentation.
+"""
+from repro.experiments.results import load_results, save_results  # noqa: F401
+from repro.experiments.runner import (TrialSpec, make_grid,  # noqa: F401
+                                      run_grid, run_one)
+from repro.experiments.scenarios import (get_scenario,  # noqa: F401
+                                         list_scenarios)

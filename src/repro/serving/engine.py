@@ -69,7 +69,10 @@ class ServingEngine:
     def _step_one(self, slot: int, token: int):
         tok = jnp.zeros((self.max_batch, 1), jnp.int32
                         ).at[slot, 0].set(token)
-        pos = jnp.asarray(self.pos)
+        # jnp.asarray aliases numpy buffers on CPU and the jitted decode
+        # dispatches asynchronously, so hand it a snapshot: mutating
+        # self.pos below must not race the pending computation
+        pos = jnp.asarray(self.pos.copy())
         _, self.caches = self._decode(self.params, self.caches,
                                       {"token": tok, "pos": pos})
         self.pos[slot] += 1
@@ -90,7 +93,8 @@ class ServingEngine:
             tokens[i, 0] = last
         logits, self.caches = self._decode(
             self.params, self.caches,
-            {"token": jnp.asarray(tokens), "pos": jnp.asarray(self.pos)})
+            {"token": jnp.asarray(tokens),
+             "pos": jnp.asarray(self.pos.copy())})  # snapshot, see above
         nxt = np.asarray(
             jnp.argmax(logits[..., :self.cfg.vocab_size], axis=-1))[:, 0]
         finished = []

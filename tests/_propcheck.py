@@ -1,0 +1,109 @@
+"""Seeded fallback for `hypothesis` property tests.
+
+Tier-1 must collect and run green whether or not `hypothesis` is
+installed.  This module provides drop-in replacements for the small
+subset of the hypothesis API the suite uses::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _propcheck import given, settings, strategies as st
+
+`given(**strategies)` turns the test into a loop over
+``settings(max_examples=...)`` deterministic pseudo-random examples.
+The example stream is seeded from a stable hash of the test's qualified
+name, so a failure reproduces identically on every run and machine
+(no PYTHONHASHSEED dependence).  On failure the falsifying example is
+attached to the raised error, mimicking hypothesis' report.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class SearchStrategy:
+    """A draw rule: rng -> value (hypothesis-strategy stand-in)."""
+
+    def __init__(self, draw, label: str):
+        self._draw = draw
+        self.label = label
+
+    def example_from(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        return self.label
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (subset)."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> SearchStrategy:
+        return SearchStrategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            f"integers({min_value}, {max_value})")
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> SearchStrategy:
+        return SearchStrategy(
+            lambda rng: float(rng.uniform(min_value, max_value)),
+            f"floats({min_value}, {max_value})")
+
+    @staticmethod
+    def booleans() -> SearchStrategy:
+        return SearchStrategy(lambda rng: bool(rng.integers(2)),
+                              "booleans()")
+
+    @staticmethod
+    def sampled_from(elements) -> SearchStrategy:
+        elements = list(elements)
+        return SearchStrategy(
+            lambda rng: elements[int(rng.integers(len(elements)))],
+            f"sampled_from({elements!r})")
+
+
+st = strategies
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Accepts (and mostly ignores) hypothesis settings kwargs."""
+    def deco(fn):
+        fn._propcheck_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_propcheck_max_examples",
+                        DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode("utf-8")))
+            for i in range(n):
+                drawn = {k: s.example_from(rng) for k, s in strats.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:
+                    e.args = (f"falsifying example #{i}: {drawn!r} -- "
+                              f"{e.args[0] if e.args else ''}",) + e.args[1:]
+                    raise
+        wrapper._propcheck_max_examples = getattr(
+            fn, "_propcheck_max_examples", DEFAULT_MAX_EXAMPLES)
+        # hide the drawn parameters from pytest's fixture resolution
+        # (functools.wraps exposes the original signature via __wrapped__)
+        del wrapper.__wrapped__
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strats])
+        return wrapper
+    return deco

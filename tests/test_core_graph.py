@@ -1,7 +1,10 @@
 """Task-DAG model + latency recursion properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # fall back to the seeded shim (see _propcheck.py)
+    from _propcheck import given, settings, strategies as st
 
 from repro.core.graph import make_application
 from repro.core.network import make_network

@@ -2,7 +2,10 @@
 validation of the violation probability."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # fall back to the seeded shim (see _propcheck.py)
+    from _propcheck import given, settings, strategies as st
 
 from repro.core.effective_capacity import (ECMap, effective_capacity,
                                            latency_budget)

@@ -5,7 +5,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # fall back to the seeded shim (see _propcheck.py)
+    from _propcheck import given, settings, strategies as st
 
 from repro.configs import get_smoke_config
 from repro.models.moe import moe_apply, moe_init

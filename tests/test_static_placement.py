@@ -2,7 +2,10 @@
 small random instances (hypothesis property tests)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # fall back to the seeded shim (see _propcheck.py)
+    from _propcheck import given, settings, strategies as st
 
 from repro.core.static_placement import (PlacementProblem, brute_force,
                                          solve)
