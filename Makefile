@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke ci
+.PHONY: test smoke docs ci
 
 # tier-1: must collect and pass with or without hypothesis installed
 test:
@@ -12,4 +12,10 @@ test:
 smoke:
 	$(PY) -m benchmarks.run --quick --scenario baseline
 
-ci: test smoke
+# docs gate: every relative link in *.md resolves, and the README
+# quickstart runs end-to-end
+docs:
+	$(PY) tools/check_docs.py
+	$(PY) examples/quickstart.py
+
+ci: test smoke docs

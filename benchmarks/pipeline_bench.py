@@ -1,0 +1,190 @@
+"""Pipelined serving bench: tokens/s and per-hop transfer cost vs the
+number of core stages and the placement strategy, plus the chunked- vs
+token-by-token prefill wall-clock gap.
+
+For every (config, n_stages, placement) cell the driver runs the real
+profile→place→execute loop (ARCHITECTURE.md §Pipeline executor):
+
+  1. build a :class:`~repro.serving.pipeline.PipelinedEngine` on the
+     scenario's network topology,
+  2. measure per-stage decode latency (``profile``), feed it through
+     ``partition.to_application``,
+  3. place the stages (``static_ip`` solves the paper's IP; baselines:
+     colocate / round_robin / random),
+  4. serve a fixed request batch, reporting measured tokens/s and the
+     simulated per-hop transfer cost the placement pays.
+
+Compute walltimes are host-dependent (like kernels_bench); the
+simulated transfer columns are deterministic given the seed.
+
+  PYTHONPATH=src python -m benchmarks.pipeline_bench --quick
+  PYTHONPATH=src python -m benchmarks.pipeline_bench \\
+      --configs smollm-360m,mixtral-8x7b --stages 1,2 \\
+      --placements static_ip,round_robin --scenario tiered --out p.json
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.experiments.results import save_results
+from repro.experiments.scenarios import get_scenario
+from repro.serving import PipelinedEngine, Request, ServingEngine
+from repro.serving.pipeline import place_stages
+
+DEFAULT_CONFIGS = "smollm-360m,mixtral-8x7b,falcon-mamba-7b"
+
+
+def _requests(n: int, prompt_len: int, new_tokens: int, vocab: int,
+              seed: int):
+    rng = np.random.default_rng(seed)
+    return [Request(id=i,
+                    prompt=[int(t) for t in
+                            rng.integers(1, vocab, size=prompt_len)],
+                    max_new_tokens=new_tokens) for i in range(n)]
+
+
+def _serve(eng, reqs, warmup: bool = True) -> dict:
+    """Run requests through an engine; separately times the admission
+    (prefill) phase of the first wave.  A warmup request triggers all
+    jit compiles first so the timings compare steady-state execution."""
+    import jax
+    if warmup:
+        eng.submit(Request(id=-1, prompt=list(reqs[0].prompt),
+                           max_new_tokens=1))
+        eng.run()
+    for r in reqs:
+        eng.submit(Request(id=r.id, prompt=list(r.prompt),
+                           max_new_tokens=r.max_new_tokens))
+    t0 = time.perf_counter()
+    eng._admit()
+    caches = (eng.caches if hasattr(eng, "caches")
+              else [st.caches for st in eng.stages])
+    jax.block_until_ready(jax.tree.leaves(caches))
+    t_admit = time.perf_counter() - t0
+    admitted = sum(1 for s in eng.slots if s is not None)
+    prefill_toks = sum(len(s.prompt) - 1 for s in eng.slots
+                       if s is not None)
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out_tokens) for r in done if r.id >= 0)
+    return {"wall_s": dt, "tokens": toks, "tok_per_s": toks / dt,
+            "admit_s": t_admit, "admitted": admitted,
+            "prefill_tok_per_s": prefill_toks / max(t_admit, 1e-9),
+            "outputs": {r.id: list(r.out_tokens) for r in done
+                        if r.id >= 0}}
+
+
+def main(configs=DEFAULT_CONFIGS, stages="1,2", placements="static_ip,"
+         "round_robin", scenario: str = "baseline", n_requests: int = 6,
+         prompt_len: int = 49, new_tokens: int = 8, chunk: int = 16,
+         max_batch: int = 4, cache_len: int = 96, seed: int = 0,
+         out: str | None = None):
+    scen = get_scenario(scenario)
+    net = scen.build_network(np.random.default_rng(seed))
+    stage_list = [int(s) for s in str(stages).split(",")]
+    placement_list = str(placements).split(",")
+    rows = []
+
+    for arch in str(configs).split(","):
+        cfg = get_smoke_config(arch)
+        reqs = _requests(n_requests, prompt_len, new_tokens,
+                         cfg.vocab_size, seed)
+
+        # ---- chunked vs token-by-token prefill (monolithic engine) ----
+        mono = {}
+        for label, c in (("chunked", chunk), ("token_by_token", 1)):
+            eng = ServingEngine(cfg, max_batch=max_batch,
+                                cache_len=cache_len, prefill_chunk=c)
+            mono[label] = _serve(eng, reqs)
+        speedup = (mono["token_by_token"]["admit_s"]
+                   / mono["chunked"]["admit_s"])
+        match = mono["chunked"]["outputs"] == mono["token_by_token"]["outputs"]
+        print(f"\n== {arch} [{scenario}] ==")
+        print(f"prefill wave of {mono['chunked']['admitted']}: "
+              f"chunked({chunk}) {mono['chunked']['admit_s']*1e3:.0f}ms "
+              f"({mono['chunked']['prefill_tok_per_s']:.0f} tok/s) vs "
+              f"token-by-token {mono['token_by_token']['admit_s']*1e3:.0f}ms "
+              f"({mono['token_by_token']['prefill_tok_per_s']:.0f} tok/s) "
+              f"-> {speedup:.2f}x, outputs identical: {match}")
+        rows.append({"arch": arch, "section": "prefill",
+                     "chunk": chunk, "speedup": speedup,
+                     "chunked_admit_s": mono["chunked"]["admit_s"],
+                     "token_admit_s": mono["token_by_token"]["admit_s"],
+                     "chunked_wall_s": mono["chunked"]["wall_s"],
+                     "token_wall_s": mono["token_by_token"]["wall_s"],
+                     "outputs_identical": match})
+
+        # ---- pipeline: stages x placement -----------------------------
+        print(f"{'stages':>6s} {'placement':>12s} {'tok/s':>8s} "
+              f"{'net ms/tok':>10s} {'net MB':>8s} {'sites':>6s} match")
+        for n_st in stage_list:
+            for strat in placement_list:
+                eng = PipelinedEngine(
+                    cfg, n_stages=n_st, max_batch=max_batch,
+                    cache_len=cache_len, prefill_chunk=chunk, net=net)
+                measured = eng.profile()
+                app = eng.to_application(np.random.default_rng(seed),
+                                         measured_ms=measured)
+                eng.set_placement(place_stages(
+                    app, net, strat, rng=np.random.default_rng(seed)))
+                res = _serve(eng, reqs)
+                ok = res["outputs"] == mono["chunked"]["outputs"]
+                net_per_tok = eng.transfer_ms / max(res["tokens"], 1)
+                sites = len(set(eng.placement.values()))
+                print(f"{n_st:6d} {strat:>12s} {res['tok_per_s']:8.1f} "
+                      f"{net_per_tok:10.3f} {eng.transfer_mb:8.3f} "
+                      f"{sites:6d} {ok}")
+                rows.append({
+                    "arch": arch, "section": "pipeline",
+                    "n_stages": n_st, "placement": strat,
+                    "tok_per_s": res["tok_per_s"],
+                    "transfer_ms_per_tok": net_per_tok,
+                    "transfer_ms": eng.transfer_ms,
+                    "transfer_mb": eng.transfer_mb,
+                    "stage_nodes": eng.placement,
+                    "stage_ms": measured,
+                    "hops": {f"{s}->{d}": v
+                             for (s, d), v in sorted(eng.hops.items())},
+                    "outputs_match_monolithic": ok})
+    if out:
+        save_results(out, rows, meta={
+            "section": "pipeline_bench", "scenario": scenario,
+            "configs": configs, "stages": stages,
+            "placements": placements, "chunk": chunk, "seed": seed,
+            "n_requests": n_requests, "prompt_len": prompt_len,
+            "new_tokens": new_tokens})
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--configs", default=DEFAULT_CONFIGS)
+    ap.add_argument("--stages", default="1,2")
+    ap.add_argument("--placements", default="static_ip,round_robin")
+    ap.add_argument("--scenario", default="baseline",
+                    help="registered scenario supplying the network "
+                         "topology (see benchmarks.run --list-scenarios)")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=49,
+                    help="chunk-aligned default (48 prefill tokens = 3 "
+                         "full chunks of 16) so the chunked path "
+                         "compiles one program shape")
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--chunk", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="one config, fewer/shorter requests")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.quick:
+        args.configs = "smollm-360m"
+        args.requests, args.prompt_len, args.new_tokens = 4, 33, 6
+    main(configs=args.configs, stages=args.stages,
+         placements=args.placements, scenario=args.scenario,
+         n_requests=args.requests, prompt_len=args.prompt_len,
+         new_tokens=args.new_tokens, chunk=args.chunk, seed=args.seed,
+         out=args.out)

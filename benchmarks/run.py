@@ -4,6 +4,7 @@
   fig4     load scaling proposal vs PropAvg    (Sec. IV, Fig. 4)
   ablation kappa-diversity under failure churn (Sec. IV, C6)
   kernels  Pallas hot-spot microbenches        (name,us_per_call,derived)
+  pipeline pipelined executor: tokens/s + per-hop transfer vs placement
 
 Simulation sections fan trials out across processes through the
 replication runner (EXPERIMENTS.md §Harness) and write versioned JSON;
@@ -27,7 +28,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="fewer trials (CI-sized)")
     ap.add_argument("--only", default=None,
-                    choices=[None, "fig3", "fig4", "ablation", "kernels"])
+                    choices=[None, "fig3", "fig4", "ablation", "kernels",
+                             "pipeline"])
     ap.add_argument("--scenario", default="baseline",
                     help="registered scenario for fig3/fig4 "
                          "(see --list-scenarios)")
@@ -82,6 +84,18 @@ def main() -> None:
         print("## Kernel microbenches")
         from benchmarks.kernels_bench import main as kb
         kb()
+
+    if args.only in (None, "pipeline"):
+        print("=" * 72)
+        print(f"## Pipelined executor — placement transfer cost + "
+              f"chunked prefill [{args.scenario}]")
+        from benchmarks.pipeline_bench import main as pb
+        if args.quick:
+            pb(configs="smollm-360m", stages="1,2", n_requests=4,
+               prompt_len=33, new_tokens=6, scenario=args.scenario,
+               out="bench_pipeline.json")
+        else:
+            pb(scenario=args.scenario, out="bench_pipeline.json")
 
     print("=" * 72)
     print("done. roofline: PYTHONPATH=src python -m benchmarks.roofline")

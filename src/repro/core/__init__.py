@@ -3,8 +3,7 @@
 Modules:
   paper_params        Table I parameter ranges + samplers
   graph               microservice + task-DAG model (Fig. 1)
-  network             heterogeneous edge network (Fig. 2)
-  latency             eqs (1)-(5)
+  network             heterogeneous edge network (Fig. 2), eqs (1)-(2)
   qos                 mean-value heuristics z~, d~, Q (eqs 15-16)
   static_placement    sparsity-constrained integer program (14)+(16)
   effective_capacity  eqs (20)-(21): E_c(theta), g_{m,eps}(y)
@@ -12,6 +11,44 @@ Modules:
   online_controller   Algorithm 1 (greedy light-MS deployment)
   baselines           LBRR / GA / PropAvg
   simulator           event-driven slot simulator (Sec. IV)
+  experiment          single-trial driver shared by benches/examples
+
+Paper-notation glossary (symbols as they appear in code):
+
+  ========  ==================================================  ==========
+  symbol    meaning                                             where
+  ========  ==================================================  ==========
+  a_m       workload of MS m per task, MB                       ``Microservice.a`` (Table I)
+  b_m       output shipped downstream by MS m, MB               ``Microservice.b`` (Table I)
+  r_m       resource requirement vector [CPU, RAM, GPU, VRAM]   ``Microservice.r`` (Table I)
+  f_det     deterministic service rate of a core MS, MB/ms      ``Microservice.f_det``
+  f_shape,  Gamma(shape, scale) service-rate contention model   ``Microservice.f_shape/f_scale``
+  f_scale   of a light MS (eq. 20 input)
+  c_dp/c_mt deployment / per-slot maintenance cost (eqs 6-7)    ``Microservice.c_dp/c_mt``
+  c_pl      per-placement cost of a light MS (eq. 7)            ``Microservice.c_pl``
+  A_n, D_n  input payload (MB) / deadline (ms) of task type n   ``TaskType.payload/deadline``
+  R_{v,k}   capacity of node v in resource k                    ``EdgeNetwork.R``
+  b_u       user u uplink bandwidth, MB/ms (eq. 1)              ``EdgeNetwork.user_bw``
+  m, Omega  Nakagami fading shape / spread (eq. 1)              ``EdgeNetwork.snr_m/snr_omega``
+  z~_{v,m}  load estimate of core m at node v (eq. 15)          ``qos.qos_scores``
+  Q_{v,m}   urgency-weighted QoS score (eq. 16)                 ``qos.qos_scores``
+  x_{v,m}   core-instance count at node v (IP variable, eq. 14) ``static_placement.solve``
+  kappa     minimum open deployment sites, C6 diversity         ``PlacementProblem.kappa``
+  xi        cost-vs-QoS weight in the IP objective              ``static_placement.XI_DEFAULT``
+  H_j(t)    floored virtual deadline-debt queue (eq. 18)        ``lyapunov.VirtualQueues``
+  zeta      virtual-queue floor (> 0 keeps control proactive)   ``lyapunov.ZETA``
+  eta, phi  cost / queue weights in drift-plus-penalty (19)     ``lyapunov.ETA/PHI_DEFAULT``
+            (eta plays the Lyapunov "V" trade-off role: larger
+            eta favors cost over latency-debt drift)
+  theta     QoS exponent of effective capacity (eqs 20-21)      ``effective_capacity.THETA_GRID``
+  E_c       effective capacity, nats/MB scale (eq. 20)          ``effective_capacity.effective_capacity``
+  g_{m,eps} statistically-safe latency budget at parallelism y  ``effective_capacity.ECMap.g``
+  eps       latency-violation probability target                ``paper_params.EPSILON``
+  y         parallelism (tasks sharing a light instance)        ``ECMap.g(y)``, ``Y_MAX``
+  ========  ==================================================  ==========
+
+See README.md §Paper ↔ code mapping for the construct-level table and
+ARCHITECTURE.md for how the two tiers cooperate.
 """
 from repro.core.graph import Application, Microservice, TaskType  # noqa: F401
 from repro.core.network import EdgeNetwork  # noqa: F401

@@ -1,5 +1,11 @@
 """Lyapunov machinery (Sec. III-B): floored virtual queues (eq. 18) and
-the drift-plus-penalty objective (eq. 19)."""
+the drift-plus-penalty objective (eq. 19).
+
+Notation (glossary in ``repro.core.__init__``): H_j(t) is task j's
+deadline-debt queue, zeta its floor, and eta the cost weight playing
+the classic Lyapunov "V" role in the drift-plus-penalty trade-off —
+larger eta buys lower cost at more latency-debt drift.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass, field

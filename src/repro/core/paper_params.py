@@ -5,6 +5,12 @@ Each simulation trial samples concrete values from these ranges (the paper:
 
 Resource vector order: [CPU, RAM, GPU, VRAM].
 Units: workloads/outputs MB, rates MB/ms, deadlines ms, costs arbitrary.
+
+Symbol key (full glossary in ``repro.core.__init__``): per-MS ``a``/``b``
+are the workload a_m and output b_m, ``r`` the requirement vector r_m,
+``f`` the deterministic core rate f_det, ``f_gamma_*`` the light-MS
+Gamma contention model, ``c_dp``/``c_mt``/``c_pl`` the cost terms of
+eqs (6)-(7).
 """
 from __future__ import annotations
 

@@ -149,6 +149,72 @@ def make_cross_kv(params, src, cfg) -> dict:
     return {"k": k, "v": v}
 
 
+def chunk_self_attention(params, x, cache: dict, pos, cfg,
+                         kind: str) -> Tuple[jnp.ndarray, dict]:
+    """C-token cache-resuming attention (chunked prefill).
+
+    x: (B,C,D) tokens at absolute positions pos[b] .. pos[b]+C-1;
+    cache {"k","v"}: (B,S,KV,hd) holding all positions < pos[b]
+    (ring-buffered for swa).  Returns (out, updated cache) such that the
+    cache afterwards equals what C successive ``decode_self_attention``
+    calls would have produced; out matches them token-for-token.
+    """
+    b, c, _ = x.shape
+    cache_len = cache["k"].shape[1]
+    q = _proj_q(params, x, cfg)
+    k_new, v_new = _proj_kv(params, x, cfg)
+    positions = pos[:, None] + jnp.arange(c)[None, :]          # (B,C)
+    q = rotary(q, positions, cfg.rope_theta)
+    k_new = rotary(k_new, positions, cfg.rope_theta)
+    qpos = positions[:, None, :, None]                         # (B,1,C,1)
+
+    if kind == "swa" and cfg.window:
+        # --- ring buffer: future in-chunk writes may clobber slots a
+        # query earlier in the chunk must still see, so score against
+        # [old ring ; chunk keys] with analytic old positions instead of
+        # write-then-mask.  Old slot j holds the most recent position
+        # p < pos with p % W == j, i.e. p_old = pos - W + ((j - pos) mod W).
+        w = cache_len
+        j = jnp.arange(w)[None, :]
+        p_old = pos[:, None] - w + (j - pos[:, None]) % w      # (B,W)
+        k_all = jnp.concatenate([cache["k"], k_new], axis=1)
+        v_all = jnp.concatenate([cache["v"], v_new], axis=1)
+        kpos = jnp.concatenate(
+            [p_old, positions], axis=1)[:, None, None, :]      # (B,1,1,W+C)
+        valid = (kpos >= 0) & (kpos <= qpos) & (kpos > qpos - w)
+        scores = _gqa_scores(q, k_all, cfg)
+        scores = scores + jnp.where(valid, 0.0, NEG_INF).astype(
+            jnp.float32)[:, :, None]                 # (B,1,1,C,W+C)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = _gqa_out(probs, v_all, params, cfg, x.dtype)
+        # ring write: the last min(C, W) chunk keys land in the cache
+        # (earlier ones would be clobbered; slicing avoids duplicate
+        # scatter indices, whose write order is unspecified)
+        keep = min(c, w)
+        slots = positions[:, -keep:] % w
+        bidx = jnp.arange(b)[:, None]
+        k = cache["k"].at[bidx, slots].set(k_new[:, -keep:])
+        v = cache["v"].at[bidx, slots].set(v_new[:, -keep:])
+        return out, {"k": k, "v": v}
+
+    # --- linear cache: write the chunk, then mask.  Slot index ==
+    # position, so keys at slots >= pos[b]+i (in-chunk future or stale
+    # entries from a previous occupant of this batch row) mask out and
+    # slots < pos hold the true prefix.
+    slots = jnp.minimum(positions, cache_len - 1)
+    bidx = jnp.arange(b)[:, None]
+    k = cache["k"].at[bidx, slots].set(k_new)
+    v = cache["v"].at[bidx, slots].set(v_new)
+    scores = _gqa_scores(q, k, cfg)                            # (B,KV,G,C,S)
+    kpos = jnp.arange(cache_len)[None, None, None, :]
+    valid = kpos <= qpos                                       # (B,1,C,S)
+    scores = scores + jnp.where(valid, 0.0, NEG_INF).astype(
+        jnp.float32)[:, :, None]                     # (B,1,1,C,S)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, v, params, cfg, x.dtype)
+    return out, {"k": k, "v": v}
+
+
 def decode_self_attention(params, x, cache: dict, pos, cfg,
                           kind: str) -> Tuple[jnp.ndarray, dict]:
     """One-token decode against a KV cache.

@@ -3,12 +3,18 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.models.transformer import build_segments
+from repro.models.transformer import build_segments, segment_range
 
 
-def cache_struct(cfg, batch: int, seq_len: int, dtype) -> list:
-    """One entry per segment, each a dict with leading layer dim."""
-    segs = build_segments(cfg)
+def cache_struct(cfg, batch: int, seq_len: int, dtype, layers=None) -> list:
+    """One entry per segment, each a dict with leading layer dim.
+
+    ``layers=(lo, hi)`` restricts the structure to that decoder layer
+    range (a pipeline stage's slice — aligned with
+    :func:`repro.models.transformer.segment_range`).
+    """
+    segs = (build_segments(cfg) if layers is None
+            else segment_range(cfg, *layers))
     caches = []
     for seg in segs:
         n = seg.length

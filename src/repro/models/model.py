@@ -7,6 +7,8 @@ Public API
 ``logits, aux = m.forward(params, batch)``                       # train
 ``logits, cache, aux = m.prefill(params, batch, cache_len)``     # prefill
 ``logits, cache = m.decode_step(params, cache, batch)``          # decode
+``hidden, cache = m.prefill_chunk(params, cache, toks, p0, i)``  # chunked admit
+``sp = m.stage_params(params, lo, hi)`` / ``m.run_stages(...)``  # pipeline
 
 Batch dicts (all jnp arrays / ShapeDtypeStructs):
   train/prefill: {"tokens": (B,S) i32, ["frontend": (B,T,D)]}
@@ -113,9 +115,80 @@ class Model:
                 else params["lm_head"])["w"]
 
     # ------------------------------------------------------------------
-    def init_cache(self, batch: int, cache_len: int, dtype=None):
-        return cache_struct(self.cfg, batch, cache_len, dtype or self.dtype)
+    def init_cache(self, batch: int, cache_len: int, dtype=None,
+                   layers=None):
+        """Cache/state pytree; ``layers=(lo, hi)`` restricts it to a
+        decoder layer range (a pipeline stage's slice)."""
+        return cache_struct(self.cfg, batch, cache_len, dtype or self.dtype,
+                            layers=layers)
 
+    # ------------------------------------------------------------------
+    # Pipeline-parallel stage API (see serving/pipeline.py)
+    # ------------------------------------------------------------------
+    def stage_params(self, params, lo: int, hi: int, *, entry: bool = False,
+                    exit_head: bool = False) -> dict:
+        """Parameter subtree owned by a stage running layers [lo, hi).
+
+        The entry stage additionally owns the embedding, the exit stage
+        the final norm + LM head; everything else is only the stage's
+        layer slice (plus the weight-shared set, if any).
+        """
+        cfg = self.cfg
+        p = {"blocks": tfm.slice_blocks(params["blocks"], cfg, lo, hi)}
+        if entry:
+            p["embed"] = params["embed"]
+        if exit_head:
+            p["final_norm"] = params["final_norm"]
+            p["lm_head"] = (params["embed"] if cfg.tie_embeddings
+                            else params["lm_head"])
+        return p
+
+    def run_stages(self, stage_p, x, lo: int, hi: int, *, mode: str,
+                   positions=None, pos=None, caches=None):
+        """Run decoder layers [lo, hi) from :meth:`stage_params` output.
+
+        x is hidden states (B,T,D) — or token ids (B,T) for a stage that
+        owns the embedding.  A stage that owns the head returns logits.
+        Composing consecutive stages reproduces the monolithic forward
+        op-for-op.  Returns (x, new_caches, aux).
+        """
+        cfg = self.cfg
+        if "embed" in stage_p:
+            x = embed(stage_p["embed"], x).astype(self.dtype)
+        x, new_caches, aux = tfm.apply_segments(
+            stage_p["blocks"], x, cfg=cfg, mode=mode,
+            segs=tfm.segment_range(cfg, lo, hi),
+            positions=positions, pos=pos, caches=caches, unroll=self.unroll)
+        if "lm_head" in stage_p:
+            x = rmsnorm(stage_p["final_norm"], x, cfg.norm_eps)
+            x = unembed(stage_p["lm_head"], x)
+        return x, new_caches, aux
+
+    # ------------------------------------------------------------------
+    def prefill_chunk(self, params, caches, tokens, pos0, slot):
+        """Chunked prefill of one batch row against the shared cache.
+
+        tokens: (1, C) processed at absolute positions pos0 .. pos0+C-1;
+        only batch row ``slot`` of ``caches`` is read and written (other
+        rows' KV *and* SSM states are untouched — the token-by-token
+        path through ``decode_step`` would advance co-batched SSM states
+        spuriously).  One jitted call per chunk replaces C decode
+        dispatches.  Returns (hidden (1,C,D), caches) — no LM head:
+        admission discards prompt logits, so computing them would waste
+        a C x d_model x vocab matmul per chunk.
+        """
+        def run(row):
+            x = embed(params["embed"], tokens).astype(self.dtype)
+            pos = jnp.reshape(pos0, (1,)).astype(jnp.int32)
+            x, new_row, _ = tfm.apply_segments(
+                params["blocks"], x, cfg=self.cfg, mode="chunk",
+                segs=self.segments, pos=pos, caches=row,
+                unroll=self.unroll)
+            return x, new_row
+
+        return row_isolated(run, caches, slot)
+
+    # ------------------------------------------------------------------
     def prefill(self, params, batch, cache_len: Optional[int] = None):
         b, s = batch["tokens"].shape
         caches = self.init_cache(b, cache_len or s)
@@ -133,6 +206,23 @@ class Model:
             pos=pos, caches=caches, unroll=self.unroll)
         logits = self._head(params, x)
         return logits, new_caches
+
+
+def row_isolated(apply_fn, caches, slot):
+    """Run ``apply_fn`` against batch row ``slot`` of a cache pytree
+    (leaves (n_layers, batch, ...)): the row is sliced out (keeping a
+    batch dim of 1), transformed, and written back — every other row's
+    state is bit-untouched.  apply_fn(row) -> (out, new_row).
+    Returns (out, updated caches)."""
+    row = jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
+        caches)
+    out, new_row = apply_fn(row)
+    caches = jax.tree.map(
+        lambda full, r: jax.lax.dynamic_update_slice_in_dim(
+            full, r.astype(full.dtype), slot, axis=1),
+        caches, new_row)
+    return out, caches
 
 
 def build_model(cfg: ModelConfig, unroll: bool = False) -> Model:

@@ -19,10 +19,17 @@ from repro.sharding.specs import constrain
 # ----------------------------------------------------------------------
 # Shared helpers
 # ----------------------------------------------------------------------
-def _causal_conv(x, conv_w, conv_b):
-    """Depthwise causal conv. x: (B,T,C), conv_w: (W,C) -> (B,T,C)."""
+def _causal_conv(x, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv. x: (B,T,C), conv_w: (W,C) -> (B,T,C).
+
+    conv_state (B, W-1, C) carries the last inputs of a previous chunk;
+    None is equivalent to zeros (start of sequence).
+    """
     w = conv_w.shape[0]
-    pad = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    if conv_state is None:
+        pad = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
     out = sum(pad[:, i:i + x.shape[1], :] * conv_w[i] for i in range(w))
     return out + conv_b
 
@@ -81,12 +88,17 @@ def _mamba1_scan_step(h, inputs, a_neg):
 
 
 def mamba1_seq(params, x, cfg, h0=None, conv_state=None):
-    """Full-sequence forward. x: (B,T,D) -> (y, (h_T, conv_state_T))."""
+    """Full-sequence forward. x: (B,T,D) -> (y, (h_T, conv_state_T)).
+
+    h0 / conv_state resume the recurrence from a previous chunk
+    (chunked prefill); None means start-of-sequence zeros.
+    """
     b, t, _ = x.shape
     di, ds = cfg.d_inner_eff, cfg.ssm_state
     xz = jnp.einsum("btd,de->bte", x, params["in_proj"])
     x_i, z = jnp.split(xz, 2, axis=-1)
-    x_c = jax.nn.silu(_causal_conv(x_i, params["conv_w"], params["conv_b"]))
+    x_c = jax.nn.silu(_causal_conv(x_i, params["conv_w"], params["conv_b"],
+                                   conv_state))
     dt, b_mat, c_mat = _mamba1_inner(params, x_c, z, cfg)
     a_neg = -jnp.exp(params["A_log"])  # (di, ds)
     x32 = x_c.astype(jnp.float32)
@@ -105,8 +117,17 @@ def mamba1_seq(params, x, cfg, h0=None, conv_state=None):
     y = y + params["D"] * x32
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
     out = jnp.einsum("btd,de->bte", y, params["out_proj"])
-    new_conv = x_i[:, -(cfg.conv_width - 1):, :]
-    return out, (h_t, new_conv)
+    return out, (h_t, _next_conv_state(x_i, conv_state, cfg))
+
+
+def _next_conv_state(x_i, conv_state, cfg):
+    """Last W-1 SSM inputs after a chunk (prepends the carried state so
+    chunks shorter than the conv window still roll forward correctly)."""
+    w1 = cfg.conv_width - 1
+    if conv_state is None:
+        conv_state = jnp.zeros((x_i.shape[0], w1, x_i.shape[-1]), x_i.dtype)
+    return jnp.concatenate(
+        [conv_state.astype(x_i.dtype), x_i], axis=1)[:, -w1:, :]
 
 
 def mamba1_step(params, x, state, cfg):
@@ -165,13 +186,15 @@ def _mamba2_scan_step(h, inputs, a_neg):
 
 
 def mamba2_seq(params, x, cfg, h0=None, conv_state=None):
+    """Full-sequence SSD forward; h0/conv_state as in :func:`mamba1_seq`."""
     b, t, _ = x.shape
     di, ds = cfg.d_inner_eff, cfg.ssm_state
     hd = cfg.mamba2_headdim
     nh = di // hd
     xz = jnp.einsum("btd,de->bte", x, params["in_proj"])
     x_i, z = jnp.split(xz, 2, axis=-1)
-    x_c = jax.nn.silu(_causal_conv(x_i, params["conv_w"], params["conv_b"]))
+    x_c = jax.nn.silu(_causal_conv(x_i, params["conv_w"], params["conv_b"],
+                                   conv_state))
     bc = jnp.einsum("btd,de->bte", x, params["bc_proj"]).astype(jnp.float32)
     b_mat, c_mat = jnp.split(bc, 2, axis=-1)
     dt = jax.nn.softplus(
@@ -194,8 +217,7 @@ def mamba2_seq(params, x, cfg, h0=None, conv_state=None):
     y = y.reshape(b, t, di)
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
     out = jnp.einsum("btd,de->bte", y, params["out_proj"])
-    new_conv = x_i[:, -(cfg.conv_width - 1):, :]
-    return out, (h_t, new_conv)
+    return out, (h_t, _next_conv_state(x_i, conv_state, cfg))
 
 
 def mamba2_step(params, x, state, cfg):

@@ -93,6 +93,11 @@ def block_apply(params: dict, x, *, kind: str, cfg, mode: str,
                 params["attn"], h, {"k": cache["k"], "v": cache["v"]},
                 pos, cfg, kind)
             cache_out = dict(cache, **kv)
+        elif mode == "chunk":
+            a, kv = attn_mod.chunk_self_attention(
+                params["attn"], h, {"k": cache["k"], "v": cache["v"]},
+                pos, cfg, kind)
+            cache_out = dict(cache, **kv)
         else:
             a, kv = attn_mod.self_attention(params["attn"], h, positions,
                                             cfg, kind, causal=causal)
@@ -101,7 +106,7 @@ def block_apply(params: dict, x, *, kind: str, cfg, mode: str,
         x = x + a
         if "enc_xattn" in params:  # enc-dec decoder block
             hx = rmsnorm(params["ln_x"], x, cfg.norm_eps)
-            if mode == "decode":
+            if mode in ("decode", "chunk"):
                 xkv = {"k": cache["xk"], "v": cache["xv"]}
             else:
                 xkv = attn_mod.make_cross_kv(params["enc_xattn"], enc_src, cfg)
@@ -110,7 +115,7 @@ def block_apply(params: dict, x, *, kind: str, cfg, mode: str,
                                      xk=xkv["k"], xv=xkv["v"])
             x = x + attn_mod.cross_attention(params["enc_xattn"], hx, xkv, cfg)
     elif kind == "cross":
-        if mode == "decode":
+        if mode in ("decode", "chunk"):
             xkv = {"k": cache["xk"], "v": cache["xv"]}
             cache_out = cache
         else:
@@ -124,6 +129,10 @@ def block_apply(params: dict, x, *, kind: str, cfg, mode: str,
         if mode == "decode":
             a, (hs, cs) = fn_step(params["mamba"], h, (cache["h"], cache["conv"]),
                                   cfg)
+            cache_out = {"h": hs, "conv": cs}
+        elif mode == "chunk":
+            a, (hs, cs) = fn_seq(params["mamba"], h, cfg,
+                                 h0=cache["h"], conv_state=cache["conv"])
             cache_out = {"h": hs, "conv": cs}
         else:
             a, (hs, cs) = fn_seq(params["mamba"], h, cfg)
@@ -196,6 +205,58 @@ def init_segments(key, cfg, dtype, has_enc_cross: bool = False):
                 jax.vmap(lambda kk: block_init(kk, seg.kind, cfg, dtype,
                                                has_enc_cross))(ks))
     return {"segments": seg_params, "shared": shared_params}
+
+
+# ----------------------------------------------------------------------
+# Layer-range restriction (pipeline-parallel stages)
+# ----------------------------------------------------------------------
+def segment_slices(cfg, lo: int, hi: int):
+    """Map decoder layers [lo, hi) onto the segment list.
+
+    Returns [(seg_index, a, b)]: full-model segment ``seg_index``
+    contributes its local layers [a, b).  Stage boundaries may fall
+    inside a segment, in which case the stacked params/caches are sliced
+    along their leading layer dim.
+    """
+    assert 0 <= lo < hi <= cfg.n_layers, (lo, hi, cfg.n_layers)
+    out = []
+    base = 0
+    for i, seg in enumerate(build_segments(cfg)):
+        a, b = max(lo, base), min(hi, base + seg.length)
+        if a < b:
+            out.append((i, a - base, b - base))
+        base += seg.length
+    return out
+
+
+def segment_range(cfg, lo: int, hi: int) -> List[Segment]:
+    """Segment list restricted to decoder layers [lo, hi)."""
+    segs = build_segments(cfg)
+    return [Segment(segs[i].kind, b - a, segs[i].shared)
+            for i, a, b in segment_slices(cfg, lo, hi)]
+
+
+def slice_blocks(blocks: dict, cfg, lo: int, hi: int) -> dict:
+    """Restrict a ``{"segments", "shared"}`` param tree to layers [lo, hi).
+
+    The result aligns with :func:`segment_range` and holds *only* the
+    stage's parameters (plus the shared set, which weight-tied layers
+    draw from wherever they run) — a pipeline stage sliced this way owns
+    nothing outside its layer range.
+    """
+    segs = build_segments(cfg)
+    sub = []
+    for i, a, b in segment_slices(cfg, lo, hi):
+        p = blocks["segments"][i]
+        if segs[i].shared or p is None:
+            sub.append(None)
+        elif segs[i].length == 1:
+            sub.append(p)                      # unstacked single layer
+        elif b - a == 1:
+            sub.append(jax.tree.map(lambda t: t[a], p))  # noqa: B023
+        else:
+            sub.append(jax.tree.map(lambda t: t[a:b], p))  # noqa: B023
+    return {"segments": sub, "shared": blocks["shared"]}
 
 
 def apply_segments(blocks, x, *, cfg, mode, segs=None, positions=None,

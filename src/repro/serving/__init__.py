@@ -1,1 +1,3 @@
 from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.pipeline import (  # noqa: F401
+    PLACEMENT_STRATEGIES, PipelinedEngine, place_stages)

@@ -1,9 +1,19 @@
 """Continuous-batching serving engine (slot-based, vLLM-style simplified).
 
 Fixed-size decode batch with per-slot KV caches; prefill admits new
-requests into free slots (their prompt KVs are written at the right
-positions), then all active slots decode together.  Greedy or top-k
-sampling on the logical (un-padded) vocab.
+requests into free slots via **chunked batched prefill** — one jitted
+call per ``prefill_chunk`` prompt tokens (``prefill_chunk=1`` recovers
+token-by-token admission; see benchmarks/pipeline_bench.py for the
+wall-clock gap).  Each chunk touches only the admitted slot's cache
+row, and the row is zeroed on admission (stale KV is masked by
+position, but SSM recurrent/conv state from a slot's previous occupant
+is not), so co-batched and successive requests are fully isolated.
+After admission all active slots decode together, greedy on the
+logical (un-padded) vocab.
+
+:class:`_SlotEngine` holds the slot state machine shared with the
+pipeline-parallel executor (serving/pipeline.py); subclasses supply
+``_reset_row`` / ``_prefill_row`` / ``_forward``.
 """
 from __future__ import annotations
 
@@ -15,6 +25,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import build_model
+
+
+def chunk_sizes(n: int, chunk: int) -> List[int]:
+    """Split a prefill of n tokens into jit-friendly chunk lengths:
+    full ``chunk``-sized pieces, then a power-of-two decomposition of
+    the remainder — so at most log2(chunk) distinct program shapes ever
+    compile, whatever prompt lengths arrive."""
+    out = [chunk] * (n // chunk)
+    rem, bit = n % chunk, 1
+    tail: List[int] = []
+    while rem:
+        if rem & 1:
+            tail.append(bit)
+        bit <<= 1
+        rem >>= 1
+    return out + tail[::-1]
+
+
+def reset_cache_row(caches, slot):
+    """Zero batch row ``slot`` of a cache pytree (leaves are
+    (n_layers, batch, ...)).  Jit this once per engine."""
+    return jax.tree.map(lambda a: a.at[:, slot].set(0), caches)
 
 
 @dataclass
@@ -31,20 +63,28 @@ class Request:
         return len(self.out_tokens) >= self.max_new_tokens
 
 
-class ServingEngine:
-    def __init__(self, cfg, params=None, *, max_batch: int = 4,
-                 cache_len: int = 128, seed: int = 0):
+class _SlotEngine:
+    """Slot state machine: admission (chunked prefill), batched greedy
+    decode, finish bookkeeping.  Forward passes are delegated to the
+    subclass hooks:
+
+    * ``_reset_row(slot)`` — clear one cache row before reuse;
+    * ``_prefill_row(slot, toks, pos0)`` — process a prompt chunk
+      (1, C) at absolute positions pos0.. for one slot;
+    * ``_forward(tokens, pos, n_active)`` — one decode step for the
+      whole batch, returning logits (B, 1, V_padded).
+    """
+
+    def __init__(self, cfg, *, max_batch: int, cache_len: int,
+                 prefill_chunk: int):
         self.cfg = cfg
-        self.model = build_model(cfg)
         self.max_batch = max_batch
         self.cache_len = cache_len
-        key = jax.random.PRNGKey(seed)
-        self.params = params if params is not None else self.model.init(key)
-        self.caches = self.model.init_cache(max_batch, cache_len)
+        self.prefill_chunk = max(1, prefill_chunk)
         self.pos = np.zeros(max_batch, dtype=np.int32)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.queue: List[Request] = []
-        self._decode = jax.jit(self.model.decode_step)
+        self.tokens_generated = 0
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -54,28 +94,24 @@ class ServingEngine:
         return [i for i, s in enumerate(self.slots) if s is None]
 
     def _admit(self):
-        """Prefill queued requests into free slots, token by token via
-        decode_step (prompt processing; keeps one compiled program)."""
+        """Prefill queued requests into free slots: ``prefill_chunk``
+        prompt tokens per jitted call (the final prompt token is fed as
+        the first decode input in :meth:`step`)."""
         for slot in self._free_slots():
             if not self.queue:
                 break
             req = self.queue.pop(0)
+            assert len(req.prompt) <= self.cache_len, \
+                f"prompt of {len(req.prompt)} exceeds cache_len {self.cache_len}"
             self.slots[slot] = req
-            self.pos[slot] = 0
-            for t in req.prompt[:-1]:
-                self._step_one(slot, t)
-            self._last_token = {slot: req.prompt[-1]}
-
-    def _step_one(self, slot: int, token: int):
-        tok = jnp.zeros((self.max_batch, 1), jnp.int32
-                        ).at[slot, 0].set(token)
-        # jnp.asarray aliases numpy buffers on CPU and the jitted decode
-        # dispatches asynchronously, so hand it a snapshot: mutating
-        # self.pos below must not race the pending computation
-        pos = jnp.asarray(self.pos.copy())
-        _, self.caches = self._decode(self.params, self.caches,
-                                      {"token": tok, "pos": pos})
-        self.pos[slot] += 1
+            self._reset_row(slot)
+            toks = req.prompt[:-1]
+            i = 0
+            for c in chunk_sizes(len(toks), self.prefill_chunk):
+                self._prefill_row(
+                    slot, np.asarray(toks[i:i + c], dtype=np.int32), i)
+                i += c
+            self.pos[slot] = len(toks)
 
     # ------------------------------------------------------------------
     def step(self) -> List[Request]:
@@ -88,19 +124,19 @@ class ServingEngine:
         tokens = np.zeros((self.max_batch, 1), dtype=np.int32)
         for i in active:
             req = self.slots[i]
-            last = (req.prompt[-1] if not req.out_tokens
-                    else req.out_tokens[-1])
-            tokens[i, 0] = last
-        logits, self.caches = self._decode(
-            self.params, self.caches,
-            {"token": jnp.asarray(tokens),
-             "pos": jnp.asarray(self.pos.copy())})  # snapshot, see above
+            tokens[i, 0] = (req.prompt[-1] if not req.out_tokens
+                            else req.out_tokens[-1])
+        # self.pos is snapshotted before handing to jax: jnp.asarray
+        # aliases numpy buffers on CPU and the jitted forward dispatches
+        # asynchronously, so the += below must not race it
+        logits = self._forward(tokens, self.pos.copy(), len(active))
         nxt = np.asarray(
             jnp.argmax(logits[..., :self.cfg.vocab_size], axis=-1))[:, 0]
         finished = []
         for i in active:
             req = self.slots[i]
             req.out_tokens.append(int(nxt[i]))
+            self.tokens_generated += 1
             self.pos[i] += 1
             if req.done or self.pos[i] >= self.cache_len - 1:
                 finished.append(req)
@@ -114,3 +150,46 @@ class ServingEngine:
             if not self.queue and all(s is None for s in self.slots):
                 break
         return done
+
+    # ------------------------------------------------------------------
+    def _reset_row(self, slot: int):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def _prefill_row(self, slot: int, toks: np.ndarray, pos0: int):
+        raise NotImplementedError  # pragma: no cover - interface
+
+    def _forward(self, tokens: np.ndarray, pos: np.ndarray,
+                 n_active: int):
+        raise NotImplementedError  # pragma: no cover - interface
+
+
+class ServingEngine(_SlotEngine):
+    """Monolithic engine: one jitted decode/prefill over the full model."""
+
+    def __init__(self, cfg, params=None, *, max_batch: int = 4,
+                 cache_len: int = 128, seed: int = 0,
+                 prefill_chunk: int = 16):
+        super().__init__(cfg, max_batch=max_batch, cache_len=cache_len,
+                         prefill_chunk=prefill_chunk)
+        self.model = build_model(cfg)
+        key = jax.random.PRNGKey(seed)
+        self.params = params if params is not None else self.model.init(key)
+        self.caches = self.model.init_cache(max_batch, cache_len)
+        self._decode = jax.jit(self.model.decode_step)
+        self._prefill = jax.jit(self.model.prefill_chunk)
+        self._reset = jax.jit(reset_cache_row)
+
+    def _reset_row(self, slot: int):
+        self.caches = self._reset(self.caches, jnp.int32(slot))
+
+    def _prefill_row(self, slot: int, toks: np.ndarray, pos0: int):
+        _, self.caches = self._prefill(
+            self.params, self.caches, jnp.asarray(toks[None]),
+            jnp.int32(pos0), jnp.int32(slot))
+
+    def _forward(self, tokens: np.ndarray, pos: np.ndarray,
+                 n_active: int):
+        logits, self.caches = self._decode(
+            self.params, self.caches,
+            {"token": jnp.asarray(tokens), "pos": jnp.asarray(pos)})
+        return logits

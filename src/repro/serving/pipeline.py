@@ -1,0 +1,262 @@
+"""Pipeline-parallel microservice serving executor.
+
+`microservice.partition.decompose` turns a model into light services
+plus N core stages over contiguous layer ranges; until now those specs
+only fed the *planning* side (static IP + Lyapunov controller) while
+``ServingEngine`` executed every model monolithically.  This module
+closes the profile→place→execute loop:
+
+  1. each core stage becomes a sub-executor owning **only** its layer
+     range's parameter slice and cache slice
+     (:meth:`repro.models.model.Model.stage_params` /
+     ``init_cache(layers=...)``);
+  2. activations hand off between stages through a network shim whose
+     per-hop latency/bandwidth comes from a ``core.network.EdgeNetwork``
+     and a stage→node placement — a ``static_placement`` solution
+     directly determines where each stage "runs" and what transfer cost
+     it pays;
+  3. measured per-stage latencies (:meth:`PipelinedEngine.profile`)
+     feed back into ``partition.to_application``, so the placement is
+     re-derived from the *executed* pipeline, not FLOP estimates.
+
+Stage compute is real (jitted JAX per stage, token-identical to the
+monolithic engine — composition of ``run_stages`` over consecutive
+ranges reproduces the forward op-for-op); the network is simulated
+(hop delays are accounted, not slept).  Light services are accounted at
+fixed homes: tokenize/detokenize at the entry node, sample co-located
+with the exit stage.
+
+Enc-dec configs: the ``encoder`` core stage is planning-only here, as in
+``ServingEngine`` (token requests carry no frontend; decoder cross-attn
+reads the zero-initialised cache), so the executor chains decoder
+stages only.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import static_placement as sp
+from repro.core.qos import qos_scores
+from repro.microservice.partition import (StageSpec, decompose,
+                                          profile_stage_ms, to_application)
+from repro.models import build_model
+from repro.models.model import row_isolated
+from repro.serving.engine import _SlotEngine, reset_cache_row
+
+PLACEMENT_STRATEGIES = ("static_ip", "colocate", "round_robin", "random")
+
+
+def place_stages(app, net, strategy: str = "static_ip", *, kappa: int = 2,
+                 xi: float = sp.XI_DEFAULT, horizon_slots: int = 100,
+                 rng: Optional[np.random.Generator] = None
+                 ) -> Dict[str, int]:
+    """Map each core service of ``app`` to a network node.
+
+    ``static_ip`` solves the paper's sparsity-constrained integer
+    program (eq. 14, C4–C6) over QoS scores and picks each stage's
+    most-instantiated site; the rest are baselines for the bench.
+    """
+    core = app.core_ids
+    es = [int(v) for v in np.flatnonzero(net.is_es)]
+    es = es or list(range(net.n_nodes))
+    if strategy == "static_ip":
+        z, q = qos_scores(app, net)
+        prob = sp.build_problem(app, net, z, q, kappa=kappa, xi=xi,
+                                horizon_slots=horizon_slots)
+        x = sp.solve(prob)
+        return {app.ms(m).name: (int(np.argmax(x[m])) if x[m].sum() > 0
+                                 else es[0]) for m in core}
+    if strategy == "colocate":
+        v = es[int(np.argmax(net.R[es, 2]))]  # fattest GPU among ESs
+        return {app.ms(m).name: v for m in core}
+    if strategy == "round_robin":
+        return {app.ms(m).name: es[i % len(es)] for i, m in enumerate(core)}
+    if strategy == "random":
+        rng = rng if rng is not None else np.random.default_rng(0)
+        return {app.ms(m).name: int(rng.choice(es)) for m in core}
+    raise ValueError(f"unknown placement strategy {strategy!r}; "
+                     f"known: {PLACEMENT_STRATEGIES}")
+
+
+class _CoreStage:
+    """One sub-executor: layers [lo, hi), its param/cache slices, and
+    jitted decode / chunked-prefill / row-reset programs."""
+
+    def __init__(self, model, params, spec: StageSpec, *, entry: bool,
+                 exit_head: bool, max_batch: int, cache_len: int):
+        self.spec = spec
+        self.name = spec.name
+        self.lo, self.hi = spec.layer_range
+        self.node: int = 0
+        self.params = model.stage_params(params, self.lo, self.hi,
+                                         entry=entry, exit_head=exit_head)
+        # admission discards prompt logits, so prefill skips the head
+        self.prefill_params = {k: v for k, v in self.params.items()
+                               if k not in ("lm_head", "final_norm")}
+        self.caches = model.init_cache(max_batch, cache_len,
+                                       layers=(self.lo, self.hi))
+        lo, hi = self.lo, self.hi
+
+        def _decode(p, caches, x, pos):
+            y, new_caches, _ = model.run_stages(p, x, lo, hi, mode="decode",
+                                                pos=pos, caches=caches)
+            return y, new_caches
+
+        def _prefill(p, caches, x, pos0, slot):
+            def run(row):
+                y, new_row, _ = model.run_stages(
+                    p, x, lo, hi, mode="chunk",
+                    pos=jnp.reshape(pos0, (1,)).astype(jnp.int32),
+                    caches=row)
+                return y, new_row
+            return row_isolated(run, caches, slot)
+
+        self._decode = jax.jit(_decode)
+        self._prefill = jax.jit(_prefill)
+        self._reset = jax.jit(reset_cache_row)
+
+    def decode(self, x, pos):
+        x, self.caches = self._decode(self.params, self.caches, x, pos)
+        return x
+
+    def prefill(self, x, pos0, slot):
+        x, self.caches = self._prefill(self.prefill_params, self.caches, x,
+                                       pos0, slot)
+        return x
+
+    def reset_row(self, slot):
+        self.caches = self._reset(self.caches, slot)
+
+
+class PipelinedEngine(_SlotEngine):
+    """Continuous-batching engine whose forward pass is split across
+    placed core stages.  API mirrors :class:`ServingEngine` (both share
+    the :class:`_SlotEngine` state machine); greedy outputs are
+    token-identical to it (tests/test_pipeline.py).
+
+    Simulated-network stats accumulate in :attr:`transfer_ms` /
+    :attr:`transfer_mb` / :attr:`hops` (keyed ``(src_node, dst_node)``).
+    """
+
+    def __init__(self, cfg, params=None, *, n_stages: int = 2,
+                 max_batch: int = 4, cache_len: int = 128, seed: int = 0,
+                 prefill_chunk: int = 16, net=None,
+                 placement: Optional[Dict[str, int]] = None,
+                 entry_node: Optional[int] = None):
+        assert 1 <= n_stages <= cfg.n_layers, (n_stages, cfg.n_layers)
+        super().__init__(cfg, max_batch=max_batch, cache_len=cache_len,
+                         prefill_chunk=prefill_chunk)
+        self.model = build_model(cfg)
+        key = jax.random.PRNGKey(seed)
+        self.params = params if params is not None else self.model.init(key)
+
+        self.stage_specs: List[StageSpec] = decompose(
+            cfg, n_core_stages=n_stages)
+        decoder = [s for s in self.stage_specs
+                   if s.kind == "core" and s.name != "encoder"]
+        self.stages = [
+            _CoreStage(self.model, self.params, spec,
+                       entry=(i == 0), exit_head=(i == len(decoder) - 1),
+                       max_batch=max_batch, cache_len=cache_len)
+            for i, spec in enumerate(decoder)]
+
+        self.net = net
+        self.entry_node = (entry_node if entry_node is not None
+                           else (int(net.user_ed[0]) if net is not None
+                                 else 0))
+        if placement:
+            self.set_placement(placement)
+        self._act_bytes = jnp.dtype(cfg.dtype).itemsize * cfg.d_model
+        self.transfer_ms = 0.0
+        self.transfer_mb = 0.0
+        self.hops: Dict[tuple, dict] = {}
+
+    # ------------------------------------------------------------------
+    # placement / profiling (the profile→place→execute loop)
+    # ------------------------------------------------------------------
+    def set_placement(self, placement: Dict[str, int]):
+        """Pin each stage to a node (unnamed stages keep their node)."""
+        for st in self.stages:
+            if st.name in placement:
+                st.node = int(placement[st.name])
+
+    @property
+    def placement(self) -> Dict[str, int]:
+        return {st.name: st.node for st in self.stages}
+
+    def profile(self, iters: int = 3) -> Dict[str, float]:
+        """Measured per-stage decode latency (ms) via
+        ``partition.profile_stage_ms`` — feed to :meth:`to_application`."""
+        out = {}
+        pos = jnp.zeros((self.max_batch,), jnp.int32)
+        for i, st in enumerate(self.stages):
+            if i == 0:
+                x = jnp.zeros((self.max_batch, 1), jnp.int32)
+            else:
+                x = jnp.zeros((self.max_batch, 1, self.cfg.d_model),
+                              jnp.dtype(self.cfg.dtype))
+            out[st.name] = profile_stage_ms(
+                lambda xx=x, ss=st: ss._decode(ss.params, ss.caches, xx,
+                                               pos)[0],
+                iters=iters)
+        return out
+
+    def to_application(self, rng: np.random.Generator,
+                       measured_ms: Optional[Dict[str, float]] = None,
+                       **kwargs):
+        """Bridge the executed pipeline back to the paper abstraction."""
+        return to_application(self.cfg, self.stage_specs, rng,
+                              measured_ms=measured_ms, **kwargs)
+
+    # ------------------------------------------------------------------
+    # network shim
+    # ------------------------------------------------------------------
+    def _ship(self, src: int, dst: int, mb: float):
+        if self.net is None or src == dst or mb <= 0.0:
+            return
+        ms = self.net.path_ms(src, dst, mb)
+        self.transfer_ms += ms
+        self.transfer_mb += mb
+        agg = self.hops.setdefault((src, dst),
+                                   {"count": 0, "mb": 0.0, "ms": 0.0})
+        agg["count"] += 1
+        agg["mb"] += mb
+        agg["ms"] += ms
+
+    # ------------------------------------------------------------------
+    # _SlotEngine hooks
+    # ------------------------------------------------------------------
+    def _reset_row(self, slot: int):
+        s = jnp.int32(slot)
+        for st in self.stages:
+            st.reset_row(s)
+
+    def _prefill_row(self, slot: int, toks: np.ndarray, pos0: int):
+        c = len(toks)
+        x = jnp.asarray(toks[None])
+        p0, sl = jnp.int32(pos0), jnp.int32(slot)
+        self._ship(self.entry_node, self.stages[0].node, c * 4 / 1e6)
+        for k, st in enumerate(self.stages):
+            x = st.prefill(x, p0, sl)
+            if k + 1 < len(self.stages):
+                self._ship(st.node, self.stages[k + 1].node,
+                           c * self._act_bytes / 1e6)
+
+    def _forward(self, tokens: np.ndarray, pos: np.ndarray,
+                 n_active: int):
+        x = jnp.asarray(tokens)
+        pos_j = jnp.asarray(pos)
+        self._ship(self.entry_node, self.stages[0].node, n_active * 4 / 1e6)
+        for k, st in enumerate(self.stages):
+            x = st.decode(x, pos_j)
+            if k + 1 < len(self.stages):
+                self._ship(st.node, self.stages[k + 1].node,
+                           n_active * self._act_bytes / 1e6)
+        # "sample" runs co-located with the exit stage; the emitted token
+        # id ships back to the entry node for detokenize
+        self._ship(self.stages[-1].node, self.entry_node, n_active * 4 / 1e6)
+        return x

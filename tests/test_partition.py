@@ -1,0 +1,66 @@
+"""microservice.partition invariants across every registered config."""
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.microservice.partition import decompose, to_application
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("n_stages", [1, 2, 4])
+def test_decompose_invariants(arch, n_stages):
+    cfg = get_config(arch)
+    stages = decompose(cfg, n_core_stages=n_stages)
+
+    assert all(s.kind in ("core", "light") for s in stages)
+    names = [s.name for s in stages]
+    assert names[0] == "tokenize" and names[-1] == "detokenize"
+    assert "sample" in names
+
+    # decoder core stages partition [0, n_layers) in order
+    dec = [s for s in stages if s.kind == "core" and s.name != "encoder"]
+    assert len(dec) == n_stages
+    assert dec[0].layer_range[0] == 0
+    assert dec[-1].layer_range[1] == cfg.n_layers
+    for a, b in zip(dec, dec[1:]):
+        assert a.layer_range[1] == b.layer_range[0]
+    for s in dec:
+        lo, hi = s.layer_range
+        assert lo < hi
+        assert s.flops_per_token > 0 and s.param_bytes > 0
+
+    # enc-dec models get a dedicated encoder core stage
+    enc = [s for s in stages if s.name == "encoder"]
+    if cfg.is_encoder_decoder:
+        assert len(enc) == 1 and enc[0].kind == "core"
+        assert enc[0].layer_range == (0, cfg.n_encoder_layers)
+    else:
+        assert not enc
+
+    # lights bracket the cores
+    kinds = [s.kind for s in stages]
+    first_core, last_core = kinds.index("core"), (
+        len(kinds) - 1 - kinds[::-1].index("core"))
+    assert all(k == "core" for k in kinds[first_core:last_core + 1])
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "mixtral-8x7b",
+                                  "seamless-m4t-medium"])
+def test_to_application_deterministic(arch):
+    cfg = get_config(arch)
+    stages = decompose(cfg, n_core_stages=2)
+    apps = [to_application(cfg, stages, np.random.default_rng(42),
+                           measured_ms={"stage0": 1.5})
+            for _ in range(2)]
+    for a, b in zip(apps[0].services, apps[1].services):
+        assert (a.name, a.kind) == (b.name, b.kind)
+        assert np.array_equal(a.r, b.r)
+        for f in ("a", "b", "f_det", "f_shape", "f_scale",
+                  "c_dp", "c_mt", "c_pl"):
+            assert getattr(a, f) == getattr(b, f), (a.name, f)
+    t0, t1 = apps[0].task_types[0], apps[1].task_types[0]
+    assert t0.edges == t1.edges and t0.deadline == t1.deadline
+    assert t0.validate_inverse_tree()
+    # pipeline is a chain: every service appears once, linearly ordered
+    assert t0.ms_ids == list(range(len(apps[0].services)))
+    assert t0.edges == [(i, i + 1) for i in range(len(t0.ms_ids) - 1)]

@@ -1,0 +1,180 @@
+"""Pipelined executor: parity with the monolithic engine, chunked
+prefill regression, stage slicing, and network-shim accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.network import make_network
+from repro.models import build_model
+from repro.serving import PipelinedEngine, Request, ServingEngine
+from repro.serving.engine import chunk_sizes
+from repro.serving.pipeline import PLACEMENT_STRATEGIES, place_stages
+
+PROMPTS = [[5, 6, 7, 2, 9, 3, 8, 1], [9, 10, 4], [11, 3, 5, 7, 2]]
+
+
+def _outputs(eng):
+    for i, p in enumerate(PROMPTS):
+        eng.submit(Request(id=i, prompt=list(p), max_new_tokens=5))
+    return {r.id: r.out_tokens for r in eng.run()}
+
+
+# ----------------------------------------------------------------------
+# tentpole acceptance: pipelined == monolithic, greedy, token-identical
+# (dense + MoE + SSM + weight-shared hybrid)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["smollm-360m", "mixtral-8x7b",
+                                  "falcon-mamba-7b", "zamba2-7b"])
+def test_pipelined_matches_monolithic(arch):
+    cfg = get_smoke_config(arch)
+    mono = _outputs(ServingEngine(cfg, max_batch=3, cache_len=32,
+                                  prefill_chunk=4))
+    pipe_eng = PipelinedEngine(cfg, n_stages=2, max_batch=3, cache_len=32,
+                               prefill_chunk=4)
+    piped = _outputs(pipe_eng)
+    assert piped == mono
+    assert len(pipe_eng.stages) == 2
+    # each stage owns a disjoint layer range covering the model
+    assert [(s.lo, s.hi) for s in pipe_eng.stages] == [(0, 1), (1, 2)]
+
+
+# ----------------------------------------------------------------------
+# satellite: greedy decode identical before/after chunked prefill
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["smollm-360m", "falcon-mamba-7b"])
+def test_chunked_prefill_identical_to_token_by_token(arch):
+    cfg = get_smoke_config(arch)
+    token_by_token = _outputs(ServingEngine(cfg, max_batch=3, cache_len=32,
+                                            prefill_chunk=1))
+    chunked = _outputs(ServingEngine(cfg, max_batch=3, cache_len=32,
+                                     prefill_chunk=8))
+    assert chunked == token_by_token
+
+
+@pytest.mark.parametrize("engine_cls", [ServingEngine, PipelinedEngine])
+def test_slot_reuse_isolated_from_previous_occupant(engine_cls):
+    """A request admitted into a freed slot must match a fresh engine:
+    stale KV is position-masked, but SSM recurrent/conv state is not —
+    the admitted row must be zeroed."""
+    cfg = get_smoke_config("falcon-mamba-7b")
+    probe = [7, 3, 9, 2]
+    fresh = engine_cls(cfg, max_batch=1, cache_len=32)
+    fresh.submit(Request(id=0, prompt=list(probe), max_new_tokens=4))
+    want = fresh.run()[0].out_tokens
+
+    reused = engine_cls(cfg, max_batch=1, cache_len=32)
+    reused.submit(Request(id=0, prompt=[5, 1, 6, 4, 2, 8], max_new_tokens=4))
+    reused.submit(Request(id=1, prompt=list(probe), max_new_tokens=4))
+    out = {r.id: r.out_tokens for r in reused.run()}
+    assert out[1] == want
+
+
+def test_engine_has_no_dead_last_token_attr():
+    cfg = get_smoke_config("smollm-360m")
+    eng = ServingEngine(cfg, max_batch=2, cache_len=32)
+    eng.submit(Request(id=0, prompt=[3, 1, 4], max_new_tokens=2))
+    eng.run()
+    assert not hasattr(eng, "_last_token")
+
+
+def test_chunk_sizes():
+    assert chunk_sizes(0, 16) == []
+    assert chunk_sizes(16, 16) == [16]
+    assert chunk_sizes(47, 16) == [16, 16, 8, 4, 2, 1]
+    for n in range(0, 70):
+        sizes = chunk_sizes(n, 16)
+        assert sum(sizes) == n
+        # bounded program-shape diversity: full chunks + powers of two
+        assert all(s == 16 or (s & (s - 1)) == 0 for s in sizes)
+
+
+# ----------------------------------------------------------------------
+# stage slicing: composing run_stages over consecutive ranges
+# reproduces the monolithic decode_step
+# ----------------------------------------------------------------------
+def test_run_stages_composes_to_decode_step():
+    cfg = get_smoke_config("smollm-360m")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    caches_full = m.init_cache(2, 16)
+    batch = {"token": jnp.array([[7], [3]], jnp.int32),
+             "pos": jnp.zeros((2,), jnp.int32)}
+    ref, _ = m.decode_step(params, caches_full, batch)
+
+    lo_p = m.stage_params(params, 0, 1, entry=True)
+    hi_p = m.stage_params(params, 1, 2, exit_head=True)
+    c0 = m.init_cache(2, 16, layers=(0, 1))
+    c1 = m.init_cache(2, 16, layers=(1, 2))
+    x, _, _ = m.run_stages(lo_p, batch["token"], 0, 1, mode="decode",
+                           pos=batch["pos"], caches=c0)
+    out, _, _ = m.run_stages(hi_p, x, 1, 2, mode="decode",
+                             pos=batch["pos"], caches=c1)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_stage_params_own_only_their_range():
+    cfg = get_smoke_config("mixtral-8x7b")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    full = sum(p.size for p in jax.tree.leaves(params["blocks"]))
+    sizes = [sum(p.size for p in jax.tree.leaves(
+        m.stage_params(params, lo, hi)["blocks"]))
+        for lo, hi in ((0, 1), (1, 2))]
+    assert sum(sizes) == full
+
+
+# ----------------------------------------------------------------------
+# network shim: placements price the activation hand-offs
+# ----------------------------------------------------------------------
+def test_transfer_accounting_follows_placement():
+    cfg = get_smoke_config("smollm-360m")
+    net = make_network(np.random.default_rng(0))
+    spread = PipelinedEngine(cfg, n_stages=2, max_batch=2, cache_len=32,
+                             net=net, placement={"stage0": 6, "stage1": 7},
+                             entry_node=0)
+    colo = PipelinedEngine(cfg, n_stages=2, max_batch=2, cache_len=32,
+                           net=net, placement={"stage0": 7, "stage1": 7},
+                           entry_node=0)
+    assert _outputs(spread) == _outputs(colo)  # placement never alters math
+    assert spread.transfer_ms > colo.transfer_ms  # inter-stage hop priced
+    assert (6, 7) in spread.hops and (6, 7) not in colo.hops
+    assert spread.transfer_mb > 0
+
+
+def test_place_stages_strategies():
+    cfg = get_smoke_config("smollm-360m")
+    rng = np.random.default_rng(0)
+    net = make_network(rng)
+    eng = PipelinedEngine(cfg, n_stages=2, max_batch=2, cache_len=32,
+                          net=net)
+    app = eng.to_application(np.random.default_rng(1),
+                             measured_ms={"stage0": 1.0, "stage1": 1.0})
+    es = set(int(v) for v in np.flatnonzero(net.is_es))
+    for strat in PLACEMENT_STRATEGIES:
+        pl = place_stages(app, net, strat, rng=np.random.default_rng(2))
+        assert set(pl) == {"stage0", "stage1"}
+        assert all(v in es for v in pl.values()), (strat, pl)
+    rr = place_stages(app, net, "round_robin")
+    assert len(set(rr.values())) == 2
+    with pytest.raises(ValueError):
+        place_stages(app, net, "nope")
+
+
+def test_profile_feeds_to_application():
+    """profile -> to_application closes the loop: core stage rates are
+    calibrated so a_m / f_m equals the measured latency."""
+    cfg = get_smoke_config("smollm-360m")
+    eng = PipelinedEngine(cfg, n_stages=2, max_batch=2, cache_len=32)
+    measured = eng.profile(iters=1)
+    assert set(measured) == {"stage0", "stage1"}
+    assert all(v > 0 for v in measured.values())
+    app = eng.to_application(np.random.default_rng(0),
+                             measured_ms=measured)
+    for m in app.core_ids:
+        ms = app.ms(m)
+        if ms.name in measured:
+            assert ms.a / ms.f_det == pytest.approx(measured[ms.name],
+                                                    rel=1e-6)
