@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke docs ci
+.PHONY: test smoke simbench docs ci
 
 # tier-1: must collect and pass with or without hypothesis installed
 test:
@@ -12,10 +12,15 @@ test:
 smoke:
 	$(PY) -m benchmarks.run --quick --scenario baseline
 
+# vectorized-vs-scalar simulator smoke: metric equality gates; the
+# printed trials/s + speedup-vs-floor are informational (noisy boxes)
+simbench:
+	$(PY) -m benchmarks.sim_bench --quick
+
 # docs gate: every relative link in *.md resolves, and the README
 # quickstart runs end-to-end
 docs:
 	$(PY) tools/check_docs.py
 	$(PY) examples/quickstart.py
 
-ci: test smoke docs
+ci: test smoke simbench docs

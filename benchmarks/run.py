@@ -5,6 +5,8 @@
   ablation kappa-diversity under failure churn (Sec. IV, C6)
   kernels  Pallas hot-spot microbenches        (name,us_per_call,derived)
   pipeline pipelined executor: tokens/s + per-hop transfer vs placement
+  simbench vectorized simulator core vs scalar reference (trials/s)
+  scale    scale_load population sweep via experiments.report
 
 Simulation sections fan trials out across processes through the
 replication runner (EXPERIMENTS.md §Harness) and write versioned JSON;
@@ -29,7 +31,7 @@ def main() -> None:
                     help="fewer trials (CI-sized)")
     ap.add_argument("--only", default=None,
                     choices=[None, "fig3", "fig4", "ablation", "kernels",
-                             "pipeline"])
+                             "pipeline", "simbench", "scale"])
     ap.add_argument("--scenario", default="baseline",
                     help="registered scenario for fig3/fig4 "
                          "(see --list-scenarios)")
@@ -71,6 +73,26 @@ def main() -> None:
         from benchmarks.fig4_load_scaling import main as fig4
         fig4(n_trials=trials4, horizon=horizon, out="bench_fig4.json",
              scenario=args.scenario, n_workers=args.workers)
+
+    # under --quick the simbench smoke runs as its own `make ci` step
+    # (`make simbench`), so the smoke chain skips it to avoid doubling up
+    if args.only == "simbench" or (args.only is None and not args.quick):
+        print("=" * 72)
+        print("## Simulator core — vectorized engine vs scalar reference "
+              "(metric equality gates; the trials/s floor is "
+              "informational)")
+        from benchmarks.sim_bench import main as sb
+        sb(scenario="baseline", out="bench_sim.json", quick=args.quick)
+
+    if args.only in (None, "scale"):
+        print("=" * 72)
+        print("## scale_load — population sweep "
+              "(reported via repro.experiments.report)")
+        from benchmarks.scale_load import main as sl
+        if args.quick:
+            sl(users=(10, 25), n_trials=1, n_workers=args.workers)
+        else:
+            sl(n_workers=args.workers)
 
     if args.only in (None, "ablation"):
         print("=" * 72)

@@ -1,0 +1,80 @@
+"""scale_load sweep: strategy robustness as the user population grows.
+
+Sweeps the ``scale_load_N`` / ``scale_load_tiered_N`` scenario family
+(10 -> 500 users on proportionally scaled topologies) through the
+parallel replication runner and reports per-(scenario, strategy)
+summaries via `repro.experiments.report`.  This is the load-scaling
+story the paper leads with — and the grid the scalar engine could not
+sweep (the vectorized core is what makes N >= 200 tractable; see
+benchmarks/sim_bench.py).
+
+The horizon shrinks as N grows (fixed ~per-trial event budget) so the
+sweep completes in minutes; the drain window is capped likewise.
+
+Usage: PYTHONPATH=src python -m benchmarks.scale_load
+           [--users 10,25,50,100,200] [--trials 2] [--tiered]
+           [--out bench_scale_load.json] [--workers N]
+"""
+from __future__ import annotations
+
+import argparse
+from typing import List, Sequence
+
+from repro.experiments.report import report
+from repro.experiments.results import save_results
+from repro.experiments.runner import TrialSpec, run_grid
+
+DEFAULT_USERS = (10, 25, 50, 100, 200)
+STRATEGIES = ("proposal", "lbrr")
+SEED_BASE = 3000   # disjoint from fig3 (0..) / fig4 (1000..)
+EVENT_BUDGET = 4800   # ~users * horizon kept constant across the sweep
+
+
+def horizon_for(n_users: int) -> int:
+    return min(60, max(10, EVENT_BUDGET // n_users))
+
+
+def make_specs(users: Sequence[int], n_trials: int,
+               tiered: bool = False,
+               strategies: Sequence[str] = STRATEGIES) -> List[TrialSpec]:
+    fam = "scale_load_tiered_{}" if tiered else "scale_load_{}"
+    return [TrialSpec(seed=SEED_BASE + s, strategy=name,
+                      scenario=fam.format(n),
+                      horizon_slots=horizon_for(n), drain_slots=150)
+            for n in users
+            for s in range(n_trials)
+            for name in strategies]
+
+
+def main(users: Sequence[int] = DEFAULT_USERS, n_trials: int = 2,
+         tiered: bool = False, out: str | None = "bench_scale_load.json",
+         n_workers: int | None = None) -> List[dict]:
+    specs = make_specs(users, n_trials, tiered=tiered)
+    print(f"# scale_load sweep: users={tuple(users)}, "
+          f"{n_trials} seeds x {STRATEGIES}, "
+          f"{'tiered' if tiered else 'two-tier'} topology "
+          f"({len(specs)} trials)")
+    rows = run_grid(specs, n_workers=n_workers, progress=True)
+    if out:
+        save_results(out, rows, meta={
+            "section": "scale_load", "users": tuple(users),
+            "n_trials": n_trials, "tiered": tiered,
+            "horizons": {n: horizon_for(n) for n in users}})
+        print(report([out], by=("scenario", "strategy")))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--users", default=",".join(map(str, DEFAULT_USERS)),
+                    help="comma-separated population sizes (must be "
+                         "registered scale_load_N scenarios)")
+    ap.add_argument("--trials", type=int, default=2,
+                    help="seeds per (population, strategy) cell")
+    ap.add_argument("--tiered", action="store_true",
+                    help="sweep the four-tier scale_load_tiered family")
+    ap.add_argument("--out", default="bench_scale_load.json")
+    ap.add_argument("--workers", type=int, default=None)
+    args = ap.parse_args()
+    main([int(u) for u in args.users.split(",")], args.trials,
+         tiered=args.tiered, out=args.out, n_workers=args.workers)

@@ -1,0 +1,110 @@
+"""Simulator-core bench: vectorized engine vs. the scalar reference.
+
+Runs the same baseline-scenario trial grid through
+
+  * `repro.core.simulator.Simulator` (vectorized flat-array engine), and
+  * `repro.core.simulator_scalar.ScalarSimulator` (the fixed-semantics
+    pre-vectorization engine, same RNG stream),
+
+asserts the metrics agree **trial-for-trial** (the scalar engine is the
+semantic oracle — any drift is a bug, not noise), and reports trials/s
+for both plus the wall-clock speedup.  The acceptance floor for this PR
+is a 5x speedup on the 20-trial grid; the CI smoke (`--quick`) prints
+the measured ratio against the floor but does not gate on it (shared CI
+boxes are noisy) — it *does* gate on metric equality.
+
+Timing JSON (via --out) embeds walltimes and is therefore NOT
+byte-identical across replays — only the metric rows are.
+
+Usage: PYTHONPATH=src python -m benchmarks.sim_bench
+           [--quick] [--trials N] [--horizon H] [--out sim_bench.json]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+from repro.core.simulator_scalar import run_one_scalar
+from repro.experiments.results import metrics_equal, save_results
+from repro.experiments.runner import TrialSpec, run_one
+
+SPEEDUP_FLOOR = 5.0
+STRATEGIES = ("proposal", "lbrr")
+
+
+def make_specs(n_trials: int, horizon: int,
+               scenario: str = "baseline") -> List[TrialSpec]:
+    n_seeds = -(-n_trials // len(STRATEGIES))
+    specs = [TrialSpec(seed=s, strategy=name, scenario=scenario,
+                       horizon_slots=horizon)
+             for s in range(n_seeds) for name in STRATEGIES]
+    return specs[:n_trials]
+
+
+def _diff(a: Dict, b: Dict) -> List[str]:
+    return [f"{k}: vectorized={a[k]!r} scalar={b[k]!r}"
+            for k in a if not metrics_equal({k: a[k]}, {k: b.get(k)})]
+
+
+def main(n_trials: int = 20, horizon: int = 40, scenario: str = "baseline",
+         out: str | None = None, quick: bool = False) -> dict:
+    if quick:
+        n_trials, horizon = 4, 16
+    specs = make_specs(n_trials, horizon, scenario)
+    print(f"# sim_bench: {len(specs)} trials, scenario={scenario}, "
+          f"horizon={horizon}, strategies={STRATEGIES}")
+
+    t0 = time.perf_counter()
+    vec = [run_one(s) for s in specs]
+    t_vec = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    scal = [run_one_scalar(s) for s in specs]
+    t_scal = time.perf_counter() - t0
+
+    mismatches = []
+    for spec, a, b in zip(specs, vec, scal):
+        if not metrics_equal(a, b):
+            mismatches.append((spec, _diff(a, b)))
+    if mismatches:
+        for spec, diffs in mismatches:
+            print(f"MISMATCH {spec.scenario}/{spec.strategy}/s{spec.seed}:")
+            for d in diffs:
+                print(f"  {d}")
+        raise SystemExit(
+            f"{len(mismatches)}/{len(specs)} trials diverged from the "
+            f"scalar reference — the vectorized engine broke semantics")
+
+    speedup = t_scal / max(t_vec, 1e-9)
+    tps_vec = len(specs) / max(t_vec, 1e-9)
+    tps_scal = len(specs) / max(t_scal, 1e-9)
+    verdict = "meets" if speedup >= SPEEDUP_FLOOR else "BELOW"
+    print(f"metrics: all {len(specs)} trials identical to the scalar "
+          f"reference")
+    print(f"vectorized: {t_vec:8.2f}s  ({tps_vec:7.2f} trials/s)")
+    print(f"scalar ref: {t_scal:8.2f}s  ({tps_scal:7.2f} trials/s)")
+    print(f"speedup:    {speedup:8.2f}x  ({verdict} the "
+          f"{SPEEDUP_FLOOR:.0f}x floor; informational in CI)")
+    summary = {"n_trials": len(specs), "scenario": scenario,
+               "horizon_slots": horizon, "wall_s_vectorized": t_vec,
+               "wall_s_scalar": t_scal, "speedup": speedup,
+               "trials_per_s_vectorized": tps_vec,
+               "trials_per_s_scalar": tps_scal,
+               "speedup_floor": SPEEDUP_FLOOR}
+    if out:
+        save_results(out, vec, meta={"section": "sim_bench", **summary})
+    return summary
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trials", type=int, default=20)
+    ap.add_argument("--horizon", type=int, default=40)
+    ap.add_argument("--scenario", default="baseline")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized: 4 trials, horizon 16")
+    args = ap.parse_args()
+    main(args.trials, args.horizon, args.scenario, args.out,
+         quick=args.quick)

@@ -5,9 +5,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core.effective_capacity import build_ec_maps
-from repro.core.qos import MeanLatencyModel, qos_scores
-from repro.core.simulator import SLOT_MS, Simulator
+from repro.core.simulator import Simulator
 
 Y_FIXED = 4   # LBRR / GA fixed parallelism level
 
@@ -105,20 +103,22 @@ class LBRRStrategy:
 
     def assign_light(self, t: float, sim: Simulator,
                      waiting: List[tuple]) -> List[tuple]:
-        live = list(sim.alive_instances(t))
-        for i in live:
-            i.y_now = i.y_at(t)
+        store = sim.store
+        alive = sim.alive_light_idx(t)
+        store.refresh_y(alive, t)
+        pools = {m: alive[store.m[alive] == m]
+                 for m in {mm for _, mm in waiting}}
         still = []
         for tid, m in waiting:
-            task = sim.tasks[tid]
-            opts = [i for i in live if i.m == m and i.y_now < Y_FIXED]
-            if not opts:
+            pa = pools[m]
+            cand = pa[store.y_now[pa] < Y_FIXED] if len(pa) else pa
+            if not len(cand):
                 still.append((tid, m))   # deadline-agnostic queueing
                 continue
-            inst = opts[self._rr % len(opts)]
+            inst = int(cand[self._rr % len(cand)])
             self._rr += 1
-            sim.commit_light(task, m, inst, now=t)
-            inst.y_now += 1
+            sim.commit_light(sim.tasks[tid], m, inst, now=t)
+            store.y_now[inst] += 1
         return still
 
 
@@ -252,18 +252,20 @@ class GAStrategy:
 
     def assign_light(self, t: float, sim: Simulator,
                      waiting: List[tuple]) -> List[tuple]:
-        live = list(sim.alive_instances(t))
-        for i in live:
-            i.y_now = i.y_at(t)
+        store = sim.store
+        alive = sim.alive_light_idx(t)
+        store.refresh_y(alive, t)
+        pools = {m: alive[store.m[alive] == m]
+                 for m in {mm for _, mm in waiting}}
         still = []
         for tid, m in waiting:
-            task = sim.tasks[tid]
-            opts = [i for i in live if i.m == m and i.y_now < Y_FIXED]
-            if not opts:
+            pa = pools[m]
+            cand = pa[store.y_now[pa] < Y_FIXED] if len(pa) else pa
+            if not len(cand):
                 still.append((tid, m))
                 continue
             # least-contended instance (GA fitness assumed balanced load)
-            inst = min(opts, key=lambda i: i.y_now)
-            sim.commit_light(task, m, inst, now=t)
-            inst.y_now += 1
+            inst = int(cand[int(np.argmin(store.y_now[cand]))])
+            sim.commit_light(sim.tasks[tid], m, inst, now=t)
+            store.y_now[inst] += 1
         return still

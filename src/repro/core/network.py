@@ -17,6 +17,20 @@ from repro.core import paper_params as pp
 # node tiers for heterogeneous topologies (make_tiered_network)
 TIER_DEVICE, TIER_ED, TIER_ES, TIER_CLOUD = 0, 1, 2, 3
 
+# canonical resource-column names for `EdgeNetwork.R` (Table I order);
+# use `resource_index` instead of hardcoding column numbers so consumers
+# stay correct if a narrower R matrix is supplied
+RESOURCE_NAMES = ("cpu", "ram", "gpu", "vram")
+
+
+def resource_index(name: str) -> int:
+    """Column index of a named resource in ``EdgeNetwork.R``."""
+    try:
+        return RESOURCE_NAMES.index(name)
+    except ValueError:
+        raise KeyError(f"unknown resource {name!r}; "
+                       f"known: {RESOURCE_NAMES}") from None
+
 
 @dataclass
 class EdgeNetwork:
@@ -35,6 +49,13 @@ class EdgeNetwork:
     # filled by prepare()
     hop_next: np.ndarray = field(default=None, repr=False)
     net_ms: np.ndarray = field(default=None, repr=False)
+    # routed-path transfer delay is affine in the payload:
+    #   path_ms(v1, v2, mb) = mb * path_invbw[v1, v2] + path_prop[v1, v2]
+    # (sum of per-hop 1/bw, and of per-hop dist/prop_speed, along the
+    # shortest-hop route); precomputed so the simulator can score whole
+    # candidate-node vectors at once
+    path_invbw: np.ndarray = field(default=None, repr=False)
+    path_prop: np.ndarray = field(default=None, repr=False)
 
     def __post_init__(self):
         if self.tier is None:  # classic two-tier topology
@@ -58,20 +79,17 @@ class EdgeNetwork:
         return mb / bw + self.dist[v1, v2] / self.prop_speed
 
     def path_ms(self, v1: int, v2: int, mb: float) -> float:
-        """Multi-hop routed transfer delay using the precomputed
-        shortest-hop tables."""
+        """Multi-hop routed transfer delay along the precomputed
+        shortest-hop route (affine in ``mb``)."""
         if v1 == v2:
             return 0.0
-        total = 0.0
-        cur = v1
-        guard = 0
-        while cur != v2:
-            nxt = int(self.hop_next[cur, v2])
-            total += self.link_ms(cur, nxt, mb)
-            cur = nxt
-            guard += 1
-            assert guard <= self.n_nodes, "routing loop"
-        return total
+        out = mb * self.path_invbw[v1, v2] + self.path_prop[v1, v2]
+        assert np.isfinite(out), f"no route {v1}->{v2}"
+        return float(out)
+
+    def path_ms_row(self, v1: int, mb: float) -> np.ndarray:
+        """Vector of routed transfer delays from ``v1`` to every node."""
+        return mb * self.path_invbw[v1] + self.path_prop[v1]
 
     def sample_uplink_ms(self, rng, u: int, payload_mb: float) -> float:
         """Eq. (1) with Nakagami-m fading SNR."""
@@ -79,6 +97,18 @@ class EdgeNetwork:
         gamma = rng.gamma(m, omega / m)  # Nakagami power ~ Gamma(m, omega/m)
         rate = self.user_bw[u] * np.log2(1.0 + gamma)
         return payload_mb / max(rate, 1e-6)
+
+    def sample_uplink_ms_batch(self, rng, users: np.ndarray,
+                               payload_mb: np.ndarray) -> np.ndarray:
+        """Eq. (1) for a batch of (user, payload) pairs — ONE Gamma draw
+        for the whole batch, so per-slot arrival sampling is a handful
+        of vector calls rather than per-task scalar draws."""
+        if len(users) == 0:
+            return np.zeros(0)
+        m, omega = self.snr_m[users], self.snr_omega[users]
+        gamma = rng.gamma(m, omega / m)
+        rate = self.user_bw[users] * np.log2(1.0 + gamma)
+        return payload_mb / np.maximum(rate, 1e-6)
 
     def mean_uplink_ms(self, u: int, payload_mb: float) -> float:
         """Mean-value analysis version of eq. (1): E[gamma] = omega for
@@ -110,6 +140,31 @@ class EdgeNetwork:
                 nxt[i, improved] = nxt[i, k]
         self.hop_next = nxt
         self.net_ms = w
+        # walk every route simultaneously to decompose path delay into
+        # its payload-proportional and propagation components (affine
+        # coefficients consumed by path_ms / path_ms_row)
+        with np.errstate(divide="ignore"):
+            edge_inv = np.where(self.bw > 0, 1.0 / np.where(
+                self.bw > 0, self.bw, 1.0), np.inf)
+        np.fill_diagonal(edge_inv, 0.0)
+        edge_prop = self.dist / self.prop_speed
+        invbw = np.zeros((v, v))
+        prop = np.zeros((v, v))
+        cur = np.tile(np.arange(v)[:, None], (1, v))
+        tgt = np.tile(np.arange(v)[None, :], (v, 1))
+        unreachable = nxt < 0
+        for _ in range(v):
+            act = (cur != tgt) & ~unreachable
+            if not act.any():
+                break
+            step = nxt[cur[act], tgt[act]]
+            invbw[act] += edge_inv[cur[act], step]
+            prop[act] += edge_prop[cur[act], step]
+            cur[act] = step
+        invbw[unreachable] = np.inf
+        prop[unreachable] = np.inf
+        self.path_invbw = invbw
+        self.path_prop = prop
         return self
 
 

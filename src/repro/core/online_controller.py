@@ -13,6 +13,14 @@ Implement the deployment with the most negative dL, repeat until none
 helps; finally route every waiting task to its min-dT instance (lines
 14-16), updating parallelism as we go.
 
+The controller is vectorized (EXPERIMENTS.md §Vectorized engine): per
+slot it builds one data-readiness matrix per waiting stage (tasks x
+nodes, via the affine routed-path tables), evaluates every candidate
+deployment's dL against whole node vectors per greedy round, and keeps
+the virtual queues H_j in a flat tid-indexed array.  The pre-PR scalar
+control flow is preserved decision-for-decision; the scalar reference
+in `repro.core.simulator_scalar` replays it loop-by-loop.
+
 Interpretation notes vs. the paper's pseudocode are in
 EXPERIMENTS.md §Algorithm 1 notes.
 """
@@ -24,11 +32,53 @@ import numpy as np
 
 from repro.core import static_placement as sp
 from repro.core.effective_capacity import build_ec_maps
-from repro.core.lyapunov import ETA, PHI_DEFAULT, VirtualQueues, ZETA
+from repro.core.lyapunov import ETA, PHI_DEFAULT, ZETA
 from repro.core.qos import qos_scores
 from repro.core.simulator import SLOT_MS, Simulator
 
 Y_MAX = 16  # practical parallelism cap (duration scales with y_eff)
+
+
+class ArrayQueues:
+    """Virtual queues H_j (eq. 18) in a flat tid-indexed array —
+    numerically identical to the dict-backed
+    :class:`repro.core.lyapunov.VirtualQueues`, but whole-cohort
+    updates are one masked vector op per slot."""
+
+    def __init__(self, zeta: float = ZETA):
+        self.zeta = zeta
+        self.h = np.full(256, zeta)
+
+    def _ensure(self, n: int):
+        cap = len(self.h)
+        if n <= cap:
+            return
+        while cap < n:
+            cap *= 2
+        new = np.full(cap, self.zeta)
+        new[:len(self.h)] = self.h
+        self.h = new
+
+    def admit(self, tid: int):
+        self._ensure(tid + 1)
+        self.h[tid] = self.zeta
+
+    def get(self, tid: int) -> float:
+        return float(self.h[tid]) if tid < len(self.h) else self.zeta
+
+    def get_many(self, tids: np.ndarray) -> np.ndarray:
+        self._ensure(int(tids.max()) + 1 if len(tids) else 0)
+        return self.h[tids]
+
+    def update_many(self, tids: np.ndarray, latency: np.ndarray,
+                    deadline: np.ndarray):
+        """Eq. (18): H <- max{H + T_j(t) - D_n, zeta}, batched."""
+        self._ensure(int(tids.max()) + 1 if len(tids) else 0)
+        self.h[tids] = np.maximum(self.h[tids] + latency - deadline,
+                                  self.zeta)
+
+    def drop(self, tid: int):
+        pass  # finished tasks simply stop being updated/queried
 
 
 class ProposalStrategy:
@@ -46,12 +96,18 @@ class ProposalStrategy:
         self.eta = eta
         self.phi = phi
         self.horizon = horizon_slots
-        self.queues = VirtualQueues(zeta=ZETA)
+        self.queues = ArrayQueues(zeta=ZETA)
 
     # ------------------------------------------------------------------
     def place_core(self, app, net) -> Dict[int, np.ndarray]:
         self.app, self.net = app, net
         self.ec = build_ec_maps(app, self.eps)
+        # per light MS: the g_{m,eps}(y) table (or the mean-value table
+        # for the PropAvg ablation) and its parallelism cap
+        self._g_tab = {
+            m: (ec.mean_table if self.use_mean_estimate else ec.table)
+            for m, ec in self.ec.items()}
+        self._y_cap = {m: ec.y_max for m, ec in self.ec.items()}
         z, q = qos_scores(app, net)
         prob = sp.build_problem(app, net, z, q, kappa=self.kappa,
                                 xi=self.xi, horizon_slots=self.horizon)
@@ -65,106 +121,138 @@ class ProposalStrategy:
         self.queues.drop(task.id)
 
     def end_slot(self, t: float, sim: Simulator):
-        # eq. (18) update for tasks still in flight
-        for tid, task in sim.tasks.items():
-            if task.finish is None:
-                self.queues.update(tid, (t + 1) - task.t_gen,
-                                   task.tt.deadline)
+        # eq. (18) update for tasks still in flight, as one vector op
+        n = len(sim.tasks)
+        ids = np.flatnonzero(sim.task_open[:n])
+        if len(ids):
+            self.queues.update_many(ids,
+                                    (t + 1.0) - sim.task_t_gen[ids],
+                                    sim.task_deadline[ids])
 
     # ------------------------------------------------------------------
-    def _estimate(self, m: int, y: int) -> float:
-        ec = self.ec[m]
-        return ec.g_mean(y) if self.use_mean_estimate else ec.g(y)
-
-    def _dt(self, sim, task, m, v, y, now) -> float:
-        """Next-hop latency from `now`: remaining transfer+prop of inputs
-        to v + QoS-aware processing estimate."""
-        arrive = task.data_ready_at(m, sim.net, v)
-        return max(0.0, arrive - now) + self._estimate(m, y)
+    def _g(self, m: int, y) -> np.ndarray:
+        """g_{m,eps}(y) table lookup, vectorized over y (clipped like
+        ECMap.g)."""
+        return self._g_tab[m][np.minimum(y, self._y_cap[m]) - 1]
 
     def assign_light(self, t: float, sim: Simulator,
                      waiting: List[tuple]) -> List[tuple]:
-        app, net = sim.app, sim.net
+        app, net, store = sim.app, sim.net, sim.store
         waiting = [(tid, m) for tid, m in waiting]
         if not waiting:
             return []
 
         # live instances and remaining capacity (busy instances are
         # reusable — g_{m,eps}(y+1) prices their contention)
-        live = {i.id: i for i in sim.alive_instances(t)}
-        for i in live.values():
-            i.y_now = i.y_at(t)
+        alive = sim.alive_light_idx(t)
+        store.refresh_y(alive, t)
         free_r = net.R - sim.light_resources_used(t)
         for m, xv in sim.x_cr.items():   # cores always reserve their share
             free_r -= xv[:, None] * app.ms(m).r[None, :]
         free_r = np.maximum(free_r, 0.0)
 
-        new_instances: List = []
+        # ---------------- per-stage matrices (one build per slot) -------
+        stages = sorted({m for _, m in waiting})
+        by_m = {m: [j for j, (_, mm) in enumerate(waiting) if mm == m]
+                for m in stages}
+        h_all = self.queues.get_many(
+            np.array([tid for tid, _ in waiting], dtype=np.int64))
+        # wait[m][row, v] = max(0, data_ready_at(m, v) - t): the
+        # transfer+propagation half of dT for every (task, node) pair
+        wait = {}
+        row_of = {}
+        for m in stages:
+            rows = [np.maximum(
+                sim.tasks[waiting[j][0]].data_ready_at_nodes(m, net) - t,
+                0.0) for j in by_m[m]]
+            wait[m] = np.stack(rows)
+            row_of[m] = {j: r for r, j in enumerate(by_m[m])}
+        # instance pools per stage (spawn order), and the defer vector:
+        # best dT via an existing instance, floored by 1-slot queueing
+        pools = {m: [int(i) for i in alive[store.m[alive] == m]]
+                 for m in stages}
+        defer = {}
+        for m in stages:
+            d = np.full(len(by_m[m]),
+                        SLOT_MS + float(self._g(m, np.int64(1))))
+            if pools[m]:
+                pa = np.array(pools[m])
+                dts = (wait[m][:, store.v[pa]]
+                       + self._g(m, store.y_now[pa] + 1)[None, :])
+                d = np.minimum(d, dts.min(axis=1))
+            defer[m] = d
 
-        def feasible(v, m):
-            if v in sim.dead_nodes:
-                return False
-            return bool((free_r[v] >= app.ms(m).r).all())
-
-        def candidates(ms_needed):
-            return [(v, m) for m in ms_needed for v in range(net.n_nodes)
-                    if feasible(v, m)]
+        dead = np.fromiter(sim.dead_nodes, dtype=np.int64) \
+            if sim.dead_nodes else None
 
         # ---------------- greedy deployment loop (Algorithm 1) ----------
         while True:
-            ms_needed = {m for _, m in waiting}
-            best = (0.0, None, None)
-            for v, m in candidates(ms_needed):
+            best_dl, best_v, best_m = 0.0, None, None
+            for m in stages:
                 ms = app.ms(m)
+                feas = (free_r >= ms.r[None, :]).all(axis=1)
+                if dead is not None:
+                    feas[dead] = False
+                vv = np.flatnonzero(feas)
+                if not len(vv):
+                    continue
                 cost_new = self.eta * (ms.c_dp + ms.c_mt + ms.c_pl)
-                gain = 0.0
-                y_hyp = 0
-                for tid, mm in waiting:
-                    if mm != m:
-                        continue
-                    task = sim.tasks[tid]
-                    dt_new = self._dt(sim, task, m, v, y_hyp + 1, t)
-                    # defer option: best existing instance or 1-slot wait
-                    defer = SLOT_MS + self._estimate(m, 1)
-                    for inst in live.values():
-                        if inst.m == m:
-                            defer = min(defer, self._dt(
-                                sim, task, m, inst.v, inst.y_now + 1, t))
-                    for inst in new_instances:
-                        if inst.m == m:
-                            defer = min(defer, self._dt(
-                                sim, task, m, inst.v, inst.y_now + 1, t))
-                    if dt_new < defer:
-                        h = self.queues.get(tid)
-                        gain += self.phi * h * (defer - dt_new)
-                        y_hyp += 1
+                w_sub = wait[m][:, vv]                       # J x F
+                d_m = defer[m]
+                y_hyp = np.zeros(len(vv), dtype=np.int64)
+                gain = np.zeros(len(vv))
+                # only tasks capturable on at least one candidate node
+                # can move y_hyp or gain (g is increasing in y, so
+                # wait + g(1) is a lower bound on their dT)
+                g1 = float(self._g(m, np.int64(1)))
+                js = np.flatnonzero(
+                    ((w_sub + g1) < d_m[:, None]).any(axis=1))
+                for j in js:
+                    dt_new = w_sub[j] + self._g(m, y_hyp + 1)
+                    cap = dt_new < d_m[j]
+                    if cap.any():
+                        gain = np.where(
+                            cap,
+                            gain + self.phi * h_all[by_m[m][j]]
+                            * (d_m[j] - dt_new),
+                            gain)
+                        y_hyp += cap
                 dl = cost_new - gain
-                if dl < best[0]:
-                    best = (dl, v, m)
-            if best[1] is None:
+                k = int(np.argmin(dl))
+                if dl[k] < best_dl:
+                    best_dl, best_v, best_m = float(dl[k]), int(vv[k]), m
+            if best_v is None:
                 break
-            _, v, m = best
-            inst = sim.spawn_instance(v, m, t)
-            new_instances.append(inst)
-            free_r[v] -= app.ms(m).r
+            inst = sim.spawn_instance(best_v, best_m, t)
+            pools[best_m].append(inst)
+            free_r[best_v] -= app.ms(best_m).r
+            # the fresh instance (y_now = 0) tightens only its stage's
+            # defer vector
+            defer[best_m] = np.minimum(
+                defer[best_m],
+                wait[best_m][:, best_v]
+                + float(self._g(best_m, np.int64(1))))
 
         # ---------------- routing (lines 14-16) -------------------------
-        pool = list(live.values()) + new_instances
+        order = sorted(range(len(waiting)), key=lambda j: -h_all[j])
         still = []
-        order = sorted(waiting,
-                       key=lambda wm: -self.queues.get(wm[0]))
-        for tid, m in order:
-            task = sim.tasks[tid]
-            opts = [i for i in pool if i.m == m and i.y_now < Y_MAX]
-            if not opts:
+        pool_arr = {m: np.array(pools[m], dtype=np.int64) for m in stages}
+        for j in order:
+            tid, m = waiting[j]
+            pa = pool_arr[m]
+            if len(pa):
+                ok = store.y_now[pa] < Y_MAX
+                cand = pa[ok]
+            else:
+                cand = pa
+            if not len(cand):
                 still.append((tid, m))
                 continue
-            dts = [self._dt(sim, task, m, i.v, i.y_now + 1, t)
-                   for i in opts]
-            k = int(np.argmin(dts))
-            inst = opts[k]
-            sim.commit_light(task, m, inst, now=t)
-            inst.y_now += 1
+            dts = (wait[m][row_of[m][j], store.v[cand]]
+                   + self._g(m, store.y_now[cand] + 1))
+            inst = int(cand[int(np.argmin(dts))])
+            sim.commit_light(sim.tasks[tid], m, inst, now=t)
+            store.y_now[inst] += 1
         return still
 
 

@@ -38,14 +38,17 @@ class MeanLatencyModel:
     def mean_proc(self, m: int) -> float:
         return self.app.ms(m).mean_proc_ms()
 
-    def d_pr(self, u: int, tt: TaskType, v: int, m: int) -> float:
-        """Mean completion time of everything before m, if m runs at v.
+    def d_pr_vec(self, u: int, tt: TaskType, m: int) -> np.ndarray:
+        """Mean completion time of everything before m, for every
+        candidate node v at once.
 
         Recursive eq. (4) with mean values; parent services are assumed
-        placed along the min-latency node (shortest-path relaxation of the
-        circular routing dependency — see DESIGN.md §7).  Memoized.
-        """
-        key = (u, tt.idx, v, m)
+        placed along the min-latency node (shortest-path relaxation of
+        the circular routing dependency — see DESIGN.md §7).  Each
+        parent hop is one min-plus matrix reduction over the node mesh
+        (the old per-(v, v') double loop recursed millions of times on
+        scale_load topologies).  Memoized per (u, type, m)."""
+        key = (u, tt.idx, m)
         if key in self._memo:
             return self._memo[key]
         ed = self.net.user_ed[u]
@@ -53,22 +56,22 @@ class MeanLatencyModel:
         if not parents:
             # first service: uplink + transfer of the input payload
             up = self.net.mean_uplink_ms(u, tt.payload)
-            move = (self.net.net_ms[ed, v] / 1.0) * tt.payload
-            out = up + move
-            self._memo[key] = out
-            return out
-        vals = []
-        for p in parents:
-            # parent served at its own best node v', then ships b_p to v
-            best = np.inf
-            for vp in range(self.net.n_nodes):
-                t_prev = self.d_pr(u, tt, vp, p) + self.mean_proc(p)
-                move = (self.net.net_ms[vp, v] / 1.0) * self.app.ms(p).b
-                best = min(best, t_prev + move)
-            vals.append(best)
-        out = max(vals)
+            out = up + (self.net.net_ms[ed] / 1.0) * tt.payload
+        else:
+            vals = []
+            for p in parents:
+                # parent served at its own best node v', then ships b_p
+                # to v: best[v] = min_v' (prev[v'] + net_ms[v', v] * b_p)
+                prev = self.d_pr_vec(u, tt, p) + self.mean_proc(p)
+                vals.append((prev[:, None] + (self.net.net_ms / 1.0)
+                             * self.app.ms(p).b).min(axis=0))
+            out = np.maximum.reduce(vals)
         self._memo[key] = out
         return out
+
+    def d_pr(self, u: int, tt: TaskType, v: int, m: int) -> float:
+        """Scalar view of :meth:`d_pr_vec` (kept for API compat)."""
+        return float(self.d_pr_vec(u, tt, m)[v])
 
     def d_su(self, tt: TaskType, m: int) -> float:
         return sum(self.mean_proc(d) for d in tt.descendants(m))
@@ -82,15 +85,6 @@ def qos_scores(app: Application, net: EdgeNetwork):
     z_tilde = {m: np.zeros(v_n) for m in core}
     q_score = {m: np.zeros(v_n) for m in core}
 
-    # memoize d_pr per (u, tt, v, m)
-    memo = {}
-
-    def dpr(u, tt, v, m):
-        key = (u, tt.idx, v, m)
-        if key not in memo:
-            memo[key] = model.d_pr(u, tt, v, m)
-        return memo[key]
-
     for m in core:
         for tt in app.types_using(m):
             d_su = model.d_su(tt, m)
@@ -99,7 +93,7 @@ def qos_scores(app: Application, net: EdgeNetwork):
             # (constraint (10) counts tasks *in service*, not arrivals)
             conc = tt.rate * model.mean_proc(m)
             for u in range(net.n_users):
-                d_pre = np.array([dpr(u, tt, v, m) for v in range(v_n)])
+                d_pre = model.d_pr_vec(u, tt, m)
                 # eq. (15): exponential-decay apportioning of E[z]
                 wgt = np.exp(-DELTA * d_pre)
                 wgt = wgt / wgt.sum()

@@ -12,13 +12,24 @@ decisions at 1 ms slot boundaries:
   strategies only see their own estimates (effective-capacity or mean).
 
 Costs follow eqs (6)-(7); metrics: completion rate, on-time rate, cost.
+
+The hot paths are vectorized over flat numpy arrays (EXPERIMENTS.md
+§Vectorized engine): arrivals are ONE Poisson draw per slot over the
+users x task-type grid (`draw_arrivals`), light-instance state lives in
+column arrays (`InstanceStore`) so aliveness / resource usage / cost
+accrual are masked reductions, and data-readiness is evaluated for
+whole candidate-node vectors at once via the affine routed-path tables
+of `EdgeNetwork.prepare`.  `repro.core.simulator_scalar` keeps the
+fixed-semantics scalar reference engine that consumes the identical RNG
+stream — `benchmarks/sim_bench.py` checks the two agree trial-for-trial
+and tracks the speedup.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -26,6 +37,12 @@ from repro.core.graph import Application, TaskType
 from repro.core.network import EdgeNetwork
 
 SLOT_MS = 1.0
+
+# commit_light service sampling: blocks of ~3x the expected slot count
+# are drawn until the cumulative service covers the workload; after this
+# many blocks we raise — the pre-vectorization engine silently scheduled
+# the task to finish early instead, shortening its true service time
+MAX_SERVICE_BLOCKS = 1024
 
 
 @dataclass(frozen=True)
@@ -48,6 +65,10 @@ class Task:
     user: int
     t_gen: float
     ed: int                      # entry node
+    # when the wireless uplink of the input payload completes; t_gen is
+    # the generation instant (E2E latency reference).  Optional so
+    # hand-built Tasks degrade to "payload present at t_gen".
+    uplink_done: Optional[float] = None
     done: Dict[int, float] = field(default_factory=dict)   # ms -> finish t
     loc: Dict[int, int] = field(default_factory=dict)      # ms -> node
     dispatched: set = field(default_factory=set)
@@ -70,9 +91,12 @@ class Task:
         """When all of m's input data can be present on node v."""
         parents = self.tt.parents(m)
         if not parents:
-            # input payload sits at the entry ED after uplink (t_gen
-            # already includes uplink; payload moves ED -> v)
-            return self.t_gen + net.path_ms(self.ed, v, self.tt.payload)
+            # input payload sits at the entry ED once the uplink has
+            # finished (NOT at t_gen: the old code re-set t_gen to the
+            # generation instant after construction, so source stages
+            # saw their data one uplink too early); payload moves ED->v
+            up = self.t_gen if self.uplink_done is None else self.uplink_done
+            return up + net.path_ms(self.ed, v, self.tt.payload)
         t = 0.0
         for p in parents:
             tp = self.done[p] + net.path_ms(self.loc[p], v,
@@ -80,25 +104,149 @@ class Task:
             t = max(t, tp)
         return t
 
+    def data_ready_at_nodes(self, m: int, net: EdgeNetwork,
+                            nodes: Optional[np.ndarray] = None
+                            ) -> np.ndarray:
+        """Vector of `data_ready_at(m, net, v)` over `nodes` (all nodes
+        when omitted); elementwise identical to the scalar method."""
+        def route_row(src: int, mb: float) -> np.ndarray:
+            if nodes is None:
+                return net.path_ms_row(src, mb)
+            return (mb * net.path_invbw[src, nodes]
+                    + net.path_prop[src, nodes])
+
+        parents = self.tt.parents(m)
+        if not parents:
+            up = self.t_gen if self.uplink_done is None else self.uplink_done
+            return up + route_row(self.ed, self.tt.payload)
+        acc = None
+        for p in parents:
+            row = self.done[p] + route_row(self.loc[p], self._b(p))
+            acc = row if acc is None else np.maximum(acc, row)
+        return acc
+
     def _b(self, m):  # filled by simulator (app reference shortcut)
         return self._app.ms(m).b
 
 
-@dataclass
-class LightInstance:
-    id: int
-    v: int
-    m: int
-    born: float
-    busy_until: float = 0.0
-    y_now: int = 0                                   # assigned this slot
-    persistent: bool = False                         # static allocation
-    active: List[float] = field(default_factory=list)  # finish times
+# ----------------------------------------------------------------------
+# Shared stochastic kernels (vectorized engine AND the scalar reference
+# call these, so both consume the identical RNG stream)
+# ----------------------------------------------------------------------
+def draw_arrivals(rng: np.random.Generator, net: EdgeNetwork,
+                  app: Application, t_slot: int, mult: float
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                             np.ndarray]:
+    """Batched per-slot arrival sampling: one Poisson draw over the
+    users x task-type grid, one uniform batch of generation offsets,
+    one fading batch of uplink delays.  Tasks are ordered (user-major,
+    type-minor) to match the old nested-loop generation order."""
+    rates = np.array([tt.rate for tt in app.task_types])
+    lam = np.broadcast_to(rates * (mult * SLOT_MS),
+                          (net.n_users, len(rates)))
+    counts = rng.poisson(lam)
+    total = int(counts.sum())
+    if total == 0:
+        z = np.zeros(0)
+        return np.zeros(0, dtype=int), np.zeros(0, dtype=int), z, z
+    u_idx = np.repeat(np.arange(net.n_users), counts.sum(axis=1))
+    tt_idx = np.repeat(np.tile(np.arange(len(rates)), net.n_users),
+                       counts.ravel())
+    t_gen = t_slot + rng.uniform(0.0, SLOT_MS, size=total)
+    payloads = np.array([tt.payload for tt in app.task_types])[tt_idx]
+    uplink = net.sample_uplink_ms_batch(rng, u_idx, payloads)
+    return u_idx, tt_idx, t_gen, uplink
 
-    def y_at(self, now: float) -> int:
-        """Concurrent tasks on this instance at time `now`."""
-        self.active = [f for f in self.active if f > now]
-        return len(self.active)
+
+def sample_service_ms(rng: np.random.Generator, ms, work: float) -> float:
+    """True light-service duration from the paper's cumulative service
+    process F(0,t) = sum_tau f_m(tau) with i.i.d. Gamma per-slot rates:
+    the task (admitted at concurrency y_eff, so `work` = y_eff * a)
+    completes in the first slot where the cumulative service reaches its
+    scaled workload.  Blocks are drawn until the workload is covered —
+    raising after MAX_SERVICE_BLOCKS rather than ever silently
+    scheduling an early finish."""
+    n_exp = max(4, int(3 * work / max(ms.f_mean, 1e-6)) + 4)
+    dur = 0.0
+    for _ in range(MAX_SERVICE_BLOCKS):
+        f = np.maximum(rng.gamma(ms.f_shape, ms.f_scale, size=n_exp), 1e-6)
+        cum = np.cumsum(f) * SLOT_MS
+        if cum[-1] >= work:
+            i = int(np.searchsorted(cum, work))
+            prev = cum[i - 1] if i else 0.0
+            return dur + i * SLOT_MS + (work - prev) / f[i]
+        work -= cum[-1]
+        dur += n_exp * SLOT_MS
+    raise RuntimeError(
+        f"cumulative Gamma service for MS {ms.name!r} did not cover the "
+        f"workload after {MAX_SERVICE_BLOCKS} blocks of {n_exp} slots — "
+        f"the service-rate parameters are degenerate for this workload")
+
+
+class InstanceStore:
+    """Flat column-array state for light-MS instances (replaces the
+    per-object ``LightInstance`` list): node, service, birth, busy
+    horizon and current-slot parallelism live in numpy arrays so
+    aliveness, resource usage and cost accrual reduce over masks; the
+    per-instance in-flight finish times stay as small pruned lists."""
+
+    _COLS = ("v", "m", "born", "busy_until", "persistent", "y_now")
+
+    def __init__(self, cap: int = 64):
+        self.n = 0
+        self.v = np.zeros(cap, dtype=np.int64)
+        self.m = np.zeros(cap, dtype=np.int64)
+        self.born = np.zeros(cap)
+        self.busy_until = np.zeros(cap)
+        self.persistent = np.zeros(cap, dtype=bool)
+        self.y_now = np.zeros(cap, dtype=np.int64)
+        self.active: List[List[float]] = []
+
+    def _grow(self):
+        cap = max(64, 2 * len(self.v))
+        for name in self._COLS:
+            arr = getattr(self, name)
+            new = np.zeros(cap, dtype=arr.dtype)
+            new[:self.n] = arr[:self.n]
+            setattr(self, name, new)
+
+    def spawn(self, v: int, m: int, born: float,
+              persistent: bool = False) -> int:
+        if self.n == len(self.v):
+            self._grow()
+        i = self.n
+        self.v[i] = v
+        self.m[i] = m
+        self.born[i] = born
+        self.busy_until[i] = 0.0
+        self.persistent[i] = persistent
+        self.y_now[i] = 0
+        self.active.append([])
+        self.n += 1
+        return i
+
+    def y_at(self, i: int, now: float) -> int:
+        """Concurrent tasks on instance i at time `now` (prunes
+        finished entries)."""
+        lst = [f for f in self.active[i] if f > now]
+        self.active[i] = lst
+        return len(lst)
+
+    def refresh_y(self, idx: np.ndarray, now: float) -> None:
+        """Recompute y_now for the given instances at slot time."""
+        for i in idx:
+            self.y_now[i] = self.y_at(int(i), now)
+
+    def alive_mask(self, now: float, dead_nodes) -> np.ndarray:
+        """Alive = persistent, still busy, or spawned within the last
+        slot — and not homed on a failed node."""
+        n = self.n
+        alive = (self.persistent[:n] | (self.busy_until[:n] > now)
+                 | (self.born[:n] >= now - SLOT_MS))
+        if dead_nodes:
+            alive &= ~np.isin(self.v[:n], np.fromiter(
+                dead_nodes, dtype=np.int64))
+        return alive
 
 
 class Simulator:
@@ -139,11 +287,20 @@ class Simulator:
         # core state
         self.x_cr: Dict[int, np.ndarray] = {}
         self.core_free: Dict[tuple, np.ndarray] = {}
+        self._core_hosts: Dict[int, np.ndarray] = {}
         # light state
-        self.instances: List[LightInstance] = []
-        self._inst_ids = itertools.count()
+        self.store = InstanceStore()
         self.light_cost = 0.0
-        self.prev_alive: Dict[tuple, int] = {}
+        self._prev_alive_counts: Optional[np.ndarray] = None
+        # (M, K) stacked per-MS resource requirement rows
+        self._r_stack = np.stack([ms.r for ms in app.services])
+        # flat tid-indexed task ledgers for vectorized controllers and
+        # metrics (mirrors the Task objects)
+        cap = 256
+        self.task_t_gen = np.zeros(cap)
+        self.task_deadline = np.zeros(cap)
+        self.task_finish = np.full(cap, np.nan)
+        self.task_open = np.zeros(cap, dtype=bool)
         # metrics
         self.n_generated = 0
 
@@ -156,6 +313,7 @@ class Simulator:
             for v in range(self.net.n_nodes):
                 if xv[v] > 0:
                     self.core_free[(v, m)] = np.zeros(int(xv[v]))
+            self._core_hosts[m] = np.flatnonzero(np.asarray(xv) > 0)
         # capacity left for lights
         used = np.zeros_like(self.net.R)
         for m, xv in self.x_cr.items():
@@ -172,27 +330,45 @@ class Simulator:
     # ------------------------------------------------------------------
     # Arrivals
     # ------------------------------------------------------------------
+    def _ensure_task_cap(self, n: int):
+        cap = len(self.task_t_gen)
+        if n <= cap:
+            return
+        while cap < n:
+            cap *= 2
+        for name in ("task_t_gen", "task_deadline", "task_finish",
+                     "task_open"):
+            arr = getattr(self, name)
+            fill = np.nan if name == "task_finish" else 0
+            new = np.full(cap, fill, dtype=arr.dtype)
+            new[:len(arr)] = arr
+            setattr(self, name, new)
+
     def _generate(self, t_slot: int):
         mult = (self.arrival_modulation(t_slot)
                 if self.arrival_modulation is not None else 1.0)
-        for u in range(self.net.n_users):
-            for tt in self.app.task_types:
-                n = self.rng.poisson(tt.rate * mult * SLOT_MS)
-                for _ in range(n):
-                    t_gen = t_slot + self.rng.uniform(0, SLOT_MS)
-                    tid = next(self._task_ids)
-                    up = self.net.sample_uplink_ms(self.rng, u, tt.payload)
-                    task = Task(id=tid, tt=tt, user=u,
-                                t_gen=t_gen + up,
-                                ed=int(self.net.user_ed[u]))
-                    task.t_gen = t_gen  # E2E measured from generation
-                    task._uplink_done = t_gen + up
-                    task._app = self.app
-                    self.tasks[tid] = task
-                    self.n_generated += 1
-                    if hasattr(self.strategy, "admit"):
-                        self.strategy.admit(task)
-                    self._advance_task(task, now=t_gen + up)
+        u_idx, tt_idx, t_gen, uplink = draw_arrivals(
+            self.rng, self.net, self.app, t_slot, mult)
+        total = len(u_idx)
+        if total == 0:
+            return
+        self._ensure_task_cap(len(self.tasks) + total)
+        for k in range(total):
+            tid = next(self._task_ids)
+            tt = self.app.task_types[int(tt_idx[k])]
+            task = Task(id=tid, tt=tt, user=int(u_idx[k]),
+                        t_gen=float(t_gen[k]),
+                        ed=int(self.net.user_ed[u_idx[k]]),
+                        uplink_done=float(t_gen[k] + uplink[k]))
+            task._app = self.app
+            self.tasks[tid] = task
+            self.task_t_gen[tid] = task.t_gen
+            self.task_deadline[tid] = tt.deadline
+            self.task_open[tid] = True
+            self.n_generated += 1
+            if hasattr(self.strategy, "admit"):
+                self.strategy.admit(task)
+            self._advance_task(task, now=task.uplink_done)
 
     # ------------------------------------------------------------------
     # DAG progression
@@ -207,16 +383,22 @@ class Simulator:
 
     def _dispatch_core(self, task: Task, m: int, now: float):
         ms = self.app.ms(m)
+        hosts = self._core_hosts.get(m)
         best = None
-        for (v, mm), free in self.core_free.items():
-            if mm != m or v in self.dead_nodes:
-                continue
-            ready = max(task.data_ready_at(m, self.net, v), now)
-            i = int(np.argmin(free))
-            start = max(ready, free[i])
-            fin = start + ms.a / ms.f_det
-            if best is None or fin < best[0]:
-                best = (fin, v, i)
+        if hosts is not None and len(hosts):
+            ready_nodes = task.data_ready_at_nodes(m, self.net, hosts)
+            proc = ms.a / ms.f_det
+            for h in range(len(hosts)):
+                v = int(hosts[h])
+                if v in self.dead_nodes:
+                    continue
+                ready = max(float(ready_nodes[h]), now)
+                free = self.core_free[(v, m)]
+                i = int(np.argmin(free))
+                start = max(ready, free[i])
+                fin = start + proc
+                if best is None or fin < best[0]:
+                    best = (fin, v, i)
         if best is None:   # no instance anywhere: task cannot complete
             task.dispatched.add(m)
             return
@@ -226,72 +408,59 @@ class Simulator:
         heapq.heappush(self.events,
                        (fin, next(self._seq), task.id, m, v))
 
-    def commit_light(self, task: Task, m: int, inst: LightInstance,
-                     now: float):
-        """Strategy decided: run stage m of task on `inst`.
-
-        True duration follows the paper's cumulative service process
-        F(0,t) = sum_tau f_m(tau) with i.i.d. Gamma per-slot rates: the
-        task (admitted at concurrency y_eff, so it must see y_eff * a of
-        aggregate work through its share) completes in the first slot
-        where the cumulative service reaches its scaled workload."""
+    def commit_light(self, task: Task, m: int, inst: int, now: float):
+        """Strategy decided: run stage m of task on store instance
+        index `inst`; samples the true Gamma service duration."""
         ms = self.app.ms(m)
-        ready = max(task.data_ready_at(m, self.net, inst.v), now)
-        y_eff = inst.y_at(ready) + 1
-        work = ms.a * y_eff
-        # vectorized: draw a block sized ~3x the expected slot count
-        n_exp = max(4, int(3 * work / max(ms.f_mean, 1e-6)) + 4)
-        dur = 0.0
-        for _ in range(8):  # geometric retry, cap ~8*n_exp slots
-            f = np.maximum(self.rng.gamma(ms.f_shape, ms.f_scale,
-                                          size=n_exp), 1e-6)
-            cum = np.cumsum(f) * SLOT_MS
-            if cum[-1] >= work:
-                i = int(np.searchsorted(cum, work))
-                prev = cum[i - 1] if i else 0.0
-                dur += i * SLOT_MS + (work - prev) / f[i]
-                break
-            work -= cum[-1]
-            dur += n_exp * SLOT_MS
+        store = self.store
+        v = int(store.v[inst])
+        ready = max(task.data_ready_at(m, self.net, v), now)
+        y_eff = store.y_at(inst, ready) + 1
+        dur = sample_service_ms(self.rng, ms, ms.a * y_eff)
         fin = ready + dur
-        inst.busy_until = max(inst.busy_until, fin)
-        inst.active.append(fin)
+        store.busy_until[inst] = max(store.busy_until[inst], fin)
+        store.active[inst].append(fin)
         heapq.heappush(self.events,
-                       (fin, next(self._seq), task.id, m, inst.v))
+                       (fin, next(self._seq), task.id, m, v))
 
     def spawn_instance(self, v: int, m: int, now: float,
-                       persistent: bool = False) -> LightInstance:
+                       persistent: bool = False) -> int:
         assert v not in self.dead_nodes, "cannot place on a failed node"
-        inst = LightInstance(id=next(self._inst_ids), v=v, m=m, born=now,
-                             persistent=persistent)
-        self.instances.append(inst)
-        return inst
+        return self.store.spawn(v, m, now, persistent)
 
     # ------------------------------------------------------------------
     # Per-slot accounting
     # ------------------------------------------------------------------
-    def alive_instances(self, now: float) -> List[LightInstance]:
-        return [i for i in self.instances
-                if i.v not in self.dead_nodes
-                and (i.persistent or i.busy_until > now
-                     or i.born >= now - SLOT_MS)]
+    def alive_light_idx(self, now: float) -> np.ndarray:
+        """Indices of alive light instances, in spawn order."""
+        return np.flatnonzero(self.store.alive_mask(now, self.dead_nodes))
 
     def light_resources_used(self, now: float) -> np.ndarray:
         used = np.zeros_like(self.net.R)
-        for inst in self.alive_instances(now):
-            used[inst.v] += self.app.ms(inst.m).r
+        idx = self.alive_light_idx(now)
+        if len(idx):
+            np.add.at(used, self.store.v[idx],
+                      self._r_stack[self.store.m[idx]])
         return used
 
     def _accrue_light_cost(self, t: float):
-        alive = self.alive_instances(t)
-        counts: Dict[tuple, int] = {}
-        for inst in alive:
-            counts[(inst.v, inst.m)] = counts.get((inst.v, inst.m), 0) + 1
-        for (v, m), c in counts.items():
+        idx = self.alive_light_idx(t)
+        n_ms = len(self.app.services)
+        counts = np.bincount(self.store.v[idx] * n_ms + self.store.m[idx],
+                             minlength=self.net.n_nodes * n_ms)
+        prev = self._prev_alive_counts
+        if prev is None:
+            prev = np.zeros_like(counts)
+        # iterate occupied (v, m) cells in sorted order (the scalar
+        # reference iterates sorted too, so the float accumulation
+        # order — hence the cost bits — matches exactly)
+        for k in np.flatnonzero(counts):
+            m = int(k) % n_ms
             ms = self.app.ms(m)
-            newly = max(0, c - self.prev_alive.get((v, m), 0))
+            c = int(counts[k])
+            newly = max(0, c - int(prev[k]))
             self.light_cost += ms.c_dp * newly + (ms.c_mt + ms.c_pl) * c
-        self.prev_alive = counts
+        self._prev_alive_counts = counts
 
     # ------------------------------------------------------------------
     # Main loop
@@ -323,6 +492,8 @@ class Simulator:
                 task.loc[m] = v
                 if m == task.tt.sink():
                     task.finish = fin
+                    self.task_finish[tid] = fin
+                    self.task_open[tid] = False
                     if hasattr(self.strategy, "task_done"):
                         self.strategy.task_done(task)
                 else:
@@ -335,20 +506,23 @@ class Simulator:
         return self.metrics()
 
     def metrics(self) -> dict:
-        fin = [t for t in self.tasks.values() if t.finish is not None]
-        on_time = [t for t in fin
-                   if t.finish - t.t_gen <= t.tt.deadline]
+        n_tasks = len(self.tasks)
+        finish = self.task_finish[:n_tasks]
+        t_gen = self.task_t_gen[:n_tasks]
+        fin_mask = ~np.isnan(finish)
+        lat = finish[fin_mask] - t_gen[fin_mask]
+        on_time = int((lat <= self.task_deadline[:n_tasks][fin_mask]).sum())
         n = max(self.n_generated, 1)
-        lat = [t.finish - t.t_gen for t in fin]
         return {
             "strategy": getattr(self.strategy, "name", "?"),
             "generated": self.n_generated,
-            "completed": len(fin) / n,
-            "on_time": len(on_time) / n,
+            "completed": int(fin_mask.sum()) / n,
+            "on_time": on_time / n,
             "core_cost": self.core_cost(),
             "light_cost": self.light_cost,
             "total_cost": self.core_cost() + self.light_cost,
-            "mean_latency_ms": float(np.mean(lat)) if lat else float("nan"),
-            "p95_latency_ms": float(np.percentile(lat, 95)) if lat
+            "mean_latency_ms": float(np.mean(lat)) if len(lat)
+            else float("nan"),
+            "p95_latency_ms": float(np.percentile(lat, 95)) if len(lat)
             else float("nan"),
         }

@@ -6,7 +6,9 @@ Entry points:
     seed x strategy x scenario replication grid across processes;
   * `repro.experiments.scenarios.get_scenario` / `list_scenarios` — the
     named workload/environment dynamics registry;
-  * `repro.experiments.results` — versioned machine-readable JSON.
+  * `repro.experiments.results` — versioned machine-readable JSON;
+  * `repro.experiments.report` — markdown summary tables from results
+    files (``python -m repro.experiments.report FILE --by keys``).
 
 See EXPERIMENTS.md for the CLI and schema documentation.
 """

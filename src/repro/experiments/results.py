@@ -64,6 +64,25 @@ def load_results(path: str) -> Tuple[List[Dict], Dict]:
 # ----------------------------------------------------------------------
 # Aggregation
 # ----------------------------------------------------------------------
+def metrics_equal(a: Dict, b: Dict) -> bool:
+    """Exact equality for trial-metric dicts, with NaN == NaN.
+
+    Empty trials (nothing completed) have NaN latency percentiles in
+    BOTH engines; plain dict `==` would flag those identical rows as
+    divergent (nan != nan), so equality gates (benchmarks/sim_bench.py,
+    tests/test_vectorized_replay.py) use this instead."""
+    if a.keys() != b.keys():
+        return False
+    for k, va in a.items():
+        vb = b[k]
+        if (isinstance(va, float) and isinstance(vb, float)
+                and math.isnan(va) and math.isnan(vb)):
+            continue
+        if va != vb:
+            return False
+    return True
+
+
 def summarize_rows(rows: Iterable[Dict],
                    keys: Sequence[str] = ("scenario", "strategy",
                                           "rate_multiplier")

@@ -42,6 +42,7 @@ class TrialSpec:
     scenario: str = "baseline"
     rate_multiplier: float = 1.0
     horizon_slots: int = 100
+    drain_slots: int = 400          # post-horizon completion window
     eps: float = 0.2
     kappa: Optional[int] = None     # proposal diversity override
 
@@ -50,12 +51,14 @@ def make_grid(seeds: Iterable[int],
               strategies: Optional[Sequence[str]] = None,
               scenarios: Sequence[str] = ("baseline",),
               rate_multipliers: Sequence[float] = (1.0,),
-              horizon_slots: int = 100, eps: float = 0.2,
+              horizon_slots: int = 100, drain_slots: int = 400,
+              eps: float = 0.2,
               kappas: Sequence[Optional[int]] = (None,)) -> List[TrialSpec]:
     """Cartesian replication grid in deterministic order."""
     return [TrialSpec(seed=int(seed), strategy=name, scenario=scen,
                       rate_multiplier=float(mult),
-                      horizon_slots=horizon_slots, eps=eps, kappa=kappa)
+                      horizon_slots=horizon_slots,
+                      drain_slots=drain_slots, eps=eps, kappa=kappa)
             for scen in scenarios
             for mult in rate_multipliers
             for seed in seeds
@@ -81,11 +84,13 @@ def run_one(spec: TrialSpec) -> Dict:
                     rng=spawn_rng(spec.seed, sid,
                                   stable_seed(spec.strategy)),
                     horizon_slots=spec.horizon_slots,
+                    drain_slots=spec.drain_slots,
                     churn=churn, arrival_modulation=modulation)
     m = sim.run()
     m.update(seed=spec.seed, scenario=spec.scenario,
              rate_multiplier=spec.rate_multiplier,
-             horizon_slots=spec.horizon_slots, eps=spec.eps,
+             horizon_slots=spec.horizon_slots,
+             drain_slots=spec.drain_slots, eps=spec.eps,
              kappa=spec.kappa)
     return m
 

@@ -15,6 +15,10 @@ Registered scenarios:
   failure_churn  rolling edge-server outages with recovery
   skewed_mix     one task type dominates the arrival mix
   tiered         heterogeneous cloud / edge / device network
+  scale_load_N          N-user population on a proportionally scaled
+                        two-tier metro (N in SCALE_LOAD_USERS, 10..500)
+  scale_load_tiered_N   same sweep over the four-tier cloud/edge/device
+                        topology (the `tiered` pairing)
 
 Scenarios are instantiated per trial (they may hold rng state for the
 modulation process); everything they sample is driven by generators the
@@ -26,6 +30,7 @@ from typing import Callable, Dict, List, Optional, Type
 
 import numpy as np
 
+from repro.core import paper_params as pp_defaults
 from repro.core.graph import Application, make_application
 from repro.core.network import EdgeNetwork, make_network, make_tiered_network
 from repro.core.simulator import ChurnEvent
@@ -189,3 +194,53 @@ class TieredScenario(Scenario):
 
     def build_network(self, rng):
         return make_tiered_network(rng)
+
+
+# ----------------------------------------------------------------------
+# scale_load family: population scaling (the vectorized engine's raison
+# d'etre — the scalar loop ground to a halt past a few dozen users)
+# ----------------------------------------------------------------------
+SCALE_LOAD_USERS = (10, 25, 50, 100, 200, 500)
+
+
+class ScaleLoadScenario(Scenario):
+    """``scale_load_N``: N users on a two-tier metro whose node counts
+    grow with the population (~4 users per ED / per ES vs. the
+    baseline's 1.5), so both aggregate load and per-node contention
+    rise with N.  Everything else is the paper's Table-I instance."""
+
+    n_users = 10
+
+    def _topo(self):
+        n_eds = max(pp_defaults.N_EDS, -(-self.n_users // 4))
+        n_ess = max(pp_defaults.N_ESS, -(-self.n_users // 4))
+        return n_eds, n_ess
+
+    def build_network(self, rng):
+        n_eds, n_ess = self._topo()
+        return make_network(rng, n_eds=n_eds, n_ess=n_ess,
+                            n_users=self.n_users)
+
+
+class ScaleLoadTieredScenario(ScaleLoadScenario):
+    """``scale_load_tiered_N``: the same population sweep entering the
+    four-tier cloud/edge/device topology (devices scale with users; one
+    far cloud absorbs the overflow)."""
+
+    def build_network(self, rng):
+        n_eds, n_ess = self._topo()
+        return make_tiered_network(rng,
+                                   n_devices=max(4, -(-self.n_users // 8)),
+                                   n_eds=n_eds, n_ess=n_ess,
+                                   n_users=self.n_users)
+
+
+for _n in SCALE_LOAD_USERS:
+    register(type(f"ScaleLoad{_n}", (ScaleLoadScenario,), {
+        "name": f"scale_load_{_n}", "n_users": _n,
+        "description": (f"{_n} users on a proportionally scaled two-tier "
+                        f"metro (scale_load family)")}))
+    register(type(f"ScaleLoadTiered{_n}", (ScaleLoadTieredScenario,), {
+        "name": f"scale_load_tiered_{_n}", "n_users": _n,
+        "description": (f"{_n} users on a proportionally scaled four-tier "
+                        f"cloud/edge/device network (scale_load family)")}))

@@ -101,8 +101,14 @@ class _SlotEngine:
             if not self.queue:
                 break
             req = self.queue.pop(0)
-            assert len(req.prompt) <= self.cache_len, \
-                f"prompt of {len(req.prompt)} exceeds cache_len {self.cache_len}"
+            # admission must leave max_new_tokens of cache headroom: the
+            # decode loop stops a slot at pos >= cache_len - 1, so a
+            # prompt of exactly cache_len used to pass the old
+            # prompt-only assert and then finish after a SINGLE decode
+            # step, silently truncating the request
+            assert len(req.prompt) + req.max_new_tokens <= self.cache_len, \
+                (f"prompt of {len(req.prompt)} + max_new_tokens "
+                 f"{req.max_new_tokens} exceeds cache_len {self.cache_len}")
             self.slots[slot] = req
             self._reset_row(slot)
             toks = req.prompt[:-1]

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import static_placement as sp
+from repro.core.network import resource_index
 from repro.core.qos import qos_scores
 from repro.microservice.partition import (StageSpec, decompose,
                                           profile_stage_ms, to_application)
@@ -71,7 +72,15 @@ def place_stages(app, net, strategy: str = "static_ip", *, kappa: int = 2,
         return {app.ms(m).name: (int(np.argmax(x[m])) if x[m].sum() > 0
                                  else es[0]) for m in core}
     if strategy == "colocate":
-        v = es[int(np.argmax(net.R[es, 2]))]  # fattest GPU among ESs
+        # fattest GPU among ESs — by the named resource column, falling
+        # back to total capacity when R is narrower than Table I's
+        # [CPU, RAM, GPU, VRAM] layout
+        gpu = resource_index("gpu")
+        if net.R.shape[1] > gpu:
+            score = net.R[es, gpu]
+        else:
+            score = net.R[es].sum(axis=1)
+        v = es[int(np.argmax(score))]
         return {app.ms(m).name: v for m in core}
     if strategy == "round_robin":
         return {app.ms(m).name: es[i % len(es)] for i, m in enumerate(core)}

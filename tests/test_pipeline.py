@@ -178,3 +178,19 @@ def test_profile_feeds_to_application():
         if ms.name in measured:
             assert ms.a / ms.f_det == pytest.approx(measured[ms.name],
                                                     rel=1e-6)
+
+
+def test_pipelined_admission_honors_max_new_tokens_headroom():
+    """Same cache-boundary contract as the monolithic engine (the slot
+    state machine is shared; both engines must refuse a request whose
+    prompt + max_new_tokens exceed the cache)."""
+    cfg = get_smoke_config("smollm-360m")
+    eng = PipelinedEngine(cfg, n_stages=2, max_batch=1, cache_len=16)
+    eng.submit(Request(id=0, prompt=list(range(1, 11)), max_new_tokens=6))
+    (done,) = eng.run()
+    assert len(done.out_tokens) == 6
+
+    eng2 = PipelinedEngine(cfg, n_stages=2, max_batch=1, cache_len=16)
+    eng2.submit(Request(id=1, prompt=list(range(1, 17)), max_new_tokens=4))
+    with pytest.raises(AssertionError):
+        eng2.run()

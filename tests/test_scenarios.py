@@ -12,17 +12,42 @@ from repro.experiments.runner import make_grid, run_grid
 from repro.experiments.scenarios import (DiurnalModulation, MMPPModulation,
                                          get_scenario, list_scenarios)
 
-SCENARIOS = tuple(list_scenarios())
+# every-strategy grid coverage runs the classic six plus the smallest
+# scale_load populations (the larger ones are exercised by
+# tests/test_vectorized_replay.py and benchmarks/scale_load.py)
+SCENARIOS = ("baseline", "bursty_mmpp", "diurnal", "failure_churn",
+             "skewed_mix", "tiered", "scale_load_10",
+             "scale_load_tiered_10")
 STRATS = tuple(STRATEGIES)
 
 
 def test_registry_contents():
+    from repro.experiments.scenarios import SCALE_LOAD_USERS
     assert {"baseline", "bursty_mmpp", "diurnal",
-            "failure_churn", "tiered"} <= set(SCENARIOS)
+            "failure_churn", "tiered"} <= set(list_scenarios())
+    assert 200 in SCALE_LOAD_USERS and max(SCALE_LOAD_USERS) >= 500
+    for n in SCALE_LOAD_USERS:
+        assert f"scale_load_{n}" in list_scenarios()
+        assert f"scale_load_tiered_{n}" in list_scenarios()
     with pytest.raises(KeyError):
         get_scenario("no_such_scenario")
     for name, desc in list_scenarios().items():
         assert desc, name
+
+
+def test_scale_load_topology_scales_with_population():
+    """scale_load_N grows users AND nodes: the 200-user metro has
+    proportionally more EDs/ESs; the tiered variant gains devices."""
+    small = get_scenario("scale_load_10").build_network(spawn_rng(0))
+    big = get_scenario("scale_load_200").build_network(spawn_rng(0))
+    assert small.n_users == 10 and big.n_users == 200
+    assert big.n_nodes > small.n_nodes
+    assert big.is_es.sum() > small.is_es.sum()
+    tiered = get_scenario("scale_load_tiered_200").build_network(
+        spawn_rng(0))
+    assert tiered.n_users == 200
+    assert (tiered.tier == TIER_DEVICE).sum() >= 4
+    assert (tiered.tier == TIER_CLOUD).sum() >= 1
 
 
 @pytest.fixture(scope="module")

@@ -57,3 +57,21 @@ def test_encdec_decompose_has_encoder_core():
     cfg = get_smoke_config("seamless-m4t-medium")
     stages = decompose(cfg, n_core_stages=2)
     assert any(s.name == "encoder" for s in stages)
+
+
+def test_admission_honors_max_new_tokens_headroom():
+    """Cache-boundary regression: a prompt of exactly cache_len used to
+    pass the admission assert and then finish after ONE decode step
+    (pos >= cache_len - 1).  Admission now requires max_new_tokens of
+    headroom, so an admitted request always generates in full."""
+    cfg = get_smoke_config("smollm-360m")
+    eng = ServingEngine(cfg, max_batch=1, cache_len=16)
+    # boundary fit: prompt + max_new_tokens == cache_len -> full output
+    eng.submit(Request(id=0, prompt=list(range(1, 11)), max_new_tokens=6))
+    (done,) = eng.run()
+    assert len(done.out_tokens) == 6
+
+    eng2 = ServingEngine(cfg, max_batch=1, cache_len=16)
+    eng2.submit(Request(id=1, prompt=list(range(1, 17)), max_new_tokens=4))
+    with pytest.raises(AssertionError):
+        eng2.run()

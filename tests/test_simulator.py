@@ -88,4 +88,114 @@ def test_node_failure_degrades_but_not_zero():
                        horizon_slots=20, drain_slots=200,
                        fail_node=6, fail_at=10).run()
     assert failed["completed"] <= base["completed"] + 1e-9
-    assert failed["completed"] > 0.2   # spread backbone survives
+    # tasks keep completing (pre-failure cohort + surviving sites).  The
+    # old threshold of 0.2 encoded two pre-PR bugs that inflated
+    # completions past the failure window: source stages started one
+    # uplink too early, and slow services were silently truncated at 8
+    # sample blocks (EXPERIMENTS.md §Vectorized engine, metric drift).
+    # Fixed-semantics value for this seed is ~0.061 (kappa counts TOTAL
+    # open sites, so this placement concentrates C1-C3 on the failed
+    # node); 0.03 keeps headroom while still catching a collapse to
+    # "only the first slots' tasks finish".
+    assert failed["completed"] > 0.03
+    assert base["completed"] > 0.9     # no-failure run is healthy
+
+
+# ----------------------------------------------------------------------
+# PR 3 regressions: uplink-gated source readiness, no silent service
+# truncation, vectorized data-readiness parity
+# ----------------------------------------------------------------------
+def test_source_stage_waits_for_uplink():
+    """`data_ready_at` for a source stage must gate on the uplink
+    finishing, not on t_gen (the old code re-set t_gen after
+    construction, so the payload was considered present one full uplink
+    too early)."""
+    from repro.core.simulator import Task
+    rng = np.random.default_rng(21)
+    app = make_application(rng)
+    net = make_network(rng)
+    tt = app.task_types[0]
+    src = tt.sources()[0]
+    ed = int(net.user_ed[0])
+    task = Task(id=0, tt=tt, user=0, t_gen=0.0, ed=ed, uplink_done=7.5)
+    task._app = app
+    # on the entry node itself there is no transfer: ready == uplink end
+    assert task.data_ready_at(src, net, ed) == pytest.approx(7.5)
+    for v in range(net.n_nodes):
+        assert task.data_ready_at(src, net, v) >= 7.5
+    # hand-built tasks without an uplink degrade to t_gen
+    bare = Task(id=1, tt=tt, user=0, t_gen=3.0, ed=ed)
+    bare._app = app
+    assert bare.data_ready_at(src, net, ed) == pytest.approx(3.0)
+
+
+def test_data_ready_vectorized_matches_scalar():
+    """data_ready_at_nodes is elementwise identical to data_ready_at,
+    for source stages (uplink + payload route) and merge stages
+    (max over parent ship-outs)."""
+    from repro.core.simulator import Task
+    rng = np.random.default_rng(22)
+    app = make_application(rng)
+    net = make_network(rng)
+    tt = app.task_types[2]          # three-branch fusion type
+    merge = [m for m in tt.ms_ids if len(tt.parents(m)) > 1][0]
+    task = Task(id=0, tt=tt, user=0, t_gen=0.0, ed=int(net.user_ed[0]),
+                uplink_done=2.0)
+    task._app = app
+    for i, p in enumerate(tt.parents(merge)):
+        task.done[p] = 5.0 + i
+        task.loc[p] = i % net.n_nodes
+    for m in (tt.sources()[0], merge):
+        rows = task.data_ready_at_nodes(m, net)
+        for v in range(net.n_nodes):
+            assert rows[v] == task.data_ready_at(m, net, v), (m, v)
+
+
+class _BlockRng:
+    """Stub rng: `gamma` yields `tiny` rate blocks for the first
+    `n_tiny` calls, then `big` blocks."""
+
+    def __init__(self, n_tiny, tiny=1e-6, big=4.0):
+        self.calls = 0
+        self.n_tiny = n_tiny
+        self.tiny = tiny
+        self.big = big
+
+    def gamma(self, shape, scale, size):
+        self.calls += 1
+        val = self.tiny if self.calls <= self.n_tiny else self.big
+        return np.full(size, val)
+
+
+def test_service_sampling_never_truncates():
+    """The cumulative Gamma service process must run until the workload
+    is covered: the old engine gave up after 8 blocks and scheduled the
+    finish anyway, silently shortening the service time."""
+    from types import SimpleNamespace
+    from repro.core.simulator import (MAX_SERVICE_BLOCKS, SLOT_MS,
+                                      sample_service_ms)
+    ms = SimpleNamespace(name="L*", f_shape=1.0, f_scale=1.0, f_mean=1.0)
+    work = 10.0
+    n_exp = max(4, int(3 * work / ms.f_mean) + 4)
+    # 12 near-zero blocks (the old cap was 8) before service resumes
+    rng = _BlockRng(n_tiny=12)
+    dur = sample_service_ms(rng, ms, work)
+    assert dur > 12 * n_exp * SLOT_MS      # waited through all 12 blocks
+    assert rng.calls == 13
+    # a degenerate process raises instead of under-scheduling
+    with pytest.raises(RuntimeError):
+        sample_service_ms(_BlockRng(n_tiny=10 ** 9, big=1e-6), ms, work)
+
+
+def test_commit_light_duration_covers_workload():
+    """End-to-end: a committed light stage's sampled finish time is
+    consistent with the workload actually being served (never the old
+    8-block cap)."""
+    from repro.core.simulator import sample_service_ms
+    rng = np.random.default_rng(5)
+    app = make_application(rng)
+    ms = app.ms(app.light_ids[0])
+    for _ in range(200):
+        work = ms.a * float(rng.integers(1, 6))
+        dur = sample_service_ms(rng, ms, work)
+        assert dur > 0.0

@@ -1,0 +1,64 @@
+"""Vectorized-engine determinism locks (PR 3).
+
+1. The vectorized `Simulator` reproduces the fixed-semantics scalar
+   reference (`repro.core.simulator_scalar`) metric-for-metric at fixed
+   seeds — the scalar engine is the oracle, any drift is a bug.
+2. Replay determinism survives the vectorization: the same grid yields
+   byte-identical results JSON regardless of worker count, over the
+   full scenario registry including the scale_load family.
+"""
+import pytest
+
+from repro.core.simulator_scalar import run_one_scalar
+from repro.experiments import results
+from repro.experiments.results import metrics_equal
+from repro.experiments.runner import TrialSpec, run_grid, run_one
+from repro.experiments.scenarios import SCALE_LOAD_USERS, list_scenarios
+
+ALL_SCENARIOS = tuple(list_scenarios())
+
+
+def _assert_same(a, b):
+    # metrics_equal, not `==`: empty trials carry NaN latency metrics
+    # in both engines, and nan != nan would flag them as divergent
+    assert metrics_equal(a, b), {k: (a[k], b[k]) for k in a
+                                 if not metrics_equal({k: a[k]},
+                                                      {k: b.get(k)})}
+
+
+@pytest.mark.parametrize("strategy", ["proposal", "prop_avg", "lbrr", "ga"])
+def test_vectorized_matches_scalar_reference(strategy):
+    """Every strategy, trial-for-trial identical metrics dicts."""
+    spec = TrialSpec(seed=5, strategy=strategy, scenario="baseline",
+                     horizon_slots=10, drain_slots=200)
+    _assert_same(run_one(spec), run_one_scalar(spec))
+
+
+@pytest.mark.parametrize("scenario",
+                         ["bursty_mmpp", "failure_churn", "tiered",
+                          "scale_load_10", "scale_load_tiered_10"])
+def test_vectorized_matches_scalar_reference_across_scenarios(scenario):
+    spec = TrialSpec(seed=2, strategy="proposal", scenario=scenario,
+                     horizon_slots=8, drain_slots=150)
+    _assert_same(run_one(spec), run_one_scalar(spec))
+
+
+def test_full_registry_replay_is_worker_count_invariant():
+    """Same grid -> byte-identical serialized results JSON for 1 vs 2
+    workers, across the ENTIRE scenario registry (classic six + every
+    scale_load population)."""
+    assert {f"scale_load_{n}" for n in SCALE_LOAD_USERS} <= \
+        set(ALL_SCENARIOS)
+    assert {f"scale_load_tiered_{n}" for n in SCALE_LOAD_USERS} <= \
+        set(ALL_SCENARIOS)
+    # lbrr everywhere (cheap, exercises scenario/env streams), plus the
+    # full controller on a classic and a scale_load cell
+    specs = [TrialSpec(seed=1, strategy="lbrr", scenario=s,
+                       horizon_slots=3, drain_slots=60)
+             for s in ALL_SCENARIOS]
+    specs += [TrialSpec(seed=1, strategy="proposal", scenario=s,
+                        horizon_slots=3, drain_slots=60)
+              for s in ("baseline", "scale_load_25")]
+    seq = run_grid(specs, n_workers=1)
+    par = run_grid(specs, n_workers=2)
+    assert results.dumps(seq) == results.dumps(par)
