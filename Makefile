@@ -17,8 +17,9 @@ smoke:
 simbench:
 	$(PY) -m benchmarks.sim_bench --quick
 
-# docs gate: every relative link in *.md resolves, and the README
-# quickstart runs end-to-end
+# docs gate: every relative link in *.md resolves, quoted source-file
+# references in README/ARCHITECTURE/EXPERIMENTS/SERVING point at real
+# files, and the README quickstart runs end-to-end
 docs:
 	$(PY) tools/check_docs.py
 	$(PY) examples/quickstart.py

@@ -1,0 +1,240 @@
+"""Paged vs dense serving at equal cache memory on a scenario trace.
+
+The dense engines reserve one full ``cache_len`` KV row per slot, so
+memory — not compute — caps concurrency: a mixed-length workload
+strands most of the cache inside over-provisioned rows.  The paged
+engine spends the *same* token-slot budget as a block pool
+(``num_blocks * block_size == max_batch * cache_len``) with token-level
+admission, so short requests pack densely and concurrency is bounded
+by actual usage (SERVING.md §Paged vs dense).
+
+For each configured architecture the driver
+
+  1. synthesizes a deterministic mixed-length request trace whose
+     arrival process comes from a registered scenario's modulation
+     (`src/repro/experiments/scenarios.py` — bursty_mmpp gives the
+     paged engine the most to absorb),
+  2. replays the identical trace through ``ServingEngine`` (dense
+     slots) and ``PagedServingEngine`` (continuous batching) at equal
+     cache memory,
+  3. reports sustained/peak concurrency, cache utilization, tokens/s,
+     per-request queueing and completion latency (step units, from the
+     ``Request.t_*`` stamps), preemption count, and greedy-output
+     parity.
+
+Wall-clock tokens/s is host-dependent (like pipeline_bench); the
+concurrency/utilization/latency columns and the outputs are
+deterministic given ``--seed`` (EXPERIMENTS.md §Reading bench JSON).
+
+Config caveats.  The default architectures are full-attention AND
+*batch-decoupled*, for two reasons:
+
+* the equal-memory framing is only exact when the cache is KV-
+  dominated — SSM/conv state (and per-request SWA rings / cross
+  blocks) scale with decode *rows*, not pooled tokens, so on e.g. a
+  pure-SSM config the pool constrains nothing and a ``max_rows``
+  advantage is a memory grant, not paging;
+* capacity-factor MoE routing (`src/repro/models/moe.py`) prioritizes
+  expert slots across the whole co-batched token set, so under
+  capacity pressure a MoE request's outputs legitimately depend on
+  what it is batched with — there ``outputs_match`` would compare
+  scheduling policies, not cache correctness (the paged↔dense parity
+  tests pin MoE equality at matched small-batch regimes,
+  tests/test_paged.py).
+
+  PYTHONPATH=src python -m benchmarks.paged_bench --quick
+  PYTHONPATH=src python -m benchmarks.paged_bench \\
+      --scenario bursty_mmpp --requests 48 --out bench_paged.json
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import zlib
+
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.experiments.results import save_results
+from repro.experiments.scenarios import get_scenario
+from repro.serving import PagedServingEngine, Request, ServingEngine
+
+DEFAULT_CONFIGS = "smollm-360m,qwen2-72b"
+
+
+def build_trace(scenario: str, seed: int, n_requests: int, max_len: int,
+                span_steps: int | None = None, short_frac: float = 0.7):
+    """Deterministic mixed-length request trace: (arrival_step, prompt,
+    max_new_tokens) tuples, arrival counts modulated by the scenario's
+    workload dynamics (stationary scenarios fall back to Poisson).
+
+    The default span packs ~2 arrivals per engine step so the offered
+    load exceeds the dense engine's slot count — the regime where
+    block-granular admission matters."""
+    if span_steps is None:
+        span_steps = max(8, n_requests // 2)
+    ss = np.random.SeedSequence(
+        [seed, zlib.crc32(scenario.encode()), zlib.crc32(b"paged_bench")])
+    r_arr, r_len, r_mod = [np.random.default_rng(s) for s in ss.spawn(3)]
+    modulation = get_scenario(scenario).arrival_modulation(r_mod)
+    rate = n_requests / span_steps
+    trace = []
+    t = 0
+    while len(trace) < n_requests:
+        mult = modulation(t) if modulation is not None else 1.0
+        for _ in range(r_arr.poisson(rate * mult)):
+            if len(trace) >= n_requests:
+                break
+            if r_len.random() < short_frac:
+                p_len = int(r_len.integers(6, 17))
+            else:
+                p_len = int(r_len.integers(40, 65))
+            new = min(int(r_len.integers(4, 21)), max_len - 2)
+            p_len = max(1, min(p_len, max_len - new))
+            prompt = [int(x) for x in r_len.integers(1, 500, size=p_len)]
+            trace.append((t, prompt, new))
+        t += 1
+    return trace
+
+
+def drive(eng, trace, is_paged: bool) -> dict:
+    """Replay a trace through an engine; a warmup request triggers the
+    jit compiles so the timed phase compares steady-state execution."""
+    import jax
+    long_prompt = max((p for _, p, _ in trace), key=len)
+    eng.submit(Request(id=-1, prompt=list(long_prompt), max_new_tokens=1))
+    eng.run()
+    caches = (eng.caches if hasattr(eng, "caches")
+              else [st.caches for st in eng.stages])
+    jax.block_until_ready(jax.tree.leaves(caches))
+
+    t0_step = eng.t
+    pending = [(t + t0_step, Request(id=i, prompt=list(p), max_new_tokens=n))
+               for i, (t, p, n) in enumerate(trace)]
+    done, conc, util = [], [], []
+    t0 = time.perf_counter()
+    while pending or eng.queue or any(
+            s is not None for s in (eng.rows if is_paged else eng.slots)):
+        while pending and pending[0][0] <= eng.t:
+            eng.submit(pending.pop(0)[1])
+        done += eng.step()
+        active = (eng.active_rows if is_paged
+                  else sum(1 for s in eng.slots if s is not None))
+        conc.append(active)
+        if is_paged:
+            util.append(eng.pc.utilization())
+        else:
+            used = sum(int(eng.pos[i]) + 1 for i, s in enumerate(eng.slots)
+                       if s is not None)
+            util.append(used / (eng.max_batch * eng.cache_len))
+    wall = time.perf_counter() - t0
+
+    done = [r for r in done if r.id >= 0]
+    toks = sum(len(r.out_tokens) for r in done)
+    busy = [c for c in conc if c > 0]
+    queue_d = np.array([r.t_admit - r.t_submit for r in done], float)
+    complete = np.array([r.t_done - r.t_submit for r in done], float)
+    return {
+        "completed": len(done),
+        "rejected": len(eng.rejected),
+        "tokens": toks,
+        "wall_s": wall,
+        "tok_per_s": toks / wall,
+        "steps": len(conc),
+        "concurrency_mean": float(np.mean(busy)) if busy else 0.0,
+        "concurrency_peak": int(max(conc, default=0)),
+        "cache_util_mean": float(np.mean([u for c, u in zip(conc, util)
+                                          if c > 0]) if busy else 0.0),
+        "queue_delay_mean": float(queue_d.mean()) if done else 0.0,
+        "queue_delay_p95": (float(np.percentile(queue_d, 95))
+                            if done else 0.0),
+        "complete_mean": float(complete.mean()) if done else 0.0,
+        "complete_p95": (float(np.percentile(complete, 95))
+                         if done else 0.0),
+        "preemptions": eng.n_preemptions if is_paged else 0,
+        "outputs": {r.id: list(r.out_tokens) for r in done},
+    }
+
+
+def main(configs=DEFAULT_CONFIGS, scenario: str = "bursty_mmpp",
+         n_requests: int = 32, max_batch: int = 4, cache_len: int = 96,
+         max_rows: int = 12, block_size: int = 16, prefill_chunk: int = 16,
+         watermark_blocks: int = 0, seed: int = 0,
+         out: str | None = None):
+    num_blocks = max_batch * cache_len // block_size  # equal token-slots
+    rows = []
+    for arch in str(configs).split(","):
+        cfg = get_smoke_config(arch)
+        trace = build_trace(scenario, seed, n_requests, cache_len)
+        res = {}
+        for label, mk in (
+                ("dense", lambda: ServingEngine(
+                    cfg, max_batch=max_batch, cache_len=cache_len,
+                    prefill_chunk=prefill_chunk)),
+                ("paged", lambda: PagedServingEngine(
+                    cfg, max_rows=max_rows, max_len=cache_len,
+                    block_size=block_size, num_blocks=num_blocks,
+                    prefill_chunk=prefill_chunk,
+                    watermark_blocks=watermark_blocks))):
+            res[label] = drive(mk(), trace, is_paged=(label == "paged"))
+        match = res["dense"]["outputs"] == res["paged"]["outputs"]
+        gain = (res["paged"]["concurrency_mean"]
+                / max(res["dense"]["concurrency_mean"], 1e-9))
+        print(f"\n== {arch} [{scenario}] {n_requests} reqs, "
+              f"{num_blocks} blocks x {block_size} == "
+              f"{max_batch} slots x {cache_len} tokens ==")
+        print(f"{'engine':>6s} {'tok/s':>8s} {'conc':>6s} {'peak':>5s} "
+              f"{'util':>6s} {'q_mean':>7s} {'q_p95':>6s} {'preempt':>7s}")
+        for label in ("dense", "paged"):
+            r = res[label]
+            print(f"{label:>6s} {r['tok_per_s']:8.1f} "
+                  f"{r['concurrency_mean']:6.2f} {r['concurrency_peak']:5d} "
+                  f"{r['cache_util_mean']:6.2f} {r['queue_delay_mean']:7.1f} "
+                  f"{r['queue_delay_p95']:6.1f} {r['preemptions']:7d}")
+        print(f"outputs identical: {match}; sustained concurrency "
+              f"paged/dense = {gain:.2f}x")
+        for label in ("dense", "paged"):
+            row = {"arch": arch, "engine": label, **res[label]}
+            row.pop("outputs")
+            row["outputs_match"] = match
+            rows.append(row)
+    if out:
+        save_results(out, rows, meta={
+            "section": "paged_bench", "scenario": scenario,
+            "configs": configs, "n_requests": n_requests,
+            "max_batch": max_batch, "cache_len": cache_len,
+            "max_rows": max_rows, "block_size": block_size,
+            "num_blocks": num_blocks, "seed": seed,
+            "note": "wall_s/tok_per_s are host-dependent; all other "
+                    "columns are deterministic given the seed"})
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--configs", default=DEFAULT_CONFIGS)
+    ap.add_argument("--scenario", default="bursty_mmpp",
+                    help="registered scenario supplying arrival "
+                         "modulation (see benchmarks.run --list-scenarios)")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="dense slots; the paged pool gets the same "
+                         "token-slot budget")
+    ap.add_argument("--cache-len", type=int, default=96)
+    ap.add_argument("--rows", type=int, default=12,
+                    help="paged decode rows (batch width)")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--watermark", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="one config, fewer requests")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.quick:
+        args.configs = "smollm-360m"
+        args.requests = 16
+    main(configs=args.configs, scenario=args.scenario,
+         n_requests=args.requests, max_batch=args.max_batch,
+         cache_len=args.cache_len, max_rows=args.rows,
+         block_size=args.block_size, watermark_blocks=args.watermark,
+         seed=args.seed, out=args.out)

@@ -5,6 +5,7 @@
   ablation kappa-diversity under failure churn (Sec. IV, C6)
   kernels  Pallas hot-spot microbenches        (name,us_per_call,derived)
   pipeline pipelined executor: tokens/s + per-hop transfer vs placement
+  paged    paged KV + continuous batching vs dense slots (SERVING.md)
   simbench vectorized simulator core vs scalar reference (trials/s)
   scale    scale_load population sweep via experiments.report
 
@@ -31,7 +32,7 @@ def main() -> None:
                     help="fewer trials (CI-sized)")
     ap.add_argument("--only", default=None,
                     choices=[None, "fig3", "fig4", "ablation", "kernels",
-                             "pipeline", "simbench", "scale"])
+                             "pipeline", "paged", "simbench", "scale"])
     ap.add_argument("--scenario", default="baseline",
                     help="registered scenario for fig3/fig4 "
                          "(see --list-scenarios)")
@@ -118,6 +119,20 @@ def main() -> None:
                out="bench_pipeline.json")
         else:
             pb(scenario=args.scenario, out="bench_pipeline.json")
+
+    if args.only in (None, "paged"):
+        print("=" * 72)
+        print(f"## Paged KV + continuous batching — sustained concurrency "
+              f"vs dense slots at equal cache memory [{args.scenario}]")
+        from benchmarks.paged_bench import main as paged
+        if args.quick:
+            # CI-sized output goes to a scratch name: bench_paged.json
+            # is the committed full-run baseline and must not be
+            # clobbered by every `make ci`
+            paged(configs="smollm-360m", n_requests=16,
+                  scenario=args.scenario, out="bench_paged_quick.json")
+        else:
+            paged(scenario=args.scenario, out="bench_paged.json")
 
     print("=" * 72)
     print("done. roofline: PYTHONPATH=src python -m benchmarks.roofline")

@@ -47,8 +47,30 @@ Paper-notation glossary (symbols as they appear in code):
   y         parallelism (tasks sharing a light instance)        ``ECMap.g(y)``, ``Y_MAX``
   ========  ==================================================  ==========
 
-See README.md §Paper ↔ code mapping for the construct-level table and
-ARCHITECTURE.md for how the two tiers cooperate.
+Serving-side terms (the paged engines apply the same admit-under-
+contention pattern to KV memory — SERVING.md §Paper ↔ code has the
+Algorithm-1 correspondence table):
+
+  ==============  ==============================================  ==========
+  term            meaning                                         where
+  ==============  ==============================================  ==========
+  block size      tokens per fixed-size KV block (the allocation  ``PagedCache.block_size`` (models/kvcache.py)
+                  granule, serving analogue of r_m)
+  block table     per-request logical→physical block map; slot s  ``PagedCache.tables`` / ``meta()``
+                  lives at (table[s // bs], s % bs)
+  scratch block   physical block 0, never allocated; absorbs      ``PagedCache`` pools, kvcache docstring
+                  inactive decode rows' writes
+  watermark       free-block headroom held back at admission to   ``PagedCache.watermark_blocks``
+                  protect running requests' decode growth
+                  (serving analogue of g_{m,eps} headroom)
+  preemption      recompute-on-readmission eviction of the        ``_PagedEngine._preempt`` (serving/engine.py)
+                  newest request when the pool is exhausted;
+                  greedy decode keeps outputs token-identical
+  ==============  ==============================================  ==========
+
+See README.md §Paper ↔ code mapping for the construct-level table,
+ARCHITECTURE.md for how the two tiers cooperate, and SERVING.md for
+the serving engines' request lifecycle and memory model.
 """
 from repro.core.graph import Application, Microservice, TaskType  # noqa: F401
 from repro.core.network import EdgeNetwork  # noqa: F401

@@ -47,6 +47,26 @@ def decode_attention_ref(q, k_cache, v_cache, pos, *,
     return out.reshape(b, h, d).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, pos, *,
+                               scale: float | None = None):
+    """Paged flash-decode oracle: gather the logical view, then score.
+
+    q: (B,H,D); pools: (KV, NB, bs, D) physical block pools;
+    block_tables: (B, nb) int32 physical ids per logical block
+    (unallocated entries may point anywhere in range — they are masked
+    by ``pos``); pos: (B,) valid-length-1 indices.
+    """
+    kv, nb_phys, bs, d = k_pool.shape
+    b = q.shape[0]
+    nb = block_tables.shape[1]
+    # (KV, NB, bs, D)[:, tables] -> (KV, B, nb, bs, D) -> (B, KV, S, D)
+    kg = jnp.moveaxis(k_pool[:, block_tables], 1, 0).reshape(
+        b, kv, nb * bs, d)
+    vg = jnp.moveaxis(v_pool[:, block_tables], 1, 0).reshape(
+        b, kv, nb * bs, d)
+    return decode_attention_ref(q, kg, vg, pos, scale=scale)
+
+
 def selective_scan_ref(dt, b_mat, c_mat, x, a_neg, h0):
     """Mamba1 recurrence oracle.
 

@@ -215,6 +215,142 @@ def chunk_self_attention(params, x, cache: dict, pos, cfg,
     return out, {"k": k, "v": v}
 
 
+# ----------------------------------------------------------------------
+# Paged variants: block pools + block tables (see models/kvcache.py).
+# Same math as the dense paths below, addressed through per-request
+# block tables; greedy outputs are bit-identical because the gathered
+# view reproduces the dense cache's logical slot order and every
+# stale/unallocated slot is masked exactly where the dense path masks
+# its zero-initialised slots.
+# ----------------------------------------------------------------------
+def _paged_gather(pool, tables, take: Optional[int] = None):
+    """pool (NB, bs, KV, hd) gathered through tables (B, nb) into the
+    logical view (B, nb*bs, KV, hd), optionally truncated to ``take``
+    slots (SWA ring / cross source shorter than the block grid)."""
+    g = pool[tables]                                 # (B, nb, bs, KV, hd)
+    b, nb, bs = g.shape[:3]
+    g = g.reshape(b, nb * bs, *g.shape[3:])
+    return g if take is None else g[:, :take]
+
+
+def paged_cross_view(cache: dict, paged: dict, src: int) -> dict:
+    """Cross-KV logical view of each row's cross blocks (zeroed at
+    admission, so this matches the dense engines' zero cross rows)."""
+    return {"k": _paged_gather(cache["xk"], paged["cross_tables"], src),
+            "v": _paged_gather(cache["xv"], paged["cross_tables"], src)}
+
+
+def paged_decode_self_attention(params, x, cache: dict, paged: dict, pos,
+                                cfg, kind: str) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode against paged block pools.
+
+    x: (B,1,D); cache {"k","v"}: (NB_phys, bs, KV, hd) pools; paged
+    carries the block tables (``tables`` always; ``swa_tables`` for
+    ring segments).  Mirrors :func:`decode_self_attention` slot-for-
+    slot: the new K/V lands at the physical home of the dense slot and
+    scores run over the gathered logical view.
+    """
+    b = x.shape[0]
+    bs = cache["k"].shape[1]
+    max_len = paged["tables"].shape[1] * bs
+    q = _proj_q(params, x, cfg)
+    k_new, v_new = _proj_kv(params, x, cfg)
+    q = rotary(q, pos[:, None], cfg.rope_theta)
+    k_new = rotary(k_new, pos[:, None], cfg.rope_theta)
+
+    if kind == "swa" and cfg.window:
+        tables = paged["swa_tables"]
+        s = min(cfg.window, max_len)       # dense ring size min(W, seq_len)
+        slot = pos % s
+    else:
+        tables = paged["tables"]
+        s = max_len
+        slot = jnp.minimum(pos, s - 1)
+    bidx = jnp.arange(b)
+    phys = tables[bidx, slot // bs]
+    off = slot % bs
+    # rows of a decode batch own disjoint blocks; only inactive rows
+    # share the scratch block (id 0), whose content is never read
+    k_pool = cache["k"].at[phys, off].set(k_new[:, 0])
+    v_pool = cache["v"].at[phys, off].set(v_new[:, 0])
+
+    kg = _paged_gather(k_pool, tables, s)
+    vg = _paged_gather(v_pool, tables, s)
+    scores = _gqa_scores(q, kg, cfg)                 # (B,KV,G,1,S)
+    sidx = jnp.arange(s)
+    if kind == "swa" and cfg.window:
+        valid = (sidx[None, :] <= pos[:, None]) | (pos[:, None] >= s - 1)
+    else:
+        valid = sidx[None, :] <= pos[:, None]
+    mask = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+    scores = scores + mask[:, None, None, None, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, vg, params, cfg, x.dtype)
+    return out, {"k": k_pool, "v": v_pool}
+
+
+def paged_chunk_self_attention(params, x, cache: dict, paged: dict, pos,
+                               cfg, kind: str) -> Tuple[jnp.ndarray, dict]:
+    """C-token cache-resuming attention against paged pools (chunked
+    prefill of ONE request — tables in ``paged`` are the row's slices,
+    batch dim 1).  Mirrors :func:`chunk_self_attention` branch-for-
+    branch: linear segments write-then-mask through the table, SWA
+    scores [old ring ∪ chunk keys] with analytic old-ring positions
+    and ring-writes the last ``min(C, W)`` keys."""
+    b, c, _ = x.shape
+    bs = cache["k"].shape[1]
+    max_len = paged["tables"].shape[1] * bs
+    q = _proj_q(params, x, cfg)
+    k_new, v_new = _proj_kv(params, x, cfg)
+    positions = pos[:, None] + jnp.arange(c)[None, :]          # (B,C)
+    q = rotary(q, positions, cfg.rope_theta)
+    k_new = rotary(k_new, positions, cfg.rope_theta)
+    qpos = positions[:, None, :, None]                         # (B,1,C,1)
+    bidx = jnp.arange(b)[:, None]
+
+    if kind == "swa" and cfg.window:
+        tables = paged["swa_tables"]
+        w = min(cfg.window, max_len)
+        j = jnp.arange(w)[None, :]
+        p_old = pos[:, None] - w + (j - pos[:, None]) % w      # (B,W)
+        k_old = _paged_gather(cache["k"], tables, w)
+        v_old = _paged_gather(cache["v"], tables, w)
+        k_all = jnp.concatenate([k_old, k_new], axis=1)
+        v_all = jnp.concatenate([v_old, v_new], axis=1)
+        kpos = jnp.concatenate(
+            [p_old, positions], axis=1)[:, None, None, :]      # (B,1,1,W+C)
+        valid = (kpos >= 0) & (kpos <= qpos) & (kpos > qpos - w)
+        scores = _gqa_scores(q, k_all, cfg)
+        scores = scores + jnp.where(valid, 0.0, NEG_INF).astype(
+            jnp.float32)[:, :, None]
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = _gqa_out(probs, v_all, params, cfg, x.dtype)
+        keep = min(c, w)
+        slots = positions[:, -keep:] % w
+        phys = tables[bidx, slots // bs]
+        off = slots % bs
+        k = cache["k"].at[phys, off].set(k_new[:, -keep:])
+        v = cache["v"].at[phys, off].set(v_new[:, -keep:])
+        return out, {"k": k, "v": v}
+
+    tables = paged["tables"]
+    slots = jnp.minimum(positions, max_len - 1)
+    phys = tables[bidx, slots // bs]
+    off = slots % bs
+    k = cache["k"].at[phys, off].set(k_new)
+    v = cache["v"].at[phys, off].set(v_new)
+    kg = _paged_gather(k, tables)                    # (B, max_len, KV, hd)
+    vg = _paged_gather(v, tables)
+    scores = _gqa_scores(q, kg, cfg)
+    kpos = jnp.arange(max_len)[None, None, None, :]
+    valid = kpos <= qpos
+    scores = scores + jnp.where(valid, 0.0, NEG_INF).astype(
+        jnp.float32)[:, :, None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, vg, params, cfg, x.dtype)
+    return out, {"k": k, "v": v}
+
+
 def decode_self_attention(params, x, cache: dict, pos, cfg,
                           kind: str) -> Tuple[jnp.ndarray, dict]:
     """One-token decode against a KV cache.

@@ -1,7 +1,45 @@
-"""Per-segment cache/state construction (abstract — works under eval_shape)."""
+"""Per-segment cache/state construction: dense slot rows and paged pools.
+
+Two cache layouts share the same per-segment pytree structure (one list
+entry per segment, leaves with a leading layer dim):
+
+* **Dense** (:func:`cache_struct`) — one full ``seq_len`` row per batch
+  slot: attn/swa leaves are ``(n_layers, batch, slots, kv_heads, hd)``
+  where slot == absolute position for attn and ``pos % window`` for the
+  SWA ring.  Memory is reserved worst-case per slot, so admission is
+  slot-granular (`serving/engine.py`'s dense engines).
+* **Paged** (:class:`PagedCache` + :meth:`PagedCache.struct`) —
+  fixed-size blocks in a shared pool: attn/swa/cross leaves are
+  ``(n_layers, num_physical_blocks, block_size, kv_heads, hd)`` and a
+  request's logical slot ``s`` lives at
+  ``(tables[row, s // block_size], s % block_size)``.  Admission is
+  block-granular (token-level), so mixed-length workloads share the
+  pool (`serving/engine.py`'s paged engines).
+
+Cache layout invariants (relied on across models/serving/kernels):
+
+* physical block 0 of every paged pool is the **scratch block**: never
+  allocated, it absorbs the writes of inactive decode rows; block-table
+  entries of unallocated logical blocks point at scratch, and every
+  read through them is masked by position;
+* stale attn/swa KV needs no zeroing on block reuse — attention masks
+  slots above ``pos`` (and the SWA ring is fully rewritten before its
+  all-slots-valid regime at ``pos >= window - 1``);
+* cross KV (``xk``/``xv``) is *not* position-masked, so a request's
+  cross blocks are zeroed at admission (token requests carry no
+  frontend; parity with the dense engines' zero-initialised cross
+  rows);
+* SSM/conv state stays per-request dense (``(n_layers, rows, ...)``)
+  in both layouts and must be zeroed on row (re)use — stale KV is
+  masked by position, stale recurrent state is not.
+"""
 from __future__ import annotations
 
+from typing import Optional
+
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.transformer import build_segments, segment_range
 
@@ -64,7 +102,272 @@ def cache_struct(cfg, batch: int, seq_len: int, dtype, layers=None) -> list:
 
 
 def cache_bytes(cfg, batch: int, seq_len: int, bytes_per_el: int = 2) -> int:
-    import jax
     struct = jax.eval_shape(lambda: cache_struct(cfg, batch, seq_len,
                                                  jnp.bfloat16))
     return sum(x.size * bytes_per_el for x in jax.tree.leaves(struct))
+
+
+# ----------------------------------------------------------------------
+# Paged cache: block pools + per-request block tables
+# ----------------------------------------------------------------------
+class PagedCache:
+    """Host-side paged-cache ledger: free lists + per-request block tables.
+
+    Three block groups cover the attention segment kinds (SSM state is
+    per-request dense, see module docstring):
+
+    ``attn``
+        the shared contention pool — ``num_blocks`` usable blocks of
+        ``block_size`` tokens; one block id covers the same logical
+        token range in *every* attn-kind layer's pool.  Logical slot ==
+        absolute position; a request holds
+        ``ceil(tokens / block_size)`` blocks and grows block-by-block
+        as it decodes (:meth:`ensure`).  This is the group token-level
+        admission and preemption arbitrate over.
+    ``swa``
+        per-request ring of ``ceil(min(window, max_len) / bs)`` blocks
+        holding ring slot ``pos % window``; sized worst-case
+        (``max_rows`` full rings) so allocation never fails and the
+        ring never contends with the attn pool.
+    ``cross``
+        per-request ``ceil(src / bs)`` blocks of encoder/frontend KV,
+        allocated and zeroed at admission (cross reads are not
+        position-masked).
+
+    The ledger is pure numpy/python — deterministic LIFO free lists,
+    no jax state.  Pool arrays are built separately by :meth:`struct`
+    (optionally restricted to a pipeline stage's layer range) so one
+    ledger can govern several stage-sliced pools that share block ids.
+
+    ``watermark_blocks`` holds back free attn blocks at admission time:
+    a new request is admitted only if its prompt fits *and* the pool
+    stays above the watermark, reserving headroom for the decode growth
+    of already-running requests (fewer preemptions at high load).
+    """
+
+    def __init__(self, cfg, *, max_rows: int, max_len: int,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 watermark_blocks: int = 0):
+        assert max_len % block_size == 0, (max_len, block_size)
+        self.cfg = cfg
+        self.max_rows = max_rows
+        self.max_len = max_len
+        self.block_size = block_size
+        self.nb_logical = max_len // block_size
+        self.watermark_blocks = watermark_blocks
+
+        kinds = {s.kind for s in build_segments(cfg)}
+        self.has_swa = "swa" in kinds and bool(cfg.window)
+        self.window_eff = min(cfg.window, max_len) if self.has_swa else 0
+        self.nb_swa = (-(-self.window_eff // block_size)
+                       if self.has_swa else 0)
+        src = (cfg.n_image_tokens or cfg.encoder_seq
+               if ("cross" in kinds or cfg.is_encoder_decoder) else 0)
+        self.cross_src = src
+        self.nb_cross = -(-src // block_size) if src else 0
+
+        self.num_blocks = (max_rows * self.nb_logical
+                           if num_blocks is None else num_blocks)
+        self._groups = {"attn": self.num_blocks,
+                        "swa": max_rows * self.nb_swa,
+                        "cross": max_rows * self.nb_cross}
+        # LIFO free lists; block id 0 is the scratch block of each group
+        self._free = {g: list(range(n, 0, -1))
+                      for g, n in self._groups.items()}
+        self._held = {g: [[] for _ in range(max_rows)]
+                      for g in self._groups}
+        self.tables = np.zeros((max_rows, self.nb_logical), np.int32)
+        self.swa_tables = np.zeros((max_rows, max(self.nb_swa, 1)), np.int32)
+        self.cross_tables = np.zeros((max_rows, max(self.nb_cross, 1)),
+                                     np.int32)
+
+    # -------------------------------------------------------------- pools
+    def struct(self, dtype, layers=None) -> list:
+        """Block-pool pytree for decoder layers ``layers`` (default all).
+
+        Mirrors :func:`cache_struct` segment-for-segment; attn/swa/cross
+        leaves swap the per-slot batch rows for
+        ``(group_blocks + 1, block_size)`` physical pools (+1 for the
+        scratch block), SSM leaves keep ``max_rows`` state rows.
+        """
+        cfg = self.cfg
+        segs = (build_segments(cfg) if layers is None
+                else segment_range(cfg, *layers))
+        bs, kvh, hd = self.block_size, cfg.n_kv_heads, cfg.head_dim
+        nb_attn = self._groups["attn"] + 1
+        nb_swa = self._groups["swa"] + 1
+        nb_cross = self._groups["cross"] + 1
+        caches = []
+        for seg in segs:
+            n = seg.length
+            if seg.kind in ("attn", "swa"):
+                nb = (nb_swa if (seg.kind == "swa" and cfg.window)
+                      else nb_attn)
+                c = {"k": jnp.zeros((n, nb, bs, kvh, hd), dtype),
+                     "v": jnp.zeros((n, nb, bs, kvh, hd), dtype)}
+                if cfg.is_encoder_decoder:
+                    c["xk"] = jnp.zeros((n, nb_cross, bs, kvh, hd), dtype)
+                    c["xv"] = jnp.zeros_like(c["xk"])
+            elif seg.kind == "cross":
+                c = {"xk": jnp.zeros((n, nb_cross, bs, kvh, hd), dtype),
+                     "xv": jnp.zeros((n, nb_cross, bs, kvh, hd), dtype)}
+            elif seg.kind == "mamba1":
+                di, ds = cfg.d_inner_eff, cfg.ssm_state
+                c = {"h": jnp.zeros((n, self.max_rows, di, ds), jnp.float32),
+                     "conv": jnp.zeros((n, self.max_rows, cfg.conv_width - 1,
+                                        di), dtype)}
+            elif seg.kind == "mamba2":
+                di, ds = cfg.d_inner_eff, cfg.ssm_state
+                nh = di // cfg.mamba2_headdim
+                c = {"h": jnp.zeros((n, self.max_rows, nh,
+                                     cfg.mamba2_headdim, ds), jnp.float32),
+                     "conv": jnp.zeros((n, self.max_rows, cfg.conv_width - 1,
+                                        di), dtype)}
+            else:
+                raise ValueError(seg.kind)
+            caches.append(c)
+        return caches
+
+    # ---------------------------------------------------------- metadata
+    def meta(self, row: Optional[int] = None) -> dict:
+        """Block-table metadata for a jitted forward call.
+
+        Snapshot copies (``jnp.asarray`` aliases numpy buffers on CPU
+        and the jitted callee dispatches asynchronously — the ledger
+        must stay mutable on the host side).  ``row`` restricts tables
+        to one request (the chunked-prefill path).
+        """
+        sel = (slice(None) if row is None else slice(row, row + 1))
+        out = {"tables": jnp.asarray(self.tables[sel].copy())}
+        if self.has_swa:
+            out["swa_tables"] = jnp.asarray(self.swa_tables[sel].copy())
+        if self.nb_cross:
+            out["cross_tables"] = jnp.asarray(self.cross_tables[sel].copy())
+        return out
+
+    # -------------------------------------------------------- accounting
+    def blocks_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free["attn"])
+
+    @property
+    def used_blocks(self) -> int:
+        return self.num_blocks - self.free_blocks
+
+    def utilization(self) -> float:
+        return (self.used_blocks / self.num_blocks) if self.num_blocks else 0.0
+
+    def fits(self, total_tokens: int) -> bool:
+        """Can a request ever run: worst-case footprint vs pool size."""
+        return self.blocks_needed(total_tokens) <= self.num_blocks
+
+    def can_admit(self, n_tokens: int,
+                  watermark: Optional[int] = None) -> bool:
+        """``watermark`` overrides the configured headroom — the
+        scheduler drops it to 0 when nothing is running (headroom only
+        exists to protect active requests' decode growth; holding an
+        idle pool back would deadlock a lone large request)."""
+        wm = self.watermark_blocks if watermark is None else watermark
+        need = self.blocks_needed(n_tokens)
+        return (len(self._free["attn"]) - wm >= need
+                and len(self._free["swa"]) >= self.nb_swa
+                and len(self._free["cross"]) >= self.nb_cross)
+
+    def _alloc(self, group: str, row: int, table: np.ndarray,
+               logical: int) -> bool:
+        free = self._free[group]
+        if not free:
+            return False
+        blk = free.pop()
+        self._held[group][row].append(blk)
+        table[row, logical] = blk
+        return True
+
+    def _alloc_or_die(self, group: str, row: int, table: np.ndarray,
+                      logical: int):
+        # callers hold the can_admit guarantee; a failure here is ledger
+        # corruption, and must raise even under ``python -O``
+        if not self._alloc(group, row, table, logical):
+            raise RuntimeError(
+                f"{group} pool exhausted mid-admit (row {row}, logical "
+                f"{logical}) despite can_admit — ledger corrupted")
+
+    def admit(self, row: int, n_tokens: int,
+              watermark: Optional[int] = None) -> bool:
+        """Allocate row ``row``'s blocks for logical slots [0, n_tokens)
+        plus its full SWA ring and cross blocks.  All-or-nothing."""
+        if any(self._held[g][row] for g in self._held):
+            raise RuntimeError(f"admit: row {row} still holds blocks")
+        if not self.can_admit(n_tokens, watermark=watermark):
+            return False
+        for j in range(self.blocks_needed(n_tokens)):
+            self._alloc_or_die("attn", row, self.tables, j)
+        for j in range(self.nb_swa):
+            self._alloc_or_die("swa", row, self.swa_tables, j)
+        for j in range(self.nb_cross):
+            self._alloc_or_die("cross", row, self.cross_tables, j)
+        return True
+
+    def ensure(self, row: int, pos: int) -> bool:
+        """Grow row ``row`` to cover a write at absolute position
+        ``pos`` (decode step).  Returns False when the attn pool is
+        exhausted — the scheduler must preempt."""
+        logical = min(pos, self.max_len - 1) // self.block_size
+        held = len(self._held["attn"][row])
+        if logical < held:
+            return True
+        if logical != held:  # growth is 1 block/step by construction
+            raise RuntimeError(
+                f"ensure: row {row} skipped to logical block {logical} "
+                f"with only {held} held")
+        return self._alloc("attn", row, self.tables, logical)
+
+    def release(self, row: int):
+        """Return every block row ``row`` holds (completion/preemption)."""
+        for g, table in (("attn", self.tables), ("swa", self.swa_tables),
+                         ("cross", self.cross_tables)):
+            blocks, free = self._held[g][row], self._free[g]
+            dup = set(blocks) & set(free)
+            if dup:  # guard must survive ``python -O``
+                raise RuntimeError(
+                    f"double free of {g} blocks {sorted(dup)}")
+            free.extend(reversed(blocks))
+            blocks.clear()
+        self.tables[row] = 0
+        self.swa_tables[row] = 0
+        self.cross_tables[row] = 0
+
+    def check(self):
+        """Free-list/table invariants (no leak, no double-book)."""
+        for g, n in self._groups.items():
+            free = self._free[g]
+            held = [b for row in self._held[g] for b in row]
+            assert len(set(free)) == len(free), f"{g}: dup in free list"
+            assert 0 not in free and 0 not in held, f"{g}: scratch booked"
+            assert sorted(free + held) == list(range(1, n + 1)), \
+                f"{g}: leak ({len(free)} free + {len(held)} held != {n})"
+        for table, g in ((self.tables, "attn"), (self.swa_tables, "swa"),
+                         (self.cross_tables, "cross")):
+            for row in range(self.max_rows):
+                ids = set(table[row].tolist()) - {0}
+                assert ids <= set(self._held[g][row]), \
+                    f"{g}: row {row} maps unheld blocks"
+
+
+def paged_reset_row(caches, segs, row, cross_ids=None):
+    """Zero decode row ``row``'s per-request state in a paged pytree:
+    SSM/conv state rows, plus its cross-KV blocks (``cross_ids``, the
+    row's cross-table entries) — scratch id 0 padding is harmless.
+    Attn/swa pools are untouched (stale KV is position-masked)."""
+    out = []
+    for seg, c in zip(segs, caches):
+        if seg.kind in ("mamba1", "mamba2"):
+            c = jax.tree.map(lambda a: a.at[:, row].set(0), c)
+        elif cross_ids is not None and ("xk" in c or "xv" in c):
+            c = {k: (v.at[:, cross_ids].set(0) if k in ("xk", "xv") else v)
+                 for k, v in c.items()}
+        out.append(c)
+    return out

@@ -144,13 +144,14 @@ class Model:
         return p
 
     def run_stages(self, stage_p, x, lo: int, hi: int, *, mode: str,
-                   positions=None, pos=None, caches=None):
+                   positions=None, pos=None, caches=None, paged=None):
         """Run decoder layers [lo, hi) from :meth:`stage_params` output.
 
         x is hidden states (B,T,D) — or token ids (B,T) for a stage that
         owns the embedding.  A stage that owns the head returns logits.
         Composing consecutive stages reproduces the monolithic forward
-        op-for-op.  Returns (x, new_caches, aux).
+        op-for-op.  ``paged`` switches decode/chunk cache addressing to
+        block pools (`models/kvcache.py`).  Returns (x, new_caches, aux).
         """
         cfg = self.cfg
         if "embed" in stage_p:
@@ -158,7 +159,8 @@ class Model:
         x, new_caches, aux = tfm.apply_segments(
             stage_p["blocks"], x, cfg=cfg, mode=mode,
             segs=tfm.segment_range(cfg, lo, hi),
-            positions=positions, pos=pos, caches=caches, unroll=self.unroll)
+            positions=positions, pos=pos, caches=caches, unroll=self.unroll,
+            paged=paged)
         if "lm_head" in stage_p:
             x = rmsnorm(stage_p["final_norm"], x, cfg.norm_eps)
             x = unembed(stage_p["lm_head"], x)
@@ -206,6 +208,66 @@ class Model:
             pos=pos, caches=caches, unroll=self.unroll)
         logits = self._head(params, x)
         return logits, new_caches
+
+    # ------------------------------------------------------------------
+    # Paged-cache serving API (see serving/engine.py paged engines)
+    # ------------------------------------------------------------------
+    def paged_decode_step(self, params, caches, batch, paged):
+        """One decode step over paged block pools.
+
+        ``caches`` is a :meth:`repro.models.kvcache.PagedCache.struct`
+        pytree; ``paged`` the matching block-table metadata
+        (:meth:`~repro.models.kvcache.PagedCache.meta`).  Math is
+        identical to :meth:`decode_step` — only cache addressing
+        changes.
+        """
+        cfg = self.cfg
+        token, pos = batch["token"], batch["pos"]
+        x = embed(params["embed"], token).astype(self.dtype)
+        x, new_caches, _ = tfm.apply_segments(
+            params["blocks"], x, cfg=cfg, mode="decode", segs=self.segments,
+            pos=pos, caches=caches, unroll=self.unroll, paged=paged)
+        logits = self._head(params, x)
+        return logits, new_caches
+
+    def paged_prefill_chunk(self, params, caches, tokens, pos0, row, paged):
+        """Chunked prefill of one request against paged pools.
+
+        tokens: (1, C) at absolute positions pos0..; ``paged`` holds the
+        request's row-sliced block tables (``meta(row=...)``), so KV
+        writes land only in blocks the row owns; SSM state rows are
+        sliced/written back via :func:`ssm_row_isolated`.  Returns
+        (hidden (1,C,D), caches) — no LM head, as in
+        :meth:`prefill_chunk`.
+        """
+        def run(row_caches):
+            x = embed(params["embed"], tokens).astype(self.dtype)
+            pos = jnp.reshape(pos0, (1,)).astype(jnp.int32)
+            x, new_caches, _ = tfm.apply_segments(
+                params["blocks"], x, cfg=self.cfg, mode="chunk",
+                segs=self.segments, pos=pos, caches=row_caches,
+                unroll=self.unroll, paged=paged)
+            return x, new_caches
+
+        return ssm_row_isolated(run, self.segments, caches, row)
+
+
+def ssm_row_isolated(apply_fn, segs, caches, row):
+    """:func:`row_isolated` for paged pytrees: only SSM/conv state
+    leaves carry per-request rows (KV pools are addressed through block
+    tables, which already isolate the request), so only the mamba
+    segments are sliced at ``row`` and written back.
+    apply_fn(caches) -> (out, new_caches)."""
+    ssm = [seg.kind in ("mamba1", "mamba2") for seg in segs]
+    sliced = [jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, row, 1, axis=1), c)
+        if is_ssm else c for is_ssm, c in zip(ssm, caches)]
+    out, new = apply_fn(sliced)
+    merged = [jax.tree.map(
+        lambda full, r: jax.lax.dynamic_update_slice_in_dim(
+            full, r.astype(full.dtype), row, axis=1), c, n)
+        if is_ssm else n for is_ssm, c, n in zip(ssm, caches, new)]
+    return out, merged
 
 
 def row_isolated(apply_fn, caches, slot):

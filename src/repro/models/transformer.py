@@ -81,22 +81,36 @@ def _empty_aux():
 def block_apply(params: dict, x, *, kind: str, cfg, mode: str,
                 positions=None, pos=None, cache: Optional[dict] = None,
                 frontend=None, enc_src=None, causal: bool = True,
+                paged: Optional[dict] = None,
                 ) -> Tuple[jnp.ndarray, Optional[dict], dict]:
-    """Apply one block.  Returns (x, cache_out, aux)."""
+    """Apply one block.  Returns (x, cache_out, aux).
+
+    ``paged`` switches the decode/chunk cache paths to block-pool
+    addressing (block tables from ``models.kvcache.PagedCache.meta``);
+    train/prefill modes are dense-only.
+    """
     aux = _empty_aux()
     h = rmsnorm(params["ln1"], x, cfg.norm_eps)
     cache_out = None
 
     if kind in ("attn", "swa"):
         if mode == "decode":
-            a, kv = attn_mod.decode_self_attention(
-                params["attn"], h, {"k": cache["k"], "v": cache["v"]},
-                pos, cfg, kind)
+            if paged is not None:
+                a, kv = attn_mod.paged_decode_self_attention(
+                    params["attn"], h, cache, paged, pos, cfg, kind)
+            else:
+                a, kv = attn_mod.decode_self_attention(
+                    params["attn"], h, {"k": cache["k"], "v": cache["v"]},
+                    pos, cfg, kind)
             cache_out = dict(cache, **kv)
         elif mode == "chunk":
-            a, kv = attn_mod.chunk_self_attention(
-                params["attn"], h, {"k": cache["k"], "v": cache["v"]},
-                pos, cfg, kind)
+            if paged is not None:
+                a, kv = attn_mod.paged_chunk_self_attention(
+                    params["attn"], h, cache, paged, pos, cfg, kind)
+            else:
+                a, kv = attn_mod.chunk_self_attention(
+                    params["attn"], h, {"k": cache["k"], "v": cache["v"]},
+                    pos, cfg, kind)
             cache_out = dict(cache, **kv)
         else:
             a, kv = attn_mod.self_attention(params["attn"], h, positions,
@@ -107,7 +121,10 @@ def block_apply(params: dict, x, *, kind: str, cfg, mode: str,
         if "enc_xattn" in params:  # enc-dec decoder block
             hx = rmsnorm(params["ln_x"], x, cfg.norm_eps)
             if mode in ("decode", "chunk"):
-                xkv = {"k": cache["xk"], "v": cache["xv"]}
+                xkv = (attn_mod.paged_cross_view(cache, paged,
+                                                 cfg.encoder_seq)
+                       if paged is not None
+                       else {"k": cache["xk"], "v": cache["xv"]})
             else:
                 xkv = attn_mod.make_cross_kv(params["enc_xattn"], enc_src, cfg)
                 if mode == "prefill":
@@ -116,7 +133,11 @@ def block_apply(params: dict, x, *, kind: str, cfg, mode: str,
             x = x + attn_mod.cross_attention(params["enc_xattn"], hx, xkv, cfg)
     elif kind == "cross":
         if mode in ("decode", "chunk"):
-            xkv = {"k": cache["xk"], "v": cache["xv"]}
+            if paged is not None:
+                src = cfg.n_image_tokens or cfg.encoder_seq
+                xkv = attn_mod.paged_cross_view(cache, paged, src)
+            else:
+                xkv = {"k": cache["xk"], "v": cache["xv"]}
             cache_out = cache
         else:
             xkv = attn_mod.make_cross_kv(params["xattn"], frontend, cfg)
@@ -261,13 +282,16 @@ def slice_blocks(blocks: dict, cfg, lo: int, hi: int) -> dict:
 
 def apply_segments(blocks, x, *, cfg, mode, segs=None, positions=None,
                    pos=None, caches=None, frontend=None, enc_src=None,
-                   causal=True, remat=None, unroll=False):
+                   causal=True, remat=None, unroll=False, paged=None):
     """Run all segments.  caches: list aligned with segments (or None).
 
     remat: checkpoint each block in training so backward recomputes
     activations (defaults to True for mode=="train").
     unroll: replace lax.scan with a Python loop (used by the roofline cost
     audit, where scan bodies would be counted once by cost_analysis).
+    paged: block-table metadata dict for paged decode/chunk caches —
+    shared by every segment (tables are per-request, not per-layer), so
+    it rides in the closure, not through the scan.
     """
     segs = segs if segs is not None else build_segments(cfg)
     remat = (mode == "train") if remat is None else remat
@@ -277,7 +301,8 @@ def apply_segments(blocks, x, *, cfg, mode, segs=None, positions=None,
         params = blocks["shared"] if seg.shared else blocks["segments"][i]
         cache = caches[i] if caches is not None else None
         kw = dict(kind=seg.kind, cfg=cfg, mode=mode, positions=positions,
-                  pos=pos, frontend=frontend, enc_src=enc_src, causal=causal)
+                  pos=pos, frontend=frontend, enc_src=enc_src, causal=causal,
+                  paged=paged)
 
         def apply_one(p, xx, c):
             return block_apply(p, xx, cache=c, **kw)

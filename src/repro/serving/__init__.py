@@ -1,3 +1,5 @@
-from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    PagedServingEngine, Request, ServingEngine)
 from repro.serving.pipeline import (  # noqa: F401
-    PLACEMENT_STRATEGIES, PipelinedEngine, place_stages)
+    PLACEMENT_STRATEGIES, PagedPipelinedEngine, PipelinedEngine,
+    place_stages)

@@ -1,19 +1,43 @@
-"""Continuous-batching serving engine (slot-based, vLLM-style simplified).
+"""Serving engines: dense slot-based and paged continuous batching.
 
-Fixed-size decode batch with per-slot KV caches; prefill admits new
-requests into free slots via **chunked batched prefill** — one jitted
-call per ``prefill_chunk`` prompt tokens (``prefill_chunk=1`` recovers
-token-by-token admission; see benchmarks/pipeline_bench.py for the
-wall-clock gap).  Each chunk touches only the admitted slot's cache
-row, and the row is zeroed on admission (stale KV is masked by
-position, but SSM recurrent/conv state from a slot's previous occupant
-is not), so co-batched and successive requests are fully isolated.
-After admission all active slots decode together, greedy on the
-logical (un-padded) vocab.
+Two admission disciplines share the chunked-prefill + batched greedy
+decode machinery (SERVING.md walks the full request lifecycle):
 
-:class:`_SlotEngine` holds the slot state machine shared with the
-pipeline-parallel executor (serving/pipeline.py); subclasses supply
+* **Dense** (:class:`_SlotEngine` → :class:`ServingEngine`) — a fixed
+  decode batch with one full ``cache_len`` KV row per slot; a request
+  is admitted only when a whole slot frees, so memory is reserved
+  worst-case and mixed-length workloads strand most of it.
+* **Paged** (:class:`_PagedEngine` → :class:`PagedServingEngine`) — a
+  block pool + per-request block tables
+  (:class:`repro.models.kvcache.PagedCache`); admission is token-level
+  (admit whenever enough free blocks exist), blocks are allocated as
+  sequences grow and freed on completion, and when the pool is
+  exhausted the newest request is **preempted by recompute**: its
+  blocks are freed and it re-queues with its generated prefix, which
+  re-prefills on re-admission — greedy decode makes the continuation
+  token-identical, so preemption is invisible in outputs.
+
+Cache layout invariants both engines rely on (see also
+`src/repro/models/kvcache.py`): prefill/decode touch only the admitted
+request's cache rows/blocks; stale attention KV is masked by position
+but SSM recurrent/conv state is **not**, so the request's SSM state row
+(and its cross-KV blocks, which are read unmasked) must be zeroed at
+admission; chunked prefill processes ``prefill_chunk`` prompt tokens
+per jitted call with power-of-two tails (:func:`chunk_sizes`) to bound
+compiled program shapes.
+
+Both state machines live here and are shared with the pipeline-parallel
+executors (serving/pipeline.py); subclasses supply
 ``_reset_row`` / ``_prefill_row`` / ``_forward``.
+
+Engine time is a **step counter** (one :meth:`step` = one decode
+iteration): ``Request.t_submit`` / ``t_admit`` / ``t_done`` are stamped
+in those units, so queueing delay (``t_admit - t_submit``) and
+completion latency (``t_done - t_submit``) are comparable across
+engines (benchmarks/paged_bench.py reports both).  Requests that can
+never be served (prompt + max_new_tokens over capacity) are rejected
+with ``Request.error`` set — they land in ``engine.rejected``, never
+killing the engine.
 """
 from __future__ import annotations
 
@@ -25,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import build_model
+from repro.models.kvcache import PagedCache, paged_reset_row
 
 
 def chunk_sizes(n: int, chunk: int) -> List[int]:
@@ -51,19 +76,102 @@ def reset_cache_row(caches, slot):
 
 @dataclass
 class Request:
+    """One generation request.  ``t_*`` are engine step-counter stamps
+    (:meth:`_SlotEngine.step` iterations): ``t_submit`` on submit,
+    ``t_admit`` on *first* admission (preemption keeps the original),
+    ``t_done`` on completion or rejection.  ``error`` is set instead of
+    raising when the request can never fit the engine's cache."""
     id: int
     prompt: List[int]
     max_new_tokens: int = 16
     out_tokens: List[int] = field(default_factory=list)
-    t_admit: float = 0.0
-    t_done: Optional[float] = None
+    t_submit: int = 0
+    t_admit: Optional[int] = None
+    t_done: Optional[int] = None
+    error: Optional[str] = None
 
     @property
     def done(self) -> bool:
         return len(self.out_tokens) >= self.max_new_tokens
 
 
-class _SlotEngine:
+class _EngineBase:
+    """Queue + step-clock machinery shared by the slot and paged
+    engines: submission/rejection bookkeeping, the greedy decode tail,
+    and the run loop.  Subclasses own admission and the request store
+    (dense slots or paged rows) and implement ``step`` / ``_idle``."""
+
+    MAX_STEPS = 512
+
+    def __init__(self, cfg, *, prefill_chunk: int):
+        self.cfg = cfg
+        self.prefill_chunk = max(1, prefill_chunk)
+        self.queue: List[Request] = []
+        self.rejected: List[Request] = []
+        self.tokens_generated = 0
+        self.t = 0  # step counter (the engine clock for Request.t_*)
+
+    def submit(self, req: Request):
+        req.t_submit = self.t
+        self.queue.append(req)
+
+    def _reject(self, req: Request, msg: str):
+        """Fail one request without killing the engine (an oversized
+        request used to trip a bare ``assert`` — stripped under
+        ``python -O``, and fatal to every co-batched request)."""
+        req.error = msg
+        req.t_done = self.t
+        self.rejected.append(req)
+
+    def _prefill_chunks(self, row: int, toks: List[int]):
+        """Chunked prefill of one admitted request through the
+        ``_prefill_row`` hook."""
+        i = 0
+        for c in chunk_sizes(len(toks), self.prefill_chunk):
+            self._prefill_row(row, np.asarray(toks[i:i + c],
+                                              dtype=np.int32), i)
+            i += c
+
+    def _next_tokens(self, width: int, active: List[int],
+                     store: List[Optional[Request]]) -> np.ndarray:
+        """Next decode input per active request: last prompt token
+        before any generation, else its latest output token."""
+        tokens = np.zeros((width, 1), dtype=np.int32)
+        for i in active:
+            req = store[i]
+            tokens[i, 0] = (req.prompt[-1] if not req.out_tokens
+                            else req.out_tokens[-1])
+        return tokens
+
+    def _greedy(self, logits) -> np.ndarray:
+        """Greedy next-token ids over the logical (un-padded) vocab."""
+        return np.asarray(
+            jnp.argmax(logits[..., :self.cfg.vocab_size], axis=-1))[:, 0]
+
+    def step(self) -> List[Request]:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def _idle(self) -> bool:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def run(self, max_steps: Optional[int] = None) -> List[Request]:
+        max_steps = self.MAX_STEPS if max_steps is None else max_steps
+        done = []
+        for _ in range(max_steps):
+            done += self.step()
+            if not self.queue and self._idle():
+                break
+        return done
+
+    # ------------------------------------------------------------------
+    def _reset_row(self, row: int):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def _prefill_row(self, row: int, toks: np.ndarray, pos0: int):
+        raise NotImplementedError  # pragma: no cover - interface
+
+
+class _SlotEngine(_EngineBase):
     """Slot state machine: admission (chunked prefill), batched greedy
     decode, finish bookkeeping.  Forward passes are delegated to the
     subclass hooks:
@@ -77,67 +185,58 @@ class _SlotEngine:
 
     def __init__(self, cfg, *, max_batch: int, cache_len: int,
                  prefill_chunk: int):
-        self.cfg = cfg
+        super().__init__(cfg, prefill_chunk=prefill_chunk)
         self.max_batch = max_batch
         self.cache_len = cache_len
-        self.prefill_chunk = max(1, prefill_chunk)
         self.pos = np.zeros(max_batch, dtype=np.int32)
         self.slots: List[Optional[Request]] = [None] * max_batch
-        self.queue: List[Request] = []
-        self.tokens_generated = 0
-
-    # ------------------------------------------------------------------
-    def submit(self, req: Request):
-        self.queue.append(req)
 
     def _free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
+
+    def _idle(self) -> bool:
+        return all(s is None for s in self.slots)
 
     def _admit(self):
         """Prefill queued requests into free slots: ``prefill_chunk``
         prompt tokens per jitted call (the final prompt token is fed as
         the first decode input in :meth:`step`)."""
-        for slot in self._free_slots():
-            if not self.queue:
-                break
+        free = self._free_slots()
+        while free and self.queue:
             req = self.queue.pop(0)
             # admission must leave max_new_tokens of cache headroom: the
             # decode loop stops a slot at pos >= cache_len - 1, so a
-            # prompt of exactly cache_len used to pass the old
-            # prompt-only assert and then finish after a SINGLE decode
-            # step, silently truncating the request
-            assert len(req.prompt) + req.max_new_tokens <= self.cache_len, \
-                (f"prompt of {len(req.prompt)} + max_new_tokens "
-                 f"{req.max_new_tokens} exceeds cache_len {self.cache_len}")
+            # prompt of exactly cache_len would otherwise finish after a
+            # SINGLE decode step, silently truncating the request
+            if len(req.prompt) + req.max_new_tokens > self.cache_len:
+                self._reject(
+                    req, f"prompt of {len(req.prompt)} + max_new_tokens "
+                         f"{req.max_new_tokens} exceeds cache_len "
+                         f"{self.cache_len}")
+                continue
+            slot = free.pop(0)
+            req.t_admit = self.t
             self.slots[slot] = req
             self._reset_row(slot)
             toks = req.prompt[:-1]
-            i = 0
-            for c in chunk_sizes(len(toks), self.prefill_chunk):
-                self._prefill_row(
-                    slot, np.asarray(toks[i:i + c], dtype=np.int32), i)
-                i += c
+            self._prefill_chunks(slot, toks)
             self.pos[slot] = len(toks)
 
     # ------------------------------------------------------------------
     def step(self) -> List[Request]:
         """One engine iteration: admit + batched decode.  Returns
         finished requests."""
+        self.t += 1
         self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return []
-        tokens = np.zeros((self.max_batch, 1), dtype=np.int32)
-        for i in active:
-            req = self.slots[i]
-            tokens[i, 0] = (req.prompt[-1] if not req.out_tokens
-                            else req.out_tokens[-1])
+        tokens = self._next_tokens(self.max_batch, active, self.slots)
         # self.pos is snapshotted before handing to jax: jnp.asarray
         # aliases numpy buffers on CPU and the jitted forward dispatches
         # asynchronously, so the += below must not race it
         logits = self._forward(tokens, self.pos.copy(), len(active))
-        nxt = np.asarray(
-            jnp.argmax(logits[..., :self.cfg.vocab_size], axis=-1))[:, 0]
+        nxt = self._greedy(logits)
         finished = []
         for i in active:
             req = self.slots[i]
@@ -145,27 +244,164 @@ class _SlotEngine:
             self.tokens_generated += 1
             self.pos[i] += 1
             if req.done or self.pos[i] >= self.cache_len - 1:
+                req.t_done = self.t
                 finished.append(req)
                 self.slots[i] = None
         return finished
 
-    def run(self, max_steps: int = 512) -> List[Request]:
-        done = []
-        for _ in range(max_steps):
-            done += self.step()
-            if not self.queue and all(s is None for s in self.slots):
-                break
-        return done
-
     # ------------------------------------------------------------------
-    def _reset_row(self, slot: int):  # pragma: no cover - interface
-        raise NotImplementedError
-
-    def _prefill_row(self, slot: int, toks: np.ndarray, pos0: int):
-        raise NotImplementedError  # pragma: no cover - interface
-
     def _forward(self, tokens: np.ndarray, pos: np.ndarray,
                  n_active: int):
+        raise NotImplementedError  # pragma: no cover - interface
+
+
+class _PagedEngine(_EngineBase):
+    """Continuous-batching scheduler over a paged KV cache.
+
+    The serving-side analogue of the paper's light-service online
+    controller (SERVING.md maps the correspondence): instead of
+    admitting work only when a whole dense slot frees, every scheduler
+    step greedily admits queued requests while the block pool has
+    room (token-level admission), grows running requests block-by-
+    block, and resolves pool exhaustion by preempting the most
+    recently admitted request (recompute on re-admission keeps greedy
+    outputs token-identical).
+
+    Decode rows (``max_rows``) bound *batch width* only; memory is
+    bounded by the block pool, so with mixed-length requests the same
+    cache memory sustains far more concurrent sequences than the dense
+    engines (benchmarks/paged_bench.py measures this).
+
+    Subclasses supply ``_reset_row`` / ``_prefill_row`` / ``_forward``
+    (same contract as :class:`_SlotEngine`, with rows instead of
+    slots).
+    """
+
+    MAX_STEPS = 4096  # preemption churn can stretch a busy run
+
+    def __init__(self, cfg, *, max_rows: int, max_len: int,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 prefill_chunk: int = 16, watermark_blocks: int = 0):
+        super().__init__(cfg, prefill_chunk=prefill_chunk)
+        self.max_rows = max_rows
+        self.max_len = max_len
+        self.pc = PagedCache(cfg, max_rows=max_rows, max_len=max_len,
+                             block_size=block_size, num_blocks=num_blocks,
+                             watermark_blocks=watermark_blocks)
+        self.pos = np.zeros(max_rows, dtype=np.int32)
+        self.rows: List[Optional[Request]] = [None] * max_rows
+        self._admit_order: List[int] = []   # rows, oldest admission first
+        self.n_preemptions = 0
+
+    def _free_rows(self) -> List[int]:
+        return [i for i, r in enumerate(self.rows) if r is None]
+
+    def _idle(self) -> bool:
+        return all(r is None for r in self.rows)
+
+    def _admit(self):
+        """Token-level admission: FIFO head admits whenever a decode row
+        is free and the pool holds its blocks (prompt + already-decoded
+        prefix after a preemption).  Head-of-line order is kept — a
+        blocked head waits rather than being overtaken, so admission
+        order (and with it preemption priority) is deterministic."""
+        free = self._free_rows()
+        while free and self.queue:
+            req = self.queue[0]
+            if (len(req.prompt) + req.max_new_tokens > self.max_len
+                    or not self.pc.fits(
+                        len(req.prompt) + req.max_new_tokens)):
+                self.queue.pop(0)
+                self._reject(
+                    req, f"prompt of {len(req.prompt)} + max_new_tokens "
+                         f"{req.max_new_tokens} exceeds capacity "
+                         f"(max_len {self.max_len}, "
+                         f"{self.pc.num_blocks} blocks)")
+                continue
+            total = len(req.prompt) + len(req.out_tokens)
+            wm = (None if any(r is not None for r in self.rows) else 0)
+            if not self.pc.can_admit(total, watermark=wm):
+                break
+            self.queue.pop(0)
+            row = free.pop(0)
+            if not self.pc.admit(row, total, watermark=wm):
+                # can_admit above said yes; a refusal here is a ledger
+                # bug and must not be silently skipped (nor live in an
+                # assert — ``python -O`` would strip the allocation)
+                raise RuntimeError(
+                    f"ledger refused admission it just approved "
+                    f"(row {row}, {total} tokens)")
+            if req.t_admit is None:
+                req.t_admit = self.t
+            self.rows[row] = req
+            self._admit_order.append(row)
+            self._reset_row(row)
+            toks = (req.prompt + req.out_tokens)[:-1]
+            self._prefill_chunks(row, toks)
+            self.pos[row] = len(toks)
+
+    def _preempt(self, row: int):
+        """Preempt-by-recompute: free the row's blocks and put the
+        request back at the head of the queue carrying its generated
+        prefix; re-admission re-prefills prompt+prefix, and greedy
+        decode continues token-identically."""
+        req = self.rows[row]
+        self.pc.release(row)
+        self.rows[row] = None
+        self._admit_order.remove(row)
+        self.queue.insert(0, req)
+        self.n_preemptions += 1
+
+    def _grow(self):
+        """Ensure every active row owns the block its next decode token
+        writes into; on pool exhaustion preempt newest-admitted rows
+        until the write fits (oldest rows are served first, so the
+        oldest request always makes progress)."""
+        for row in list(self._admit_order):
+            if self.rows[row] is None:
+                continue
+            while not self.pc.ensure(row, int(self.pos[row])):
+                victim = next(r for r in reversed(self._admit_order)
+                              if self.rows[r] is not None)
+                self._preempt(victim)
+                if victim == row:
+                    break
+
+    # ------------------------------------------------------------------
+    def step(self) -> List[Request]:
+        """One scheduler iteration: admit + grow/preempt + batched
+        decode.  Returns finished requests."""
+        self.t += 1
+        self._admit()
+        self._grow()
+        active = [i for i, r in enumerate(self.rows) if r is not None]
+        if not active:
+            return []
+        tokens = self._next_tokens(self.max_rows, active, self.rows)
+        # pos snapshotted for the same jnp.asarray-aliasing reason as
+        # the slot engine
+        logits = self._forward(tokens, self.pos.copy())
+        nxt = self._greedy(logits)
+        finished = []
+        for i in active:
+            req = self.rows[i]
+            req.out_tokens.append(int(nxt[i]))
+            self.tokens_generated += 1
+            self.pos[i] += 1
+            if req.done or self.pos[i] >= self.max_len - 1:
+                req.t_done = self.t
+                finished.append(req)
+                self.rows[i] = None
+                self._admit_order.remove(i)
+                self.pc.release(i)
+        return finished
+
+    @property
+    def active_rows(self) -> int:
+        return sum(1 for r in self.rows if r is not None)
+
+    # ------------------------------------------------------------------
+    def _forward(self, tokens: np.ndarray, pos: np.ndarray):
         raise NotImplementedError  # pragma: no cover - interface
 
 
@@ -198,4 +434,47 @@ class ServingEngine(_SlotEngine):
         logits, self.caches = self._decode(
             self.params, self.caches,
             {"token": jnp.asarray(tokens), "pos": jnp.asarray(pos)})
+        return logits
+
+
+class PagedServingEngine(_PagedEngine):
+    """Monolithic paged engine: the continuous scheduler over one
+    jitted paged decode/prefill (``Model.paged_decode_step`` /
+    ``paged_prefill_chunk``).  Greedy outputs are token-identical to
+    :class:`ServingEngine` at equal ``max_len``/``cache_len``
+    (tests/test_paged.py)."""
+
+    def __init__(self, cfg, params=None, *, max_rows: int = 8,
+                 max_len: int = 128, block_size: int = 16,
+                 num_blocks: Optional[int] = None, seed: int = 0,
+                 prefill_chunk: int = 16, watermark_blocks: int = 0):
+        super().__init__(cfg, max_rows=max_rows, max_len=max_len,
+                         block_size=block_size, num_blocks=num_blocks,
+                         prefill_chunk=prefill_chunk,
+                         watermark_blocks=watermark_blocks)
+        self.model = build_model(cfg)
+        key = jax.random.PRNGKey(seed)
+        self.params = params if params is not None else self.model.init(key)
+        self.caches = self.pc.struct(self.model.dtype)
+        self._decode = jax.jit(self.model.paged_decode_step)
+        self._prefill = jax.jit(self.model.paged_prefill_chunk)
+        segs = self.model.segments
+        self._reset = jax.jit(
+            lambda caches, row, xids: paged_reset_row(caches, segs, row,
+                                                      xids))
+
+    def _reset_row(self, row: int):
+        xids = jnp.asarray(self.pc.cross_tables[row].copy())
+        self.caches = self._reset(self.caches, jnp.int32(row), xids)
+
+    def _prefill_row(self, row: int, toks: np.ndarray, pos0: int):
+        _, self.caches = self._prefill(
+            self.params, self.caches, jnp.asarray(toks[None]),
+            jnp.int32(pos0), jnp.int32(row), self.pc.meta(row=row))
+
+    def _forward(self, tokens: np.ndarray, pos: np.ndarray):
+        logits, self.caches = self._decode(
+            self.params, self.caches,
+            {"token": jnp.asarray(tokens), "pos": jnp.asarray(pos)},
+            self.pc.meta())
         return logits

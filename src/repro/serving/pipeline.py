@@ -1,4 +1,4 @@
-"""Pipeline-parallel microservice serving executor.
+"""Pipeline-parallel microservice serving executors (dense + paged).
 
 `microservice.partition.decompose` turns a model into light services
 plus N core stages over contiguous layer ranges; until now those specs
@@ -9,7 +9,9 @@ closes the profile→place→execute loop:
   1. each core stage becomes a sub-executor owning **only** its layer
      range's parameter slice and cache slice
      (:meth:`repro.models.model.Model.stage_params` /
-     ``init_cache(layers=...)``);
+     ``init_cache(layers=...)`` — or, for the paged executor, the layer
+     range's slice of the shared block pools,
+     :meth:`repro.models.kvcache.PagedCache.struct`);
   2. activations hand off between stages through a network shim whose
      per-hop latency/bandwidth comes from a ``core.network.EdgeNetwork``
      and a stage→node placement — a ``static_placement`` solution
@@ -25,6 +27,14 @@ ranges reproduces the forward op-for-op); the network is simulated
 (hop delays are accounted, not slept).  Light services are accounted at
 fixed homes: tokenize/detokenize at the entry node, sample co-located
 with the exit stage.
+
+Cache layout invariants: every stage's cache slice is indexed by the
+same request identity — dense engines by batch slot (each stage holds
+that slot's rows for its layers), paged engines by the *engine-level*
+block tables (one :class:`~repro.models.kvcache.PagedCache` ledger
+governs every stage's pools, so block id ``b`` addresses the same
+logical tokens in each stage's layer slice).  Admission zeroes the
+request's SSM state rows and cross blocks in **every** stage.
 
 Enc-dec configs: the ``encoder`` core stage is planning-only here, as in
 ``ServingEngine`` (token requests carry no frontend; decoder cross-attn
@@ -45,8 +55,11 @@ from repro.core.qos import qos_scores
 from repro.microservice.partition import (StageSpec, decompose,
                                           profile_stage_ms, to_application)
 from repro.models import build_model
-from repro.models.model import row_isolated
-from repro.serving.engine import _SlotEngine, reset_cache_row
+from repro.models.kvcache import PagedCache, paged_reset_row
+from repro.models.model import row_isolated, ssm_row_isolated
+from repro.models.transformer import segment_range
+from repro.serving.engine import (_PagedEngine, _SlotEngine,
+                                  reset_cache_row)
 
 PLACEMENT_STRATEGIES = ("static_ip", "colocate", "round_robin", "random")
 
@@ -93,75 +106,112 @@ def place_stages(app, net, strategy: str = "static_ip", *, kappa: int = 2,
 
 class _CoreStage:
     """One sub-executor: layers [lo, hi), its param/cache slices, and
-    jitted decode / chunked-prefill / row-reset programs."""
+    jitted decode / chunked-prefill / row-reset programs.
+
+    With ``paged`` set (a :class:`~repro.models.kvcache.PagedCache`),
+    the stage's caches are its layer slice of the shared block pools
+    and every jitted program takes the engine's block-table metadata.
+    """
 
     def __init__(self, model, params, spec: StageSpec, *, entry: bool,
-                 exit_head: bool, max_batch: int, cache_len: int):
+                 exit_head: bool, max_batch: int, cache_len: int,
+                 paged: Optional[PagedCache] = None):
         self.spec = spec
         self.name = spec.name
         self.lo, self.hi = spec.layer_range
         self.node: int = 0
+        self.paged = paged
         self.params = model.stage_params(params, self.lo, self.hi,
                                          entry=entry, exit_head=exit_head)
         # admission discards prompt logits, so prefill skips the head
         self.prefill_params = {k: v for k, v in self.params.items()
                                if k not in ("lm_head", "final_norm")}
-        self.caches = model.init_cache(max_batch, cache_len,
-                                       layers=(self.lo, self.hi))
         lo, hi = self.lo, self.hi
+        segs = segment_range(model.cfg, lo, hi)
 
-        def _decode(p, caches, x, pos):
-            y, new_caches, _ = model.run_stages(p, x, lo, hi, mode="decode",
-                                                pos=pos, caches=caches)
-            return y, new_caches
+        if paged is None:
+            self.caches = model.init_cache(max_batch, cache_len,
+                                           layers=(lo, hi))
 
-        def _prefill(p, caches, x, pos0, slot):
-            def run(row):
-                y, new_row, _ = model.run_stages(
-                    p, x, lo, hi, mode="chunk",
-                    pos=jnp.reshape(pos0, (1,)).astype(jnp.int32),
-                    caches=row)
-                return y, new_row
-            return row_isolated(run, caches, slot)
+            def _decode(p, caches, x, pos):
+                y, new_caches, _ = model.run_stages(
+                    p, x, lo, hi, mode="decode", pos=pos, caches=caches)
+                return y, new_caches
+
+            def _prefill(p, caches, x, pos0, slot):
+                def run(row):
+                    y, new_row, _ = model.run_stages(
+                        p, x, lo, hi, mode="chunk",
+                        pos=jnp.reshape(pos0, (1,)).astype(jnp.int32),
+                        caches=row)
+                    return y, new_row
+                return row_isolated(run, caches, slot)
+
+            self._reset = jax.jit(reset_cache_row)
+        else:
+            self.caches = paged.struct(model.dtype, layers=(lo, hi))
+
+            def _decode(p, caches, x, pos, pmeta):
+                y, new_caches, _ = model.run_stages(
+                    p, x, lo, hi, mode="decode", pos=pos, caches=caches,
+                    paged=pmeta)
+                return y, new_caches
+
+            def _prefill(p, caches, x, pos0, row, pmeta):
+                def run(c):
+                    y, new_c, _ = model.run_stages(
+                        p, x, lo, hi, mode="chunk",
+                        pos=jnp.reshape(pos0, (1,)).astype(jnp.int32),
+                        caches=c, paged=pmeta)
+                    return y, new_c
+                return ssm_row_isolated(run, segs, caches, row)
+
+            self._reset = jax.jit(
+                lambda caches, row, xids: paged_reset_row(caches, segs,
+                                                          row, xids))
 
         self._decode = jax.jit(_decode)
         self._prefill = jax.jit(_prefill)
-        self._reset = jax.jit(reset_cache_row)
 
-    def decode(self, x, pos):
-        x, self.caches = self._decode(self.params, self.caches, x, pos)
+    def decode(self, x, pos, pmeta=None):
+        if self.paged is None:
+            x, self.caches = self._decode(self.params, self.caches, x, pos)
+        else:
+            x, self.caches = self._decode(self.params, self.caches, x, pos,
+                                          pmeta)
         return x
 
-    def prefill(self, x, pos0, slot):
-        x, self.caches = self._prefill(self.prefill_params, self.caches, x,
-                                       pos0, slot)
+    def prefill(self, x, pos0, slot, pmeta=None):
+        if self.paged is None:
+            x, self.caches = self._prefill(self.prefill_params, self.caches,
+                                           x, pos0, slot)
+        else:
+            x, self.caches = self._prefill(self.prefill_params, self.caches,
+                                           x, pos0, slot, pmeta)
         return x
 
-    def reset_row(self, slot):
-        self.caches = self._reset(self.caches, slot)
+    def reset_row(self, slot, xids=None):
+        if self.paged is None:
+            self.caches = self._reset(self.caches, slot)
+        else:
+            self.caches = self._reset(self.caches, slot, xids)
 
 
-class PipelinedEngine(_SlotEngine):
-    """Continuous-batching engine whose forward pass is split across
-    placed core stages.  API mirrors :class:`ServingEngine` (both share
-    the :class:`_SlotEngine` state machine); greedy outputs are
-    token-identical to it (tests/test_pipeline.py).
-
-    Simulated-network stats accumulate in :attr:`transfer_ms` /
+class _NetShimMixin:
+    """Placement, profiling, and simulated-network accounting shared by
+    the dense and paged pipelined engines (the profile→place→execute
+    loop).  Simulated-network stats accumulate in :attr:`transfer_ms` /
     :attr:`transfer_mb` / :attr:`hops` (keyed ``(src_node, dst_node)``).
     """
 
-    def __init__(self, cfg, params=None, *, n_stages: int = 2,
-                 max_batch: int = 4, cache_len: int = 128, seed: int = 0,
-                 prefill_chunk: int = 16, net=None,
-                 placement: Optional[Dict[str, int]] = None,
-                 entry_node: Optional[int] = None):
+    def _init_stages_and_net(self, cfg, params, *, n_stages, max_batch,
+                             cache_len, seed, net, placement, entry_node,
+                             paged: Optional[PagedCache] = None):
         assert 1 <= n_stages <= cfg.n_layers, (n_stages, cfg.n_layers)
-        super().__init__(cfg, max_batch=max_batch, cache_len=cache_len,
-                         prefill_chunk=prefill_chunk)
         self.model = build_model(cfg)
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else self.model.init(key)
+        self.batch_width = max_batch
 
         self.stage_specs: List[StageSpec] = decompose(
             cfg, n_core_stages=n_stages)
@@ -170,7 +220,8 @@ class PipelinedEngine(_SlotEngine):
         self.stages = [
             _CoreStage(self.model, self.params, spec,
                        entry=(i == 0), exit_head=(i == len(decoder) - 1),
-                       max_batch=max_batch, cache_len=cache_len)
+                       max_batch=max_batch, cache_len=cache_len,
+                       paged=paged)
             for i, spec in enumerate(decoder)]
 
         self.net = net
@@ -201,17 +252,21 @@ class PipelinedEngine(_SlotEngine):
         """Measured per-stage decode latency (ms) via
         ``partition.profile_stage_ms`` — feed to :meth:`to_application`."""
         out = {}
-        pos = jnp.zeros((self.max_batch,), jnp.int32)
+        pos = jnp.zeros((self.batch_width,), jnp.int32)
+        meta = self.pc.meta() if hasattr(self, "pc") else None
         for i, st in enumerate(self.stages):
             if i == 0:
-                x = jnp.zeros((self.max_batch, 1), jnp.int32)
+                x = jnp.zeros((self.batch_width, 1), jnp.int32)
             else:
-                x = jnp.zeros((self.max_batch, 1, self.cfg.d_model),
+                x = jnp.zeros((self.batch_width, 1, self.cfg.d_model),
                               jnp.dtype(self.cfg.dtype))
-            out[st.name] = profile_stage_ms(
-                lambda xx=x, ss=st: ss._decode(ss.params, ss.caches, xx,
-                                               pos)[0],
-                iters=iters)
+            if meta is None:
+                fn = (lambda xx=x, ss=st:
+                      ss._decode(ss.params, ss.caches, xx, pos)[0])
+            else:
+                fn = (lambda xx=x, ss=st:
+                      ss._decode(ss.params, ss.caches, xx, pos, meta)[0])
+            out[st.name] = profile_stage_ms(fn, iters=iters)
         return out
 
     def to_application(self, rng: np.random.Generator,
@@ -236,6 +291,30 @@ class PipelinedEngine(_SlotEngine):
         agg["mb"] += mb
         agg["ms"] += ms
 
+    def _ship_between(self, k: int, n: int, per_token_bytes: float):
+        if k + 1 < len(self.stages):
+            self._ship(self.stages[k].node, self.stages[k + 1].node,
+                       n * per_token_bytes / 1e6)
+
+
+class PipelinedEngine(_SlotEngine, _NetShimMixin):
+    """Continuous-batching engine whose forward pass is split across
+    placed core stages.  API mirrors :class:`ServingEngine` (both share
+    the :class:`_SlotEngine` state machine); greedy outputs are
+    token-identical to it (tests/test_pipeline.py)."""
+
+    def __init__(self, cfg, params=None, *, n_stages: int = 2,
+                 max_batch: int = 4, cache_len: int = 128, seed: int = 0,
+                 prefill_chunk: int = 16, net=None,
+                 placement: Optional[Dict[str, int]] = None,
+                 entry_node: Optional[int] = None):
+        super().__init__(cfg, max_batch=max_batch, cache_len=cache_len,
+                         prefill_chunk=prefill_chunk)
+        self._init_stages_and_net(cfg, params, n_stages=n_stages,
+                                  max_batch=max_batch, cache_len=cache_len,
+                                  seed=seed, net=net, placement=placement,
+                                  entry_node=entry_node)
+
     # ------------------------------------------------------------------
     # _SlotEngine hooks
     # ------------------------------------------------------------------
@@ -251,9 +330,7 @@ class PipelinedEngine(_SlotEngine):
         self._ship(self.entry_node, self.stages[0].node, c * 4 / 1e6)
         for k, st in enumerate(self.stages):
             x = st.prefill(x, p0, sl)
-            if k + 1 < len(self.stages):
-                self._ship(st.node, self.stages[k + 1].node,
-                           c * self._act_bytes / 1e6)
+            self._ship_between(k, c, self._act_bytes)
 
     def _forward(self, tokens: np.ndarray, pos: np.ndarray,
                  n_active: int):
@@ -262,9 +339,67 @@ class PipelinedEngine(_SlotEngine):
         self._ship(self.entry_node, self.stages[0].node, n_active * 4 / 1e6)
         for k, st in enumerate(self.stages):
             x = st.decode(x, pos_j)
-            if k + 1 < len(self.stages):
-                self._ship(st.node, self.stages[k + 1].node,
-                           n_active * self._act_bytes / 1e6)
+            self._ship_between(k, n_active, self._act_bytes)
+        # "sample" runs co-located with the exit stage; the emitted token
+        # id ships back to the entry node for detokenize
+        self._ship(self.stages[-1].node, self.entry_node, n_active * 4 / 1e6)
+        return x
+
+
+class PagedPipelinedEngine(_PagedEngine, _NetShimMixin):
+    """Paged continuous-batching engine over placed core stages: the
+    block-granular scheduler of :class:`_PagedEngine` with the stage
+    executor + network shim of :class:`PipelinedEngine`.  One
+    engine-level :class:`~repro.models.kvcache.PagedCache` ledger
+    governs every stage's layer-sliced pools, so admission, growth,
+    and preemption decisions apply to the whole pipeline at once.
+    Greedy outputs are token-identical to the dense engines
+    (tests/test_paged.py)."""
+
+    def __init__(self, cfg, params=None, *, n_stages: int = 2,
+                 max_rows: int = 8, max_len: int = 128,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 seed: int = 0, prefill_chunk: int = 16,
+                 watermark_blocks: int = 0, net=None,
+                 placement: Optional[Dict[str, int]] = None,
+                 entry_node: Optional[int] = None):
+        super().__init__(cfg, max_rows=max_rows, max_len=max_len,
+                         block_size=block_size, num_blocks=num_blocks,
+                         prefill_chunk=prefill_chunk,
+                         watermark_blocks=watermark_blocks)
+        self._init_stages_and_net(cfg, params, n_stages=n_stages,
+                                  max_batch=max_rows, cache_len=max_len,
+                                  seed=seed, net=net, placement=placement,
+                                  entry_node=entry_node, paged=self.pc)
+
+    # ------------------------------------------------------------------
+    # _PagedEngine hooks
+    # ------------------------------------------------------------------
+    def _reset_row(self, row: int):
+        r = jnp.int32(row)
+        xids = jnp.asarray(self.pc.cross_tables[row].copy())
+        for st in self.stages:
+            st.reset_row(r, xids)
+
+    def _prefill_row(self, row: int, toks: np.ndarray, pos0: int):
+        c = len(toks)
+        x = jnp.asarray(toks[None])
+        p0, r = jnp.int32(pos0), jnp.int32(row)
+        meta = self.pc.meta(row=row)
+        self._ship(self.entry_node, self.stages[0].node, c * 4 / 1e6)
+        for k, st in enumerate(self.stages):
+            x = st.prefill(x, p0, r, meta)
+            self._ship_between(k, c, self._act_bytes)
+
+    def _forward(self, tokens: np.ndarray, pos: np.ndarray):
+        n_active = self.active_rows
+        x = jnp.asarray(tokens)
+        pos_j = jnp.asarray(pos)
+        meta = self.pc.meta()
+        self._ship(self.entry_node, self.stages[0].node, n_active * 4 / 1e6)
+        for k, st in enumerate(self.stages):
+            x = st.decode(x, pos_j, meta)
+            self._ship_between(k, n_active, self._act_bytes)
         # "sample" runs co-located with the exit stage; the emitted token
         # id ships back to the entry node for detokenize
         self._ship(self.stages[-1].node, self.entry_node, n_active * 4 / 1e6)

@@ -1,10 +1,12 @@
 """Per-kernel shape/dtype sweeps vs the ref.py oracles (interpret mode)."""
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.decode_attention import (decode_attention_pallas,
+                                            paged_decode_attention_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.selective_scan import selective_scan_pallas
@@ -57,6 +59,41 @@ def test_decode_attention(b, h, kv, s, d, dtype):
     err = jnp.max(jnp.abs(out.astype(jnp.float32)
                           - exp.astype(jnp.float32)))
     assert float(err) < _tol(dtype) * 10, float(err)
+
+
+@pytest.mark.parametrize("b,h,kv,nb,bs,d", [
+    (2, 4, 4, 4, 16, 64),     # MHA
+    (3, 8, 2, 3, 8, 32),      # GQA, odd pool
+    (2, 4, 1, 5, 32, 128),    # MQA, wide head
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention(b, h, kv, nb, bs, d, dtype):
+    """Block-table-gather kernel vs the paged oracle AND vs the dense
+    kernel on the pre-gathered logical view (the two must agree
+    bitwise: paging only changes addressing, never math)."""
+    nb_phys = b * nb + 3   # slack blocks the tables never reference
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (b, h, d), dtype)
+    kp = jax.random.normal(ks[1], (kv, nb_phys, bs, d), dtype)
+    vp = jax.random.normal(ks[2], (kv, nb_phys, bs, d), dtype)
+    rng = np.random.default_rng(0)
+    ids = rng.permutation(nb_phys - 1)[: b * nb].reshape(b, nb) + 1
+    tables = jnp.asarray(ids, jnp.int32)
+    pos = jnp.asarray(rng.integers(0, nb * bs, size=b), jnp.int32)
+
+    out = paged_decode_attention_pallas(q, kp, vp, tables, pos,
+                                        interpret=True)
+    exp = ref.paged_decode_attention_ref(q, kp, vp, tables, pos)
+    err = jnp.max(jnp.abs(out.astype(jnp.float32)
+                          - exp.astype(jnp.float32)))
+    assert float(err) < _tol(dtype) * 10, float(err)
+
+    kg = jnp.moveaxis(kp[:, tables], 1, 0).reshape(b, kv, nb * bs, d)
+    vg = jnp.moveaxis(vp[:, tables], 1, 0).reshape(b, kv, nb * bs, d)
+    dense = decode_attention_pallas(q, kg, vg, pos, block_s=bs,
+                                    interpret=True)
+    assert float(jnp.max(jnp.abs(
+        out.astype(jnp.float32) - dense.astype(jnp.float32)))) == 0.0
 
 
 @pytest.mark.parametrize("b,t,di,ds", [

@@ -183,7 +183,8 @@ def test_profile_feeds_to_application():
 def test_pipelined_admission_honors_max_new_tokens_headroom():
     """Same cache-boundary contract as the monolithic engine (the slot
     state machine is shared; both engines must refuse a request whose
-    prompt + max_new_tokens exceed the cache)."""
+    prompt + max_new_tokens exceed the cache — by failing just that
+    request, not the engine)."""
     cfg = get_smoke_config("smollm-360m")
     eng = PipelinedEngine(cfg, n_stages=2, max_batch=1, cache_len=16)
     eng.submit(Request(id=0, prompt=list(range(1, 11)), max_new_tokens=6))
@@ -192,5 +193,8 @@ def test_pipelined_admission_honors_max_new_tokens_headroom():
 
     eng2 = PipelinedEngine(cfg, n_stages=2, max_batch=1, cache_len=16)
     eng2.submit(Request(id=1, prompt=list(range(1, 17)), max_new_tokens=4))
-    with pytest.raises(AssertionError):
-        eng2.run()
+    eng2.submit(Request(id=2, prompt=[5, 6], max_new_tokens=3))
+    done = eng2.run()
+    assert [r.id for r in eng2.rejected] == [1]
+    assert eng2.rejected[0].error is not None
+    assert [(r.id, len(r.out_tokens)) for r in done] == [(2, 3)]

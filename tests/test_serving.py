@@ -71,7 +71,37 @@ def test_admission_honors_max_new_tokens_headroom():
     (done,) = eng.run()
     assert len(done.out_tokens) == 6
 
-    eng2 = ServingEngine(cfg, max_batch=1, cache_len=16)
-    eng2.submit(Request(id=1, prompt=list(range(1, 17)), max_new_tokens=4))
-    with pytest.raises(AssertionError):
-        eng2.run()
+
+def test_oversized_request_rejected_not_fatal():
+    """An oversized request must fail alone (Request.error +
+    engine.rejected) instead of killing the engine — the old bare
+    ``assert`` was stripped under ``python -O`` and fatal to every
+    co-batched request."""
+    cfg = get_smoke_config("smollm-360m")
+    eng = ServingEngine(cfg, max_batch=1, cache_len=16)
+    eng.submit(Request(id=1, prompt=list(range(1, 17)), max_new_tokens=4))
+    eng.submit(Request(id=2, prompt=[3, 1, 4], max_new_tokens=4))
+    done = eng.run()
+    assert [r.id for r in eng.rejected] == [1]
+    assert "exceeds" in eng.rejected[0].error
+    assert not eng.rejected[0].out_tokens
+    assert [(r.id, len(r.out_tokens)) for r in done] == [(2, 4)]
+
+
+def test_request_timestamps_populated():
+    """t_submit/t_admit/t_done are step-counter stamps: queueing delay
+    and completion latency must be derivable for every served request
+    (paged_bench reports them)."""
+    cfg = get_smoke_config("smollm-360m")
+    eng = ServingEngine(cfg, max_batch=1, cache_len=32)
+    for i in range(3):
+        eng.submit(Request(id=i, prompt=[1 + i, 2, 3], max_new_tokens=4))
+    done = sorted(eng.run(), key=lambda r: r.id)
+    assert len(done) == 3
+    for r in done:
+        assert r.t_admit is not None and r.t_done is not None
+        assert r.t_submit <= r.t_admit <= r.t_done
+        assert r.t_done - r.t_admit >= r.max_new_tokens - 1
+    # max_batch=1 serializes: later requests queue strictly longer
+    waits = [r.t_admit - r.t_submit for r in done]
+    assert waits[0] < waits[1] < waits[2]

@@ -1,11 +1,22 @@
-"""Docs link-checker: every relative markdown link/reference resolves.
+"""Docs checker: links resolve AND quoted file references exist.
 
-Scans all *.md files in the repo (skipping hidden dirs) for inline
-links `[text](target)`, checks that non-URL targets exist relative to
-the containing file, and verifies the backtick-quoted file paths the
-docs lean on (``src/...``, ``tests/...``, ``benchmarks/...``,
-``examples/...``, ``tools/...``) point at real files.  Exits non-zero
-listing every broken reference.
+Two layers of rot protection, both part of ``make ci`` (``make docs``):
+
+1. **Links, all markdown** — every inline ``[text](target)`` in every
+   *.md file (hidden dirs skipped) must resolve relative to the
+   containing file, and every backtick-quoted top-level path
+   (``src/...``, ``tests/...``, ``benchmarks/...``, ``examples/...``,
+   ``tools/...``) must exist.
+2. **File references, curated docs** — in the living documentation set
+   (README / ARCHITECTURE / EXPERIMENTS / SERVING), *any* backtick
+   reference that looks like a source path — ``core/simulator.py``,
+   ``repro/experiments/scenarios.py``, ``serving/engine.py::step`` —
+   must point at a real file, tried relative to the repo root,
+   ``src/`` and ``src/repro/`` (module-style shorthand is how these
+   docs cite code).  A renamed or deleted module fails CI instead of
+   silently rotting the guide.
+
+Exits non-zero listing every broken reference.
 
   python tools/check_docs.py [root]
 """
@@ -18,7 +29,14 @@ import sys
 LINK_RE = re.compile(r"(?<!!)\[[^\]]+\]\(([^)\s#]+)(?:#[^)]*)?\)")
 PATH_RE = re.compile(
     r"`((?:src|tests|benchmarks|examples|tools)/[\w./-]+\.\w+)`")
+# any backtick path-with-a-slash ending in a source/doc extension,
+# optionally carrying a ::member suffix
+REL_PATH_RE = re.compile(
+    r"`([\w][\w./-]*/[\w.-]+\.(?:py|md|json|txt|toml|cfg))(?:::[\w.]+)?`")
 SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+# the curated documentation set held to the stricter file-reference bar
+CURATED = ("README.md", "ARCHITECTURE.md", "EXPERIMENTS.md", "SERVING.md")
+REL_ROOTS = ("", "src", os.path.join("src", "repro"))
 
 
 def md_files(root: str):
@@ -28,6 +46,11 @@ def md_files(root: str):
         for f in filenames:
             if f.endswith(".md"):
                 yield os.path.join(dirpath, f)
+
+
+def resolve_rel(root: str, target: str) -> bool:
+    return any(os.path.exists(os.path.join(root, base, target))
+               for base in REL_ROOTS)
 
 
 def check(root: str):
@@ -46,13 +69,18 @@ def check(root: str):
         for m in PATH_RE.finditer(text):
             if not os.path.exists(os.path.join(root, m.group(1))):
                 errors.append(f"{rel}: missing path -> {m.group(1)}")
+        if os.path.basename(path) in CURATED:
+            for m in REL_PATH_RE.finditer(text):
+                if not resolve_rel(root, m.group(1)):
+                    errors.append(
+                        f"{rel}: missing file reference -> {m.group(1)}")
     return errors
 
 
 def main():
     root = sys.argv[1] if len(sys.argv) > 1 else os.path.dirname(
         os.path.dirname(os.path.abspath(__file__)))
-    errors = check(root)
+    errors = sorted(set(check(root)))
     for e in errors:
         print(e)
     n = sum(1 for _ in md_files(root))
