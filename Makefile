@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke simbench docs ci
+.PHONY: test smoke simbench engine-bench docs ci
 
 # tier-1: must collect and pass with or without hypothesis installed
 test:
@@ -16,6 +16,13 @@ smoke:
 # printed trials/s + speedup-vs-floor are informational (noisy boxes)
 simbench:
 	$(PY) -m benchmarks.sim_bench --quick
+
+# decode hot-loop bench, full size: refreshes the committed
+# bench_engine.json baseline (the `make smoke` chain writes CI-sized
+# numbers to the scratch bench_engine_quick.json instead)
+engine-bench:
+	$(PY) -m benchmarks.engine_bench --out bench_engine.json
+	$(PY) -m benchmarks.report --engine bench_engine.json
 
 # docs gate: every relative link in *.md resolves, quoted source-file
 # references in README/ARCHITECTURE/EXPERIMENTS/SERVING point at real

@@ -63,14 +63,18 @@ DEFAULT_CONFIGS = "smollm-360m,qwen2-72b"
 
 
 def build_trace(scenario: str, seed: int, n_requests: int, max_len: int,
-                span_steps: int | None = None, short_frac: float = 0.7):
+                span_steps: int | None = None, short_frac: float = 0.7,
+                new_lo: int = 4, new_hi: int = 21):
     """Deterministic mixed-length request trace: (arrival_step, prompt,
     max_new_tokens) tuples, arrival counts modulated by the scenario's
     workload dynamics (stationary scenarios fall back to Poisson).
 
     The default span packs ~2 arrivals per engine step so the offered
     load exceeds the dense engine's slot count — the regime where
-    block-granular admission matters."""
+    block-granular admission matters.  ``new_lo``/``new_hi`` bound the
+    sampled ``max_new_tokens`` — the defaults keep this bench's
+    admission-heavy mix; `benchmarks/engine_bench.py` raises them for a
+    decode-dominant (steady-state) variant of the same trace."""
     if span_steps is None:
         span_steps = max(8, n_requests // 2)
     ss = np.random.SeedSequence(
@@ -89,7 +93,7 @@ def build_trace(scenario: str, seed: int, n_requests: int, max_len: int,
                 p_len = int(r_len.integers(6, 17))
             else:
                 p_len = int(r_len.integers(40, 65))
-            new = min(int(r_len.integers(4, 21)), max_len - 2)
+            new = min(int(r_len.integers(new_lo, new_hi)), max_len - 2)
             p_len = max(1, min(p_len, max_len - new))
             prompt = [int(x) for x in r_len.integers(1, 500, size=p_len)]
             trace.append((t, prompt, new))

@@ -78,6 +78,44 @@ def load(path):
     return list(seen.values())
 
 
+def engine_table(path: str) -> None:
+    """Markdown summary of a benchmarks.engine_bench JSON: the
+    PR-over-PR perf trajectory of the decode hot loop (tokens/s and
+    host-overhead-per-token by engine and macro-step K), plus the K=max
+    vs K=1 speedup per engine."""
+    from repro.experiments.results import load_results
+    try:
+        rows, meta = load_results(path)
+    except FileNotFoundError:
+        print(f"\n### §Decode hot loop — {path}: missing, skipped\n")
+        return
+    print(f"\n### §Decode hot loop — {path} "
+          f"(scenario={meta.get('scenario', '?')}, "
+          f"trace={meta.get('n_requests', '?')} reqs, "
+          f"batch={meta.get('max_batch', '?')})\n")
+    print("| arch | engine | K | tok/s | disp/token | syncs/token | "
+          "steady syncs | uploads/token | match |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['arch']} | {r['engine']} | {r['k']} "
+              f"| {r['tok_per_s']:.0f} | {r['dispatches_per_token']:.4f} "
+              f"| {r['syncs_per_token']:.4f} "
+              f"| {r['steady_syncs_per_token']:.4f} "
+              f"| {r['uploads_per_token']:.4f} "
+              f"| {r['outputs_match']} |")
+    by = {}
+    for r in rows:
+        by.setdefault((r["arch"], r["engine"]), {})[r["k"]] = r["tok_per_s"]
+    lines = []
+    for (arch, eng), ks in sorted(by.items()):
+        if len(ks) > 1:
+            k1, kmax = min(ks), max(ks)
+            lines.append(f"{arch}/{eng}: K={kmax} is "
+                         f"{ks[kmax] / ks[k1]:.2f}x K={k1}")
+    if lines:
+        print("\n" + "; ".join(lines))
+
+
 def experiments_tables(paths) -> None:
     """Markdown summaries of replication-runner JSON result files."""
     from repro.experiments.results import (load_results, markdown_table,
@@ -104,10 +142,17 @@ def main():
     ap.add_argument("--roofline", default="roofline_results.jsonl")
     ap.add_argument("--experiments", nargs="*", default=[],
                     help="replication-runner JSON files to summarize")
+    ap.add_argument("--engine", default=None,
+                    help="benchmarks.engine_bench JSON to summarize "
+                         "(e.g. bench_engine.json)")
     args = ap.parse_args()
 
     if args.experiments:
         experiments_tables(args.experiments)
+    if args.engine:
+        engine_table(args.engine)
+        if not args.experiments:
+            return
 
     dry = load(args.dryrun)
     roof = load(args.roofline)

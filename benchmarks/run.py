@@ -6,6 +6,8 @@
   kernels  Pallas hot-spot microbenches        (name,us_per_call,derived)
   pipeline pipelined executor: tokens/s + per-hop transfer vs placement
   paged    paged KV + continuous batching vs dense slots (SERVING.md)
+  engine   decode hot loop: macro-step K sweep, dispatches/syncs per
+           token, all four engines (SERVING.md §The decode hot loop)
   simbench vectorized simulator core vs scalar reference (trials/s)
   scale    scale_load population sweep via experiments.report
 
@@ -32,7 +34,8 @@ def main() -> None:
                     help="fewer trials (CI-sized)")
     ap.add_argument("--only", default=None,
                     choices=[None, "fig3", "fig4", "ablation", "kernels",
-                             "pipeline", "paged", "simbench", "scale"])
+                             "pipeline", "paged", "engine", "simbench",
+                             "scale"])
     ap.add_argument("--scenario", default="baseline",
                     help="registered scenario for fig3/fig4 "
                          "(see --list-scenarios)")
@@ -133,6 +136,21 @@ def main() -> None:
                   scenario=args.scenario, out="bench_paged_quick.json")
         else:
             paged(scenario=args.scenario, out="bench_paged.json")
+
+    if args.only in (None, "engine"):
+        print("=" * 72)
+        print(f"## Decode hot loop — fused macro-step K sweep, "
+              f"dispatches + host syncs per token [{args.scenario}]")
+        from benchmarks.engine_bench import main as engine
+        if args.quick:
+            # CI-sized output goes to a scratch name (the committed
+            # full-run baseline is bench_engine.json, per the
+            # bench_paged_quick convention)
+            engine(n_requests=12, ks="1,4", engines="dense,paged",
+                   reps=2, scenario=args.scenario,
+                   out="bench_engine_quick.json")
+        else:
+            engine(scenario=args.scenario, out="bench_engine.json")
 
     print("=" * 72)
     print("done. roofline: PYTHONPATH=src python -m benchmarks.roofline")

@@ -2,6 +2,16 @@
 
 Rotary is applied to K at *write* time, so decode attention over a cache
 (ring buffer for SWA) is permutation-safe.  Score math is fp32.
+
+Decode paths are the body of the engines' fused macro-step
+(``Model.decode_steps``, a ``lax.scan`` carrying the cache): ``pos`` may
+be *frozen* for rows the scheduler has masked (a finished or empty batch
+row keeps re-writing its last slot from token 0 — the same ops the
+per-token host loop always ran for inactive rows), and under buffer
+donation the cache-in/cache-out pairs alias, so the ``.at[].set`` writes
+update the pools in place.  Both rely on the invariants documented in
+`src/repro/models/kvcache.py`: stale KV is position-masked, unallocated
+paged slots resolve to the never-read scratch block.
 """
 from __future__ import annotations
 
@@ -233,6 +243,18 @@ def _paged_gather(pool, tables, take: Optional[int] = None):
     return g if take is None else g[:, :take]
 
 
+def _decode_valid(pos, s: int, ring: bool):
+    """(B, S) bool validity of cache slots for one-token decode: slot
+    index <= pos, plus the ring's all-slots-valid regime once a SWA ring
+    has fully wrapped (pos >= window - 1).  Shared by the dense and
+    paged decode paths so their masking stays bit-for-bit aligned."""
+    sidx = jnp.arange(s)
+    valid = sidx[None, :] <= pos[:, None]
+    if ring:
+        valid = valid | (pos[:, None] >= s - 1)
+    return valid
+
+
 def paged_cross_view(cache: dict, paged: dict, src: int) -> dict:
     """Cross-KV logical view of each row's cross blocks (zeroed at
     admission, so this matches the dense engines' zero cross rows)."""
@@ -277,11 +299,7 @@ def paged_decode_self_attention(params, x, cache: dict, paged: dict, pos,
     kg = _paged_gather(k_pool, tables, s)
     vg = _paged_gather(v_pool, tables, s)
     scores = _gqa_scores(q, kg, cfg)                 # (B,KV,G,1,S)
-    sidx = jnp.arange(s)
-    if kind == "swa" and cfg.window:
-        valid = (sidx[None, :] <= pos[:, None]) | (pos[:, None] >= s - 1)
-    else:
-        valid = sidx[None, :] <= pos[:, None]
+    valid = _decode_valid(pos, s, ring=(kind == "swa" and bool(cfg.window)))
     mask = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
     scores = scores + mask[:, None, None, None, :]
     probs = jax.nn.softmax(scores, axis=-1)
@@ -374,12 +392,8 @@ def decode_self_attention(params, x, cache: dict, pos, cfg,
     v = cache["v"].at[bidx, slot].set(v_new[:, 0])
 
     scores = _gqa_scores(q, k, cfg)  # (B,KV,G,1,S)
-    sidx = jnp.arange(cache_len)
-    if kind == "swa":
-        # ring buffer: every slot valid once pos >= window-1
-        valid = (sidx[None, :] <= pos[:, None]) | (pos[:, None] >= cache_len - 1)
-    else:
-        valid = sidx[None, :] <= pos[:, None]
+    # swa: ring buffer — every slot valid once pos >= window-1
+    valid = _decode_valid(pos, cache_len, ring=(kind == "swa"))
     mask = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
     scores = scores + mask[:, None, None, None, :]
     probs = jax.nn.softmax(scores, axis=-1)

@@ -7,6 +7,7 @@ Public API
 ``logits, aux = m.forward(params, batch)``                       # train
 ``logits, cache, aux = m.prefill(params, batch, cache_len)``     # prefill
 ``logits, cache = m.decode_step(params, cache, batch)``          # decode
+``toks, cache = m.decode_steps(params, cache, batch, k=K)``      # fused K-step
 ``hidden, cache = m.prefill_chunk(params, cache, toks, p0, i)``  # chunked admit
 ``sp = m.stage_params(params, lo, hi)`` / ``m.run_stages(...)``  # pipeline
 
@@ -198,16 +199,67 @@ class Model:
                                                caches=caches)
         return logits, new_caches, aux
 
-    def decode_step(self, params, caches, batch):
-        """One new token against the cache.  batch: {"token","pos"}."""
-        cfg = self.cfg
-        token, pos = batch["token"], batch["pos"]
+    def _decode_x(self, params, caches, token, pos, paged=None):
+        """Shared decode body: embed one token per row and run the
+        segment stack against the cache (dense rows or paged pools).
+        Returns (hidden (B,1,D), new caches)."""
         x = embed(params["embed"], token).astype(self.dtype)
         x, new_caches, _ = tfm.apply_segments(
-            params["blocks"], x, cfg=cfg, mode="decode", segs=self.segments,
-            pos=pos, caches=caches, unroll=self.unroll)
+            params["blocks"], x, cfg=self.cfg, mode="decode",
+            segs=self.segments, pos=pos, caches=caches, unroll=self.unroll,
+            paged=paged)
+        return x, new_caches
+
+    def decode_step(self, params, caches, batch):
+        """One new token against the cache.  batch: {"token","pos"}."""
+        x, new_caches = self._decode_x(params, caches, batch["token"],
+                                       batch["pos"])
         logits = self._head(params, x)
         return logits, new_caches
+
+    def decode_steps(self, params, caches, batch, paged=None, *, k: int):
+        """K fused greedy decode steps on device (the serving hot loop).
+
+        One ``lax.scan`` runs ``k`` decode iterations without leaving the
+        device: argmax over the *logical* (un-padded) vocab, token
+        feedback, per-row ``pos`` bump, and per-row done masking all
+        happen inside the loop, so the host syncs once per ``k`` tokens
+        and never sees full logits.  batch:
+
+        * ``token`` (B,1) i32 — first decode input per row (the host
+          engines' ``_next_tokens``: last prompt/output token for live
+          rows, 0 for dead ones);
+        * ``pos``   (B,)  i32 — absolute position of that token;
+        * ``budget`` (B,) i32 — decode steps each row may take.  A row
+          whose budget hits 0 mid-scan is masked exactly the way the
+          host loop treats an inactive batch row: it keeps running with
+          token 0 at a frozen ``pos`` (so its per-step compute — and any
+          MoE co-batch coupling — is bitwise what the per-token engines
+          did), but its emitted tokens are -1 and its state stops
+          advancing.
+
+        Returns (tokens (B,k) i32, caches); row r's valid prefix is its
+        first ``budget[r]`` entries.  With ``paged`` set, caches are
+        block pools and the block tables must already cover every write
+        in [pos, pos + budget) — the scheduler grows rows *before* the
+        scan (writes past the covered range land in the scratch block).
+        Token streams are identical to ``k`` successive
+        :meth:`decode_step` calls for every ``k`` (tests/test_paged.py).
+        """
+        vocab = self.cfg.vocab_size
+
+        def body(carry, _):
+            caches, tok, pos, budget = carry
+            x, caches = self._decode_x(params, caches, tok, pos,
+                                       paged=paged)
+            logits = self._head(params, x)                  # (B,1,V_pad)
+            tok, pos, budget, emit = greedy_scan_update(logits, pos,
+                                                        budget, vocab)
+            return (caches, tok, pos, budget), emit
+
+        carry = (caches, batch["token"], batch["pos"], batch["budget"])
+        (caches, _, _, _), toks = jax.lax.scan(body, carry, None, length=k)
+        return jnp.transpose(toks), caches
 
     # ------------------------------------------------------------------
     # Paged-cache serving API (see serving/engine.py paged engines)
@@ -219,14 +271,11 @@ class Model:
         pytree; ``paged`` the matching block-table metadata
         (:meth:`~repro.models.kvcache.PagedCache.meta`).  Math is
         identical to :meth:`decode_step` — only cache addressing
-        changes.
+        changes.  The multi-token hot-loop variant is
+        :meth:`decode_steps` with ``paged`` set.
         """
-        cfg = self.cfg
-        token, pos = batch["token"], batch["pos"]
-        x = embed(params["embed"], token).astype(self.dtype)
-        x, new_caches, _ = tfm.apply_segments(
-            params["blocks"], x, cfg=cfg, mode="decode", segs=self.segments,
-            pos=pos, caches=caches, unroll=self.unroll, paged=paged)
+        x, new_caches = self._decode_x(params, caches, batch["token"],
+                                       batch["pos"], paged=paged)
         logits = self._head(params, x)
         return logits, new_caches
 
@@ -250,6 +299,27 @@ class Model:
             return x, new_caches
 
         return ssm_row_isolated(run, self.segments, caches, row)
+
+
+def greedy_scan_update(logits, pos, budget, vocab: int):
+    """One macro-step scan iteration's greedy bookkeeping, shared by
+    :meth:`Model.decode_steps` and the pipelined fused macro
+    (`serving/pipeline.py`) so the masking semantics cannot drift.
+
+    Returns (tok (B,1), pos (B,), budget (B,), emit (B,)).  A row's
+    last live step emits its sampled token and bumps ``pos``, but the
+    *feedback* token is masked by the post-step budget: the host loop
+    feeds token 0 for a freed slot starting the step AFTER the one that
+    finished it, and the masked-row compute must stay bitwise identical
+    to that (it is co-batched with live rows — MoE capacity routing
+    sees it)."""
+    nxt = jnp.argmax(logits[:, -1, :vocab], axis=-1).astype(jnp.int32)
+    live = budget > 0
+    emit = jnp.where(live, nxt, -1)
+    budget = budget - live.astype(jnp.int32)
+    tok = jnp.where(budget > 0, nxt, 0)[:, None]
+    pos = jnp.where(live, pos + 1, pos)
+    return tok, pos, budget, emit
 
 
 def ssm_row_isolated(apply_fn, segs, caches, row):

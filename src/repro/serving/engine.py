@@ -28,7 +28,29 @@ compiled program shapes.
 
 Both state machines live here and are shared with the pipeline-parallel
 executors (serving/pipeline.py); subclasses supply
-``_reset_row`` / ``_prefill_row`` / ``_forward``.
+``_reset_row`` / ``_prefill_row`` / ``_forward_steps``.
+
+The decode hot loop is **device-resident** (SERVING.md §The decode hot
+loop): every engine iteration runs one fused *macro-step* — a single
+jitted ``lax.scan`` of up to ``decode_steps`` (K) greedy decode
+iterations (``Model.decode_steps``) that does argmax-over-logical-
+vocab, token feedback, per-row ``pos`` bumps, and per-row done masking
+on device, returning only ``(rows, K)`` int32 token ids.  The host
+syncs once per macro-step instead of once per token and never sees
+logits; admission, block growth, and preemption re-enter only at
+macro-step boundaries, with each row's in-scan step *budget* clamped so
+``max_new_tokens``, cache headroom, and block coverage can never be
+violated mid-scan.  Greedy token streams are identical for every K —
+outside the pre-existing MoE co-batch carve-out (SERVING.md): under
+expert-capacity pressure any change in admission *timing* (macro
+boundaries included) changes what a request is co-batched with.
+All decode/prefill/reset jits **donate** their cache argument — the
+engine treats caches as linear state (every call rebinds
+``self.caches`` to the returned pytree and never touches the donated
+input again), so XLA reuses the cache buffers in place across steps.
+Jitted callables live in ``self._jits`` (name -> callable) so
+`serving/instrument.py` can count dispatches without touching engine
+code.
 
 Engine time is a **step counter** (one :meth:`step` = one decode
 iteration): ``Request.t_submit`` / ``t_admit`` / ``t_done`` are stamped
@@ -41,6 +63,7 @@ killing the engine.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 from typing import List, Optional
 
@@ -97,19 +120,27 @@ class Request:
 
 class _EngineBase:
     """Queue + step-clock machinery shared by the slot and paged
-    engines: submission/rejection bookkeeping, the greedy decode tail,
-    and the run loop.  Subclasses own admission and the request store
-    (dense slots or paged rows) and implement ``step`` / ``_idle``."""
+    engines: submission/rejection bookkeeping, macro-step sizing, and
+    the run loop.  Subclasses own admission and the request store
+    (dense slots or paged rows) and implement ``step`` / ``_idle`` /
+    ``_in_flight``."""
 
     MAX_STEPS = 512
 
-    def __init__(self, cfg, *, prefill_chunk: int):
+    def __init__(self, cfg, *, prefill_chunk: int, decode_steps: int = 1):
         self.cfg = cfg
         self.prefill_chunk = max(1, prefill_chunk)
+        self.decode_k = max(1, decode_steps)  # macro-step K
         self.queue: List[Request] = []
         self.rejected: List[Request] = []
+        self.unfinished: List[Request] = []  # in flight at last run() exit
         self.tokens_generated = 0
         self.t = 0  # step counter (the engine clock for Request.t_*)
+        # jitted callables, keyed by name, always invoked through this
+        # dict (late binding lets serving/instrument.py count dispatches)
+        self._jits = {}
+        self.n_host_syncs = 0      # device->host materializations (decode)
+        self.max_macro_tokens = 0  # most tokens emitted by one macro-step
 
     def submit(self, req: Request):
         req.t_submit = self.t
@@ -143,24 +174,94 @@ class _EngineBase:
                             else req.out_tokens[-1])
         return tokens
 
-    def _greedy(self, logits) -> np.ndarray:
-        """Greedy next-token ids over the logical (un-padded) vocab."""
-        return np.asarray(
-            jnp.argmax(logits[..., :self.cfg.vocab_size], axis=-1))[:, 0]
+    def _k_eff(self, kmax: int) -> int:
+        """Scan length for this macro-step: the smallest power of two
+        >= the largest row budget, capped at ``decode_k`` — so at most
+        log2(K) distinct scan programs ever compile (plus the raw
+        ``decode_k`` program when K is not itself a power of two)."""
+        k = 1
+        while k < kmax and k * 2 <= self.decode_k:
+            k *= 2
+        return k if k >= kmax else self.decode_k
 
-    def step(self) -> List[Request]:  # pragma: no cover - interface
-        raise NotImplementedError
+    def _macro_tail(self, store, budgets: np.ndarray, active: List[int],
+                    max_len: int, t0: int,
+                    k_cap: Optional[int] = None) -> List[tuple]:
+        """Run one fused macro-step and do the host-side bookkeeping:
+        slice each row's valid token prefix (its budget), bump ``pos``,
+        stamp finishers at the device step they actually completed.
+        Returns finished ``(row, request)`` pairs (the request still
+        holds its row — the caller frees slots/blocks).
+
+        ``k_cap`` bounds the scan length (paged engines: the smallest
+        *block-clipped* budget).  A row masked mid-scan keeps running
+        the decode compute, which advances its SSM recurrent state —
+        harmless for a row that is *finished* (reset before reuse), but
+        fatal for one that must resume, since stale SSM state, unlike
+        stale KV, is never position-masked.  Capping the scan so only
+        finished rows ever mask keeps resume state exact."""
+        k_eff = self._k_eff(int(budgets.max()))
+        if k_cap is not None and k_eff > k_cap:
+            k_eff = 1 << (k_cap.bit_length() - 1)  # largest pow2 <= cap
+            budgets = np.minimum(budgets, k_eff)
+        tokens = self._next_tokens(len(store), active, store)
+        # pos is snapshotted before handing to jax: jnp.asarray aliases
+        # numpy buffers on CPU and the jitted scan dispatches
+        # asynchronously, so the += below must not race it
+        out = self._forward_steps(tokens, self.pos.copy(), budgets, k_eff)
+        self.n_host_syncs += 1
+        self.max_macro_tokens = max(self.max_macro_tokens,
+                                    int(budgets.sum()))
+        finished = []
+        for i in active:
+            req = store[i]
+            v = int(budgets[i])
+            req.out_tokens += [int(t) for t in out[i, :v]]
+            self.tokens_generated += v
+            self.pos[i] += v
+            if req.done or self.pos[i] >= max_len - 1:
+                req.t_done = t0 + v
+                finished.append((i, req))
+        self.t = t0 + k_eff
+        return finished
+
+    def _decode_jit(self, k: int):
+        """Lazily-compiled fused macro-step program for scan length
+        ``k`` (monolithic engines — requires ``self.model``; the
+        pipelined engines build their stage-chained equivalent in
+        ``_NetShimMixin._macro_jit``)."""
+        key = f"decode{k}"
+        if key not in self._jits:
+            self._jits[key] = jax.jit(
+                functools.partial(self.model.decode_steps, k=k),
+                donate_argnums=(1,))
+        return self._jits[key]
+
+    def step(self, k_cap: Optional[int] = None) -> List[Request]:
+        raise NotImplementedError  # pragma: no cover - interface
 
     def _idle(self) -> bool:  # pragma: no cover - interface
         raise NotImplementedError
 
+    def _in_flight(self) -> List[Request]:  # pragma: no cover - interface
+        raise NotImplementedError
+
     def run(self, max_steps: Optional[int] = None) -> List[Request]:
+        """Drive the engine until drained or ``max_steps`` decode steps
+        have executed (macro-steps are clamped to the remaining budget,
+        so K > 1 never overshoots it).  Requests still in flight (or
+        queued) when the step budget runs out are surfaced in
+        :attr:`unfinished` — they keep ``t_done is None`` and still
+        hold their rows/blocks, so a further ``run()`` resumes them
+        (they are *not* silently dropped)."""
         max_steps = self.MAX_STEPS if max_steps is None else max_steps
         done = []
-        for _ in range(max_steps):
-            done += self.step()
+        t_end = self.t + max_steps
+        while self.t < t_end:
+            done += self.step(k_cap=t_end - self.t)
             if not self.queue and self._idle():
                 break
+        self.unfinished = self._in_flight() + list(self.queue)
         return done
 
     # ------------------------------------------------------------------
@@ -170,22 +271,30 @@ class _EngineBase:
     def _prefill_row(self, row: int, toks: np.ndarray, pos0: int):
         raise NotImplementedError  # pragma: no cover - interface
 
+    def _forward_steps(self, tokens: np.ndarray, pos: np.ndarray,
+                       budgets: np.ndarray, k: int) -> np.ndarray:
+        """One fused macro-step of ``k`` device decode iterations.
+        Returns (rows, k) int32 token ids (row r valid to budgets[r])."""
+        raise NotImplementedError  # pragma: no cover - interface
+
 
 class _SlotEngine(_EngineBase):
-    """Slot state machine: admission (chunked prefill), batched greedy
-    decode, finish bookkeeping.  Forward passes are delegated to the
-    subclass hooks:
+    """Slot state machine: admission (chunked prefill), fused macro-step
+    greedy decode, finish bookkeeping.  Forward passes are delegated to
+    the subclass hooks:
 
     * ``_reset_row(slot)`` — clear one cache row before reuse;
     * ``_prefill_row(slot, toks, pos0)`` — process a prompt chunk
       (1, C) at absolute positions pos0.. for one slot;
-    * ``_forward(tokens, pos, n_active)`` — one decode step for the
-      whole batch, returning logits (B, 1, V_padded).
+    * ``_forward_steps(tokens, pos, budgets, k)`` — one fused macro-step
+      of k decode iterations for the whole batch, returning (B, k) int32
+      token ids (logits never leave the device).
     """
 
     def __init__(self, cfg, *, max_batch: int, cache_len: int,
-                 prefill_chunk: int):
-        super().__init__(cfg, prefill_chunk=prefill_chunk)
+                 prefill_chunk: int, decode_steps: int = 1):
+        super().__init__(cfg, prefill_chunk=prefill_chunk,
+                         decode_steps=decode_steps)
         self.max_batch = max_batch
         self.cache_len = cache_len
         self.pos = np.zeros(max_batch, dtype=np.int32)
@@ -196,6 +305,9 @@ class _SlotEngine(_EngineBase):
 
     def _idle(self) -> bool:
         return all(s is None for s in self.slots)
+
+    def _in_flight(self) -> List[Request]:
+        return [s for s in self.slots if s is not None]
 
     def _admit(self):
         """Prefill queued requests into free slots: ``prefill_chunk``
@@ -223,36 +335,33 @@ class _SlotEngine(_EngineBase):
             self.pos[slot] = len(toks)
 
     # ------------------------------------------------------------------
-    def step(self) -> List[Request]:
-        """One engine iteration: admit + batched decode.  Returns
+    def step(self, k_cap: Optional[int] = None) -> List[Request]:
+        """One engine iteration: admit + one fused macro-step of up to
+        ``decode_k`` batched decode iterations (``k_cap`` further bounds
+        the device steps — the run loop's remaining budget).  Returns
         finished requests."""
-        self.t += 1
+        t0 = self.t
+        self.t += 1  # admission/rejection stamps land on the first step
         self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return []
-        tokens = self._next_tokens(self.max_batch, active, self.slots)
-        # self.pos is snapshotted before handing to jax: jnp.asarray
-        # aliases numpy buffers on CPU and the jitted forward dispatches
-        # asynchronously, so the += below must not race it
-        logits = self._forward(tokens, self.pos.copy(), len(active))
-        nxt = self._greedy(logits)
-        finished = []
+        k = (self.decode_k if k_cap is None
+             else max(1, min(self.decode_k, k_cap)))
+        # per-row step budget: never decode past max_new_tokens or the
+        # cache-headroom stop (pos >= cache_len - 1) inside the scan
+        budgets = np.zeros(self.max_batch, dtype=np.int32)
         for i in active:
             req = self.slots[i]
-            req.out_tokens.append(int(nxt[i]))
-            self.tokens_generated += 1
-            self.pos[i] += 1
-            if req.done or self.pos[i] >= self.cache_len - 1:
-                req.t_done = self.t
-                finished.append(req)
-                self.slots[i] = None
-        return finished
-
-    # ------------------------------------------------------------------
-    def _forward(self, tokens: np.ndarray, pos: np.ndarray,
-                 n_active: int):
-        raise NotImplementedError  # pragma: no cover - interface
+            budgets[i] = max(1, min(
+                k, req.max_new_tokens - len(req.out_tokens),
+                self.cache_len - 1 - int(self.pos[i])))
+        done = []
+        for i, req in self._macro_tail(self.slots, budgets, active,
+                                       self.cache_len, t0, k_cap=k_cap):
+            self.slots[i] = None
+            done.append(req)
+        return done
 
 
 class _PagedEngine(_EngineBase):
@@ -281,8 +390,10 @@ class _PagedEngine(_EngineBase):
 
     def __init__(self, cfg, *, max_rows: int, max_len: int,
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 prefill_chunk: int = 16, watermark_blocks: int = 0):
-        super().__init__(cfg, prefill_chunk=prefill_chunk)
+                 prefill_chunk: int = 16, watermark_blocks: int = 0,
+                 decode_steps: int = 1):
+        super().__init__(cfg, prefill_chunk=prefill_chunk,
+                         decode_steps=decode_steps)
         self.max_rows = max_rows
         self.max_len = max_len
         self.pc = PagedCache(cfg, max_rows=max_rows, max_len=max_len,
@@ -298,6 +409,9 @@ class _PagedEngine(_EngineBase):
 
     def _idle(self) -> bool:
         return all(r is None for r in self.rows)
+
+    def _in_flight(self) -> List[Request]:
+        return [r for r in self.rows if r is not None]
 
     def _admit(self):
         """Token-level admission: FIFO head admits whenever a decode row
@@ -352,129 +466,158 @@ class _PagedEngine(_EngineBase):
         self.queue.insert(0, req)
         self.n_preemptions += 1
 
-    def _grow(self):
-        """Ensure every active row owns the block its next decode token
-        writes into; on pool exhaustion preempt newest-admitted rows
-        until the write fits (oldest rows are served first, so the
-        oldest request always makes progress)."""
+    def _grow(self, k: int) -> tuple:
+        """Block-budgeted macro-step sizing.  For every active row (in
+        admission order): guarantee the block its *next* decode token
+        writes into, preempting newest-admitted rows on pool exhaustion
+        exactly as the per-token scheduler did (oldest rows are served
+        first, so the oldest request always makes progress); then grow
+        opportunistically — without preempting anyone — up to ``k``
+        steps of coverage.  Returns ``(budgets, clip)``: the per-row
+        step budgets (a row's in-scan writes [pos, pos + budget) are
+        fully covered by blocks it owns, so the scan never needs the
+        ledger) and the smallest *block-clipped* budget (None if no row
+        was clipped) — the macro-step must not run longer than that,
+        because a clipped row has to resume and a masked scan step
+        would advance its SSM state (see :meth:`_macro_tail`)."""
+        budgets = np.zeros(self.max_rows, dtype=np.int32)
+        clip: Optional[int] = None
         for row in list(self._admit_order):
-            if self.rows[row] is None:
+            req = self.rows[row]
+            if req is None:
                 continue
-            while not self.pc.ensure(row, int(self.pos[row])):
+            pos = int(self.pos[row])
+            while not self.pc.ensure(row, pos):
                 victim = next(r for r in reversed(self._admit_order)
                               if self.rows[r] is not None)
                 self._preempt(victim)
                 if victim == row:
                     break
+            if self.rows[row] is None:  # preempted itself
+                continue
+            want = max(1, min(k, req.max_new_tokens - len(req.out_tokens),
+                              self.max_len - 1 - pos))
+            steps = 1
+            while steps < want and self.pc.ensure(row, pos + steps):
+                steps += 1
+            if steps < want:  # pool-limited: this row must resume
+                clip = steps if clip is None else min(clip, steps)
+            budgets[row] = steps
+        return budgets, clip
 
     # ------------------------------------------------------------------
-    def step(self) -> List[Request]:
-        """One scheduler iteration: admit + grow/preempt + batched
-        decode.  Returns finished requests."""
-        self.t += 1
+    def step(self, k_cap: Optional[int] = None) -> List[Request]:
+        """One scheduler iteration: admit + grow/preempt + one fused
+        macro-step of up to ``decode_k`` decode iterations (``k_cap``
+        further bounds the device steps — the run loop's remaining
+        budget).  Returns finished requests."""
+        t0 = self.t
+        self.t += 1  # admission/rejection stamps land on the first step
         self._admit()
-        self._grow()
+        k = (self.decode_k if k_cap is None
+             else max(1, min(self.decode_k, k_cap)))
+        budgets, clip = self._grow(k)
         active = [i for i, r in enumerate(self.rows) if r is not None]
         if not active:
             return []
-        tokens = self._next_tokens(self.max_rows, active, self.rows)
-        # pos snapshotted for the same jnp.asarray-aliasing reason as
-        # the slot engine
-        logits = self._forward(tokens, self.pos.copy())
-        nxt = self._greedy(logits)
-        finished = []
-        for i in active:
-            req = self.rows[i]
-            req.out_tokens.append(int(nxt[i]))
-            self.tokens_generated += 1
-            self.pos[i] += 1
-            if req.done or self.pos[i] >= self.max_len - 1:
-                req.t_done = self.t
-                finished.append(req)
-                self.rows[i] = None
-                self._admit_order.remove(i)
-                self.pc.release(i)
-        return finished
+        caps = [c for c in (clip, k_cap) if c is not None]
+        cap = min(caps) if caps else None
+        done = []
+        for i, req in self._macro_tail(self.rows, budgets, active,
+                                       self.max_len, t0, k_cap=cap):
+            self.rows[i] = None
+            self._admit_order.remove(i)
+            self.pc.release(i)
+            done.append(req)
+        return done
 
     @property
     def active_rows(self) -> int:
         return sum(1 for r in self.rows if r is not None)
 
-    # ------------------------------------------------------------------
-    def _forward(self, tokens: np.ndarray, pos: np.ndarray):
-        raise NotImplementedError  # pragma: no cover - interface
-
 
 class ServingEngine(_SlotEngine):
-    """Monolithic engine: one jitted decode/prefill over the full model."""
+    """Monolithic engine: one jitted macro-step/prefill over the full
+    model.  All cache-carrying jits donate the cache argument (the
+    engine rebinds ``self.caches`` to the output every call)."""
 
     def __init__(self, cfg, params=None, *, max_batch: int = 4,
                  cache_len: int = 128, seed: int = 0,
-                 prefill_chunk: int = 16):
+                 prefill_chunk: int = 16, decode_steps: int = 1):
         super().__init__(cfg, max_batch=max_batch, cache_len=cache_len,
-                         prefill_chunk=prefill_chunk)
+                         prefill_chunk=prefill_chunk,
+                         decode_steps=decode_steps)
         self.model = build_model(cfg)
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else self.model.init(key)
         self.caches = self.model.init_cache(max_batch, cache_len)
-        self._decode = jax.jit(self.model.decode_step)
-        self._prefill = jax.jit(self.model.prefill_chunk)
-        self._reset = jax.jit(reset_cache_row)
+        self._jits["prefill"] = jax.jit(self.model.prefill_chunk,
+                                        donate_argnums=(1,))
+        self._jits["reset"] = jax.jit(reset_cache_row, donate_argnums=(0,))
 
     def _reset_row(self, slot: int):
-        self.caches = self._reset(self.caches, jnp.int32(slot))
+        self.caches = self._jits["reset"](self.caches, jnp.int32(slot))
 
     def _prefill_row(self, slot: int, toks: np.ndarray, pos0: int):
-        _, self.caches = self._prefill(
+        _, self.caches = self._jits["prefill"](
             self.params, self.caches, jnp.asarray(toks[None]),
             jnp.int32(pos0), jnp.int32(slot))
 
-    def _forward(self, tokens: np.ndarray, pos: np.ndarray,
-                 n_active: int):
-        logits, self.caches = self._decode(
+    def _forward_steps(self, tokens: np.ndarray, pos: np.ndarray,
+                       budgets: np.ndarray, k: int) -> np.ndarray:
+        toks, self.caches = self._decode_jit(k)(
             self.params, self.caches,
-            {"token": jnp.asarray(tokens), "pos": jnp.asarray(pos)})
-        return logits
+            {"token": jnp.asarray(tokens), "pos": jnp.asarray(pos),
+             "budget": jnp.asarray(budgets)})
+        return np.asarray(toks)
 
 
 class PagedServingEngine(_PagedEngine):
     """Monolithic paged engine: the continuous scheduler over one
-    jitted paged decode/prefill (``Model.paged_decode_step`` /
-    ``paged_prefill_chunk``).  Greedy outputs are token-identical to
-    :class:`ServingEngine` at equal ``max_len``/``cache_len``
-    (tests/test_paged.py)."""
+    jitted paged macro-step/prefill (``Model.decode_steps`` with block
+    tables / ``paged_prefill_chunk``).  Greedy outputs are
+    token-identical to :class:`ServingEngine` at equal
+    ``max_len``/``cache_len`` for every ``decode_steps``
+    (tests/test_paged.py).  Block tables ride device-side through
+    ``PagedCache.meta``'s incremental snapshot — re-uploaded only when
+    the ledger changed."""
 
     def __init__(self, cfg, params=None, *, max_rows: int = 8,
                  max_len: int = 128, block_size: int = 16,
                  num_blocks: Optional[int] = None, seed: int = 0,
-                 prefill_chunk: int = 16, watermark_blocks: int = 0):
+                 prefill_chunk: int = 16, watermark_blocks: int = 0,
+                 decode_steps: int = 1):
         super().__init__(cfg, max_rows=max_rows, max_len=max_len,
                          block_size=block_size, num_blocks=num_blocks,
                          prefill_chunk=prefill_chunk,
-                         watermark_blocks=watermark_blocks)
+                         watermark_blocks=watermark_blocks,
+                         decode_steps=decode_steps)
         self.model = build_model(cfg)
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else self.model.init(key)
         self.caches = self.pc.struct(self.model.dtype)
-        self._decode = jax.jit(self.model.paged_decode_step)
-        self._prefill = jax.jit(self.model.paged_prefill_chunk)
+        self._jits["prefill"] = jax.jit(self.model.paged_prefill_chunk,
+                                        donate_argnums=(1,))
         segs = self.model.segments
-        self._reset = jax.jit(
+        self._jits["reset"] = jax.jit(
             lambda caches, row, xids: paged_reset_row(caches, segs, row,
-                                                      xids))
+                                                      xids),
+            donate_argnums=(0,))
 
     def _reset_row(self, row: int):
         xids = jnp.asarray(self.pc.cross_tables[row].copy())
-        self.caches = self._reset(self.caches, jnp.int32(row), xids)
+        self.caches = self._jits["reset"](self.caches, jnp.int32(row), xids)
 
     def _prefill_row(self, row: int, toks: np.ndarray, pos0: int):
-        _, self.caches = self._prefill(
+        _, self.caches = self._jits["prefill"](
             self.params, self.caches, jnp.asarray(toks[None]),
             jnp.int32(pos0), jnp.int32(row), self.pc.meta(row=row))
 
-    def _forward(self, tokens: np.ndarray, pos: np.ndarray):
-        logits, self.caches = self._decode(
+    def _forward_steps(self, tokens: np.ndarray, pos: np.ndarray,
+                       budgets: np.ndarray, k: int) -> np.ndarray:
+        toks, self.caches = self._decode_jit(k)(
             self.params, self.caches,
-            {"token": jnp.asarray(tokens), "pos": jnp.asarray(pos)},
+            {"token": jnp.asarray(tokens), "pos": jnp.asarray(pos),
+             "budget": jnp.asarray(budgets)},
             self.pc.meta())
-        return logits
+        return np.asarray(toks)

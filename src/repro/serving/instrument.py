@@ -1,0 +1,94 @@
+"""Dispatch counting for the serving engines' jitted callables.
+
+The hot-loop contract (SERVING.md §The decode hot loop) is quantitative:
+steady-state decode must cost at most ``1/K`` jit dispatches and host
+syncs per generated token.  That claim rots silently — a stray
+``np.asarray`` or an accidentally un-fused call re-introduces per-token
+overhead without failing any parity test.  This module makes it
+testable: every engine keeps its jitted programs in a ``_jits`` dict
+(name -> callable) and always invokes them through the dict, so
+:func:`instrument` can swap in counting wrappers without touching
+engine code — including programs compiled *after* instrumentation (the
+per-K macro-step jits are built lazily).
+
+    eng = PagedServingEngine(cfg, decode_steps=8)
+    counts = instrument(eng)
+    ...
+    counts.decode_dispatches / eng.tokens_generated   # <= 1/K + prefill
+
+Counter keys are the ``_jits`` names (``decode{k}``, ``prefill``,
+``reset``); pipelined engines' per-stage programs are prefixed
+``s{i}.``.  tests/test_engine_macro.py pins the dispatches-per-token
+regression; benchmarks/engine_bench.py reports the same numbers per
+engine/K cell.
+"""
+from __future__ import annotations
+
+from collections import Counter
+
+
+class DispatchCounter(dict):
+    """A ``_jits`` dict whose entries are wrapped to count invocations.
+
+    Replaces an engine's (or stage's) ``_jits`` mapping in place-of:
+    existing entries are re-wrapped on construction, and entries added
+    later (lazily compiled macro-step programs) are wrapped by
+    ``__setitem__`` as they appear.  ``counts`` maps jit name ->
+    invocation count; one invocation == one jit dispatch (the wrapped
+    callables are the engines' compiled programs).
+    """
+
+    def __init__(self, base: dict, counts: Counter, prefix: str = ""):
+        super().__init__()
+        self.counts = counts
+        self.prefix = prefix
+        for name, fn in base.items():
+            self[name] = fn
+
+    def __setitem__(self, name, fn):
+        key = self.prefix + name
+
+        def counted(*args, _fn=fn, _key=key, **kw):
+            self.counts[_key] += 1
+            return _fn(*args, **kw)
+
+        dict.__setitem__(self, name, counted)
+
+
+class EngineCounts:
+    """Per-engine dispatch tallies with the derived hot-loop ratios."""
+
+    def __init__(self, engine):
+        self.engine = engine
+        self.counts: Counter = Counter()
+
+    @property
+    def decode_dispatches(self) -> int:
+        return sum(n for name, n in self.counts.items()
+                   if name.rsplit(".", 1)[-1].startswith("decode"))
+
+    @property
+    def prefill_dispatches(self) -> int:
+        return sum(n for name, n in self.counts.items()
+                   if name.rsplit(".", 1)[-1] == "prefill")
+
+    @property
+    def total_dispatches(self) -> int:
+        return sum(self.counts.values())
+
+    def per_token(self, kind: str = "decode") -> float:
+        """Dispatches per generated token (``decode``/``prefill``/
+        ``total``)."""
+        n = getattr(self, f"{kind}_dispatches")
+        return n / max(self.engine.tokens_generated, 1)
+
+
+def instrument(engine) -> EngineCounts:
+    """Wrap ``engine``'s jitted callables (and its pipeline stages', if
+    any) with dispatch counters.  Counting starts now: tallies cover
+    only calls made after instrumentation."""
+    ec = EngineCounts(engine)
+    engine._jits = DispatchCounter(engine._jits, ec.counts)
+    for i, st in enumerate(getattr(engine, "stages", [])):
+        st._jits = DispatchCounter(st._jits, ec.counts, prefix=f"s{i}.")
+    return ec

@@ -21,12 +21,16 @@ closes the profile→place→execute loop:
      feed back into ``partition.to_application``, so the placement is
      re-derived from the *executed* pipeline, not FLOP estimates.
 
-Stage compute is real (jitted JAX per stage, token-identical to the
-monolithic engine — composition of ``run_stages`` over consecutive
-ranges reproduces the forward op-for-op); the network is simulated
-(hop delays are accounted, not slept).  Light services are accounted at
-fixed homes: tokenize/detokenize at the entry node, sample co-located
-with the exit stage.
+Stage compute is real (jitted JAX, token-identical to the monolithic
+engine — composition of ``run_stages`` over consecutive ranges
+reproduces the forward op-for-op); the network is simulated (hop delays
+are accounted, not slept).  Chunked prefill and profiling run one
+jitted program per stage; the decode hot loop chains every stage inside
+one fused, donated macro-step scan (``_NetShimMixin._macro_jit``,
+SERVING.md §The decode hot loop) while the per-hop accounting stays
+per device step.  Light services are accounted at fixed homes:
+tokenize/detokenize at the entry node, sample co-located with the exit
+stage.
 
 Cache layout invariants: every stage's cache slice is indexed by the
 same request identity — dense engines by batch slot (each stage holds
@@ -56,7 +60,8 @@ from repro.microservice.partition import (StageSpec, decompose,
                                           profile_stage_ms, to_application)
 from repro.models import build_model
 from repro.models.kvcache import PagedCache, paged_reset_row
-from repro.models.model import row_isolated, ssm_row_isolated
+from repro.models.model import (greedy_scan_update, row_isolated,
+                                ssm_row_isolated)
 from repro.models.transformer import segment_range
 from repro.serving.engine import (_PagedEngine, _SlotEngine,
                                   reset_cache_row)
@@ -106,11 +111,20 @@ def place_stages(app, net, strategy: str = "static_ip", *, kappa: int = 2,
 
 class _CoreStage:
     """One sub-executor: layers [lo, hi), its param/cache slices, and
-    jitted decode / chunked-prefill / row-reset programs.
+    jitted chunked-prefill / row-reset / per-stage decode programs.
 
     With ``paged`` set (a :class:`~repro.models.kvcache.PagedCache`),
     the stage's caches are its layer slice of the shared block pools
     and every jitted program takes the engine's block-table metadata.
+
+    The prefill/reset jits donate their cache argument (the stage
+    rebinds ``self.caches`` each call).  The per-stage ``decode`` jit is
+    the *profiling* program (``PipelinedEngine.profile`` measures one
+    stage at a time) and deliberately does NOT donate — profiling must
+    not consume the live serving caches.  The serving decode path runs
+    through the engine's fused macro-step instead
+    (``_NetShimMixin._macro_jit``), which chains every stage inside one
+    scan and donates the whole cache list.
     """
 
     def __init__(self, model, params, spec: StageSpec, *, entry: bool,
@@ -129,6 +143,7 @@ class _CoreStage:
         lo, hi = self.lo, self.hi
         segs = segment_range(model.cfg, lo, hi)
 
+        self._jits = {}
         if paged is None:
             self.caches = model.init_cache(max_batch, cache_len,
                                            layers=(lo, hi))
@@ -147,7 +162,8 @@ class _CoreStage:
                     return y, new_row
                 return row_isolated(run, caches, slot)
 
-            self._reset = jax.jit(reset_cache_row)
+            self._jits["reset"] = jax.jit(reset_cache_row,
+                                          donate_argnums=(0,))
         else:
             self.caches = paged.struct(model.dtype, layers=(lo, hi))
 
@@ -166,35 +182,23 @@ class _CoreStage:
                     return y, new_c
                 return ssm_row_isolated(run, segs, caches, row)
 
-            self._reset = jax.jit(
+            self._jits["reset"] = jax.jit(
                 lambda caches, row, xids: paged_reset_row(caches, segs,
-                                                          row, xids))
+                                                          row, xids),
+                donate_argnums=(0,))
 
-        self._decode = jax.jit(_decode)
-        self._prefill = jax.jit(_prefill)
-
-    def decode(self, x, pos, pmeta=None):
-        if self.paged is None:
-            x, self.caches = self._decode(self.params, self.caches, x, pos)
-        else:
-            x, self.caches = self._decode(self.params, self.caches, x, pos,
-                                          pmeta)
-        return x
+        self._jits["decode"] = jax.jit(_decode)  # profile-only: no donation
+        self._jits["prefill"] = jax.jit(_prefill, donate_argnums=(1,))
 
     def prefill(self, x, pos0, slot, pmeta=None):
-        if self.paged is None:
-            x, self.caches = self._prefill(self.prefill_params, self.caches,
-                                           x, pos0, slot)
-        else:
-            x, self.caches = self._prefill(self.prefill_params, self.caches,
-                                           x, pos0, slot, pmeta)
+        args = (() if self.paged is None else (pmeta,))
+        x, self.caches = self._jits["prefill"](
+            self.prefill_params, self.caches, x, pos0, slot, *args)
         return x
 
     def reset_row(self, slot, xids=None):
-        if self.paged is None:
-            self.caches = self._reset(self.caches, slot)
-        else:
-            self.caches = self._reset(self.caches, slot, xids)
+        args = (() if self.paged is None else (xids,))
+        self.caches = self._jits["reset"](self.caches, slot, *args)
 
 
 class _NetShimMixin:
@@ -250,7 +254,9 @@ class _NetShimMixin:
 
     def profile(self, iters: int = 3) -> Dict[str, float]:
         """Measured per-stage decode latency (ms) via
-        ``partition.profile_stage_ms`` — feed to :meth:`to_application`."""
+        ``partition.profile_stage_ms`` — feed to :meth:`to_application`.
+        Uses the per-stage (non-donating) decode jits, so profiling
+        leaves the live serving caches untouched."""
         out = {}
         pos = jnp.zeros((self.batch_width,), jnp.int32)
         meta = self.pc.meta() if hasattr(self, "pc") else None
@@ -262,10 +268,11 @@ class _NetShimMixin:
                               jnp.dtype(self.cfg.dtype))
             if meta is None:
                 fn = (lambda xx=x, ss=st:
-                      ss._decode(ss.params, ss.caches, xx, pos)[0])
+                      ss._jits["decode"](ss.params, ss.caches, xx, pos)[0])
             else:
                 fn = (lambda xx=x, ss=st:
-                      ss._decode(ss.params, ss.caches, xx, pos, meta)[0])
+                      ss._jits["decode"](ss.params, ss.caches, xx, pos,
+                                         meta)[0])
             out[st.name] = profile_stage_ms(fn, iters=iters)
         return out
 
@@ -275,6 +282,80 @@ class _NetShimMixin:
         """Bridge the executed pipeline back to the paper abstraction."""
         return to_application(self.cfg, self.stage_specs, rng,
                               measured_ms=measured_ms, **kwargs)
+
+    # ------------------------------------------------------------------
+    # fused macro-step: every stage chained inside one jitted scan
+    # ------------------------------------------------------------------
+    def _macro_jit(self, k: int):
+        """Fused K-step decode across all stages: one ``lax.scan`` whose
+        body chains the stage layer ranges (composition reproduces the
+        monolithic forward op-for-op), then does argmax / token feedback
+        / pos bump / budget masking on device — the pipelined analogue
+        of ``Model.decode_steps``.  The per-stage cache list is the scan
+        carry and is donated; the per-hop *network* accounting stays on
+        the host (:meth:`_account_macro`), priced per device step as
+        before — fusing the stages into one program changes where the
+        Python process computes, not what the simulated network ships.
+        """
+        key = f"decode{k}"
+        if key not in self._jits:
+            model = self.model
+            ranges = [(st.lo, st.hi) for st in self.stages]
+            vocab = self.cfg.vocab_size
+
+            def run(params_list, caches_list, tok, pos, budget,
+                    pmeta=None):
+                def body(carry, _):
+                    caches_list, tok, pos, budget = carry
+                    x = tok
+                    new_list = []
+                    for p, c, (lo, hi) in zip(params_list, caches_list,
+                                              ranges):
+                        x, nc, _ = model.run_stages(
+                            p, x, lo, hi, mode="decode", pos=pos,
+                            caches=c, paged=pmeta)
+                        new_list.append(nc)
+                    tok, pos, budget, emit = greedy_scan_update(
+                        x, pos, budget, vocab)
+                    return (new_list, tok, pos, budget), emit
+
+                carry = (caches_list, tok, pos, budget)
+                (caches_list, _, _, _), toks = jax.lax.scan(
+                    body, carry, None, length=k)
+                return jnp.transpose(toks), caches_list
+
+            self._jits[key] = jax.jit(run, donate_argnums=(1,))
+        return self._jits[key]
+
+    def _run_macro(self, tokens: np.ndarray, pos: np.ndarray,
+                   budgets: np.ndarray, k: int, pmeta=None) -> np.ndarray:
+        """Invoke the fused macro-step, rebind every stage's caches
+        (they were donated), and account the per-step network hops."""
+        params_list = [st.params for st in self.stages]
+        caches_list = [st.caches for st in self.stages]
+        args = (() if pmeta is None else (pmeta,))
+        toks, new_caches = self._macro_jit(k)(
+            params_list, caches_list, jnp.asarray(tokens),
+            jnp.asarray(pos), jnp.asarray(budgets), *args)
+        for st, nc in zip(self.stages, new_caches):
+            st.caches = nc
+        self._account_macro(budgets, k)
+        return np.asarray(toks)
+
+    def _account_macro(self, budgets: np.ndarray, k: int):
+        """Simulated-network accounting for one macro-step: device step
+        i ships for the rows still live at that step (budget > i) — the
+        same per-token hop pattern the per-token loop produced: token
+        ids entry->stage0, activations between stages, the sampled
+        token id back to the entry node for detokenize."""
+        for i in range(k):
+            n = int((budgets > i).sum())
+            if n == 0:
+                break
+            self._ship(self.entry_node, self.stages[0].node, n * 4 / 1e6)
+            for kk in range(len(self.stages)):
+                self._ship_between(kk, n, self._act_bytes)
+            self._ship(self.stages[-1].node, self.entry_node, n * 4 / 1e6)
 
     # ------------------------------------------------------------------
     # network shim
@@ -307,9 +388,10 @@ class PipelinedEngine(_SlotEngine, _NetShimMixin):
                  max_batch: int = 4, cache_len: int = 128, seed: int = 0,
                  prefill_chunk: int = 16, net=None,
                  placement: Optional[Dict[str, int]] = None,
-                 entry_node: Optional[int] = None):
+                 entry_node: Optional[int] = None, decode_steps: int = 1):
         super().__init__(cfg, max_batch=max_batch, cache_len=cache_len,
-                         prefill_chunk=prefill_chunk)
+                         prefill_chunk=prefill_chunk,
+                         decode_steps=decode_steps)
         self._init_stages_and_net(cfg, params, n_stages=n_stages,
                                   max_batch=max_batch, cache_len=cache_len,
                                   seed=seed, net=net, placement=placement,
@@ -332,18 +414,9 @@ class PipelinedEngine(_SlotEngine, _NetShimMixin):
             x = st.prefill(x, p0, sl)
             self._ship_between(k, c, self._act_bytes)
 
-    def _forward(self, tokens: np.ndarray, pos: np.ndarray,
-                 n_active: int):
-        x = jnp.asarray(tokens)
-        pos_j = jnp.asarray(pos)
-        self._ship(self.entry_node, self.stages[0].node, n_active * 4 / 1e6)
-        for k, st in enumerate(self.stages):
-            x = st.decode(x, pos_j)
-            self._ship_between(k, n_active, self._act_bytes)
-        # "sample" runs co-located with the exit stage; the emitted token
-        # id ships back to the entry node for detokenize
-        self._ship(self.stages[-1].node, self.entry_node, n_active * 4 / 1e6)
-        return x
+    def _forward_steps(self, tokens: np.ndarray, pos: np.ndarray,
+                       budgets: np.ndarray, k: int) -> np.ndarray:
+        return self._run_macro(tokens, pos, budgets, k)
 
 
 class PagedPipelinedEngine(_PagedEngine, _NetShimMixin):
@@ -362,11 +435,12 @@ class PagedPipelinedEngine(_PagedEngine, _NetShimMixin):
                  seed: int = 0, prefill_chunk: int = 16,
                  watermark_blocks: int = 0, net=None,
                  placement: Optional[Dict[str, int]] = None,
-                 entry_node: Optional[int] = None):
+                 entry_node: Optional[int] = None, decode_steps: int = 1):
         super().__init__(cfg, max_rows=max_rows, max_len=max_len,
                          block_size=block_size, num_blocks=num_blocks,
                          prefill_chunk=prefill_chunk,
-                         watermark_blocks=watermark_blocks)
+                         watermark_blocks=watermark_blocks,
+                         decode_steps=decode_steps)
         self._init_stages_and_net(cfg, params, n_stages=n_stages,
                                   max_batch=max_rows, cache_len=max_len,
                                   seed=seed, net=net, placement=placement,
@@ -391,16 +465,7 @@ class PagedPipelinedEngine(_PagedEngine, _NetShimMixin):
             x = st.prefill(x, p0, r, meta)
             self._ship_between(k, c, self._act_bytes)
 
-    def _forward(self, tokens: np.ndarray, pos: np.ndarray):
-        n_active = self.active_rows
-        x = jnp.asarray(tokens)
-        pos_j = jnp.asarray(pos)
-        meta = self.pc.meta()
-        self._ship(self.entry_node, self.stages[0].node, n_active * 4 / 1e6)
-        for k, st in enumerate(self.stages):
-            x = st.decode(x, pos_j, meta)
-            self._ship_between(k, n_active, self._act_bytes)
-        # "sample" runs co-located with the exit stage; the emitted token
-        # id ships back to the entry node for detokenize
-        self._ship(self.stages[-1].node, self.entry_node, n_active * 4 / 1e6)
-        return x
+    def _forward_steps(self, tokens: np.ndarray, pos: np.ndarray,
+                       budgets: np.ndarray, k: int) -> np.ndarray:
+        return self._run_macro(tokens, pos, budgets, k,
+                               pmeta=self.pc.meta())

@@ -1,0 +1,113 @@
+"""Decode hot-loop regressions: dispatches/syncs per token stay at the
+macro-step bound (the win can't silently rot), and the run loop
+surfaces requests left in flight instead of dropping them."""
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.serving import PagedServingEngine, Request, ServingEngine
+from repro.serving.engine import chunk_sizes
+from repro.serving.instrument import instrument
+
+
+def _drain(eng, prompt, new_tokens):
+    eng.submit(Request(id=0, prompt=list(prompt), max_new_tokens=new_tokens))
+    (done,) = eng.run()
+    assert len(done.out_tokens) == new_tokens
+    return done
+
+
+# ----------------------------------------------------------------------
+# dispatch accounting: decode dispatches per generated token must be
+# <= 1/K (+ the prefill terms, counted separately)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("k", [1, 8])
+def test_dispatches_per_token_bound_dense(k):
+    cfg = get_smoke_config("smollm-360m")
+    eng = ServingEngine(cfg, max_batch=2, cache_len=64, prefill_chunk=4,
+                        decode_steps=k)
+    counts = instrument(eng)
+    prompt, new = list(range(1, 9)), 32
+    _drain(eng, prompt, new)
+    # steady-state decode: exactly ceil(new / K) fused dispatches
+    assert counts.decode_dispatches == -(-new // k)
+    assert counts.decode_dispatches / new <= 1.0 / k
+    # host syncs track dispatches one-for-one (one materialization per
+    # macro-step, never per token, and never a logits transfer)
+    assert eng.n_host_syncs == counts.decode_dispatches
+    # prefill cost is the chunk decomposition of prompt[:-1], no more
+    assert counts.prefill_dispatches == len(chunk_sizes(len(prompt) - 1, 4))
+    assert counts.counts["reset"] == 1
+
+
+@pytest.mark.parametrize("k", [8])
+def test_dispatches_per_token_bound_paged(k):
+    cfg = get_smoke_config("smollm-360m")
+    eng = PagedServingEngine(cfg, max_rows=2, max_len=64, block_size=8,
+                             prefill_chunk=4, decode_steps=k)
+    counts = instrument(eng)
+    _drain(eng, list(range(1, 9)), 32)
+    # an ample pool never clips the opportunistic block growth, so the
+    # paged macro scheduler hits the same 1/K dispatch bound
+    assert counts.decode_dispatches == -(-32 // k)
+    assert eng.n_host_syncs == counts.decode_dispatches
+    # block tables upload at most once per ledger change — bounded by
+    # growth events (one per block) + admission, not by tokens
+    assert eng.pc.n_meta_uploads <= 32 // 8 + 2
+
+
+def test_max_macro_tokens_tracks_full_budget():
+    """steady_syncs_per_token in benchmarks/engine_bench.py is
+    1/max_macro_tokens; a full-budget scan must reach K tokens."""
+    cfg = get_smoke_config("smollm-360m")
+    eng = ServingEngine(cfg, max_batch=1, cache_len=64, prefill_chunk=4,
+                        decode_steps=8)
+    _drain(eng, [3, 1, 4], 16)
+    assert eng.max_macro_tokens >= 8
+
+
+def test_run_step_budget_not_overshot_by_macro_steps():
+    """run(max_steps) is a device-step budget: a K=16 engine given
+    max_steps=4 must clamp its macro-step, not burn 16 steps."""
+    cfg = get_smoke_config("smollm-360m")
+    eng = ServingEngine(cfg, max_batch=1, cache_len=64, prefill_chunk=4,
+                        decode_steps=16)
+    eng.submit(Request(id=0, prompt=[5, 6, 7], max_new_tokens=32))
+    t0 = eng.t
+    done = eng.run(max_steps=4)
+    assert done == []
+    assert eng.t - t0 == 4
+    assert len(eng.unfinished[0].out_tokens) == 4
+    # the budget-clamped prefix must match an unclamped run's stream
+    eng2 = ServingEngine(cfg, max_batch=1, cache_len=64, prefill_chunk=4,
+                         decode_steps=16)
+    eng2.submit(Request(id=0, prompt=[5, 6, 7], max_new_tokens=32))
+    (full,) = eng2.run()
+    assert full.out_tokens[:4] == eng.unfinished[0].out_tokens
+
+
+# ----------------------------------------------------------------------
+# run() must surface in-flight work at the step budget, not drop it
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("make", [
+    lambda cfg: ServingEngine(cfg, max_batch=1, cache_len=64,
+                              prefill_chunk=4),
+    lambda cfg: PagedServingEngine(cfg, max_rows=1, max_len=64,
+                                   block_size=8, prefill_chunk=4),
+])
+def test_run_surfaces_unfinished(make):
+    cfg = get_smoke_config("smollm-360m")
+    eng = make(cfg)
+    eng.submit(Request(id=0, prompt=[5, 6, 7], max_new_tokens=10))
+    eng.submit(Request(id=1, prompt=[9, 10], max_new_tokens=10))
+    done = eng.run(max_steps=5)
+    assert done == []
+    # id 0 still holds its row mid-generation, id 1 is still queued —
+    # both are surfaced, neither has a completion stamp
+    assert [r.id for r in eng.unfinished] == [0, 1]
+    assert all(r.t_done is None for r in eng.unfinished)
+    assert 0 < len(eng.unfinished[0].out_tokens) < 10
+    # the surfaced requests are resumable: a further run() drains them
+    done = eng.run()
+    assert sorted(r.id for r in done) == [0, 1]
+    assert all(len(r.out_tokens) == 10 for r in done)
+    assert eng.unfinished == []

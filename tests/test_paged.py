@@ -1,14 +1,32 @@
 """Paged KV cache + continuous batching: dense↔paged token parity,
-block-ledger invariants, preemption-by-recompute, request robustness."""
+macro-step (K-fused decode) parity, block-ledger invariants,
+preemption-by-recompute, request robustness.
+
+``golden_decode.json`` pins the committed engines' greedy token streams
+(captured from the pre-macro-step per-token engines; regenerate by
+running ``_outputs(ServingEngine(cfg, max_batch=3, cache_len=32,
+prefill_chunk=4))`` per arch) — every engine variant and every
+macro-step size K must reproduce them byte-identically.
+"""
+import json
+import pathlib
+
 import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
 from repro.models.kvcache import PagedCache
 from repro.serving import (PagedPipelinedEngine, PagedServingEngine,
-                           Request, ServingEngine)
+                           PipelinedEngine, Request, ServingEngine)
 
 PROMPTS = [[5, 6, 7, 2, 9, 3, 8, 1], [9, 10, 4], [11, 3, 5, 7, 2]]
+
+_GOLDEN = json.loads(
+    (pathlib.Path(__file__).parent / "golden_decode.json").read_text())
+
+
+def _golden(arch):
+    return {int(i): toks for i, toks in _GOLDEN[arch].items()}
 
 
 def _outputs(eng, new_tokens=5):
@@ -21,13 +39,16 @@ def _outputs(eng, new_tokens=5):
 # tentpole acceptance: paged == dense, greedy, token-identical
 # (dense + MoE + SSM + weight-shared hybrid + sliding-window)
 # ----------------------------------------------------------------------
-@pytest.mark.parametrize("arch", ["smollm-360m", "mixtral-8x7b",
-                                  "falcon-mamba-7b", "zamba2-7b",
-                                  "gemma3-12b"])
+PARITY_ARCHS = ["smollm-360m", "mixtral-8x7b", "falcon-mamba-7b",
+                "zamba2-7b", "gemma3-12b"]
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
 def test_paged_matches_dense(arch):
     cfg = get_smoke_config(arch)
     dense = _outputs(ServingEngine(cfg, max_batch=3, cache_len=32,
                                    prefill_chunk=4))
+    assert dense == _golden(arch)  # pinned to the committed engines
     # max_rows=2 < len(PROMPTS) forces row reuse: the zeroed SSM state
     # row / stale-KV masking must isolate a row's next occupant
     eng = PagedServingEngine(cfg, max_rows=2, max_len=32, block_size=8,
@@ -36,6 +57,98 @@ def test_paged_matches_dense(arch):
     assert paged == dense
     eng.pc.check()
     assert eng.pc.used_blocks == 0  # every block returned on completion
+
+
+# ----------------------------------------------------------------------
+# macro-step parity: the fused K-step scan must be invisible in greedy
+# outputs for every K, every arch, across preemption and mid-stream
+# admission (SERVING.md §The decode hot loop)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("k", [2, 8])
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_macro_step_parity(arch, k):
+    cfg = get_smoke_config(arch)
+    ref = _golden(arch)
+    assert _outputs(ServingEngine(cfg, max_batch=3, cache_len=32,
+                                  prefill_chunk=4, decode_steps=k)) == ref
+    eng = PagedServingEngine(cfg, max_rows=2, max_len=32, block_size=8,
+                             prefill_chunk=4, decode_steps=k)
+    assert _outputs(eng) == ref
+    eng.pc.check()
+    assert eng.pc.used_blocks == 0
+
+
+@pytest.mark.parametrize("k", [8])
+def test_macro_step_parity_pipelined(k):
+    cfg = get_smoke_config("smollm-360m")
+    ref = _golden("smollm-360m")
+    assert _outputs(PipelinedEngine(cfg, n_stages=2, max_batch=3,
+                                    cache_len=32, prefill_chunk=4,
+                                    decode_steps=k)) == ref
+    eng = PagedPipelinedEngine(cfg, n_stages=2, max_rows=3, max_len=32,
+                               block_size=8, prefill_chunk=4,
+                               decode_steps=k)
+    assert _outputs(eng) == ref
+    eng.pc.check()
+
+
+@pytest.mark.parametrize("arch,k", [("smollm-360m", 2),
+                                    ("smollm-360m", 8),
+                                    ("falcon-mamba-7b", 8)])
+def test_macro_preemption_then_resume(arch, k):
+    """Pool exhaustion mid-run must stay invisible at every K: the
+    macro scheduler's opportunistic growth may shift *when* preemption
+    fires, but never what tokens come out."""
+    cfg = get_smoke_config(arch)
+    eng = PagedServingEngine(cfg, max_rows=3, max_len=32, block_size=8,
+                             num_blocks=3, prefill_chunk=4, decode_steps=k)
+    assert _outputs(eng) == _golden(arch)
+    assert eng.n_preemptions > 0
+    eng.pc.check()
+    assert eng.pc.used_blocks == 0
+
+
+def test_macro_step_parity_moe_capacity_coupled():
+    """Wide batch + staggered budgets, MoE arch: expert capacity ranks
+    slot claims over the whole co-batch, so a masked row's compute is
+    *visible* to live rows.  The scan must feed a freed row token 0
+    from the step after its last live step — exactly what the per-token
+    loop's `_next_tokens` does — or K changes other requests' streams
+    (caught in review: the feedback mask was off by one step)."""
+    cfg = get_smoke_config("mixtral-8x7b")
+
+    def run(k):
+        eng = ServingEngine(cfg, max_batch=12, cache_len=32,
+                            prefill_chunk=4, decode_steps=k)
+        for i in range(12):  # staggered budgets force mid-scan masking
+            eng.submit(Request(id=i, prompt=[3 + i, 1, 4],
+                               max_new_tokens=3 + (i % 5)))
+        return {r.id: r.out_tokens for r in eng.run()}
+
+    assert run(8) == run(1)
+
+
+@pytest.mark.parametrize("k", [4, 8])
+def test_macro_mid_stream_admission(k):
+    """A request submitted while another is mid-generation joins only
+    at a macro-step boundary — which must not change either stream."""
+    cfg = get_smoke_config("smollm-360m")
+
+    def run(mk):
+        eng = mk()
+        eng.submit(Request(id=0, prompt=[5, 6, 7], max_new_tokens=12))
+        eng.step()  # id 0 is now mid-stream
+        eng.submit(Request(id=1, prompt=[9, 10, 4], max_new_tokens=8))
+        return {r.id: r.out_tokens for r in eng.run()}
+
+    ref = run(lambda: ServingEngine(cfg, max_batch=2, cache_len=32,
+                                    prefill_chunk=4))
+    assert run(lambda: ServingEngine(cfg, max_batch=2, cache_len=32,
+                                     prefill_chunk=4,
+                                     decode_steps=k)) == ref
+    assert run(lambda: PagedServingEngine(cfg, max_rows=2, max_len=32,
+                                          block_size=8, prefill_chunk=4,
+                                          decode_steps=k)) == ref
 
 
 @pytest.mark.parametrize("arch", ["smollm-360m", "falcon-mamba-7b"])
@@ -180,6 +293,27 @@ def test_ledger_fits_and_watermark():
     assert pc.utilization() == 0.0
     assert pc.admit(0, 17, watermark=0)  # the scheduler's idle override
     assert pc.utilization() == pytest.approx(0.75)
+
+
+def test_ledger_meta_reuploads_only_on_change():
+    """Incremental device block tables: the full-table snapshot is
+    rebuilt only when the ledger changed (admission/growth/release) —
+    steady-state decode reuses the same immutable device arrays."""
+    pc = _ledger()
+    assert pc.admit(0, 9)
+    m1 = pc.meta()
+    assert pc.meta() is m1 and pc.n_meta_uploads == 1  # cached reuse
+    assert pc.ensure(0, 15)                 # inside held blocks: no change
+    assert pc.meta() is m1 and pc.n_meta_uploads == 1
+    assert pc.ensure(0, 16)                 # growth -> new snapshot
+    m2 = pc.meta()
+    assert m2 is not m1 and pc.n_meta_uploads == 2
+    assert int(m2["tables"][0, 2]) == pc.tables[0, 2] != 0
+    pc.meta(row=0)                          # per-row prefill view is
+    assert pc.meta() is m2                  # fresh, never the cache
+    pc.release(0)
+    assert (np.asarray(pc.meta()["tables"]) == 0).all()
+    assert pc.n_meta_uploads == 3
 
 
 def test_ledger_deterministic_reallocation():
