@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke simbench engine-bench docs ci
+.PHONY: test smoke simbench engine-bench goodput-bench docs ci
 
 # tier-1: must collect and pass with or without hypothesis installed
 test:
@@ -23,6 +23,13 @@ simbench:
 engine-bench:
 	$(PY) -m benchmarks.engine_bench --out bench_engine.json
 	$(PY) -m benchmarks.report --engine bench_engine.json
+
+# SLO-goodput bench, full size: refreshes the committed
+# bench_goodput.json baseline (deterministic FakeEngine trace; the
+# `make smoke` chain writes CI-sized numbers to bench_goodput_quick.json)
+goodput-bench:
+	$(PY) -m benchmarks.goodput_bench --out bench_goodput.json
+	$(PY) -m benchmarks.report --goodput bench_goodput.json
 
 # docs gate: every relative link in *.md resolves, quoted source-file
 # references in README/ARCHITECTURE/EXPERIMENTS/SERVING point at real

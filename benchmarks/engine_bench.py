@@ -15,6 +15,13 @@ same deterministic mixed-length trace as `benchmarks/paged_bench.py`
                                full-budget scan,
 * ``uploads_per_token``        block-table re-uploads / token (paged
                                engines; the incremental-snapshot win),
+* ``goodput``                  fraction of trace requests meeting their
+                               QoS class's TTFT+TPOT deadlines
+                               (classes cycled deterministically over
+                               the trace; engine-step-clock metric, so
+                               deterministic — see
+                               `benchmarks/goodput_bench.py` for the
+                               policy comparison),
 * ``outputs_match``            greedy token streams identical to the
                                reference cell (first engine at the
                                first K) — the hot loop must never trade
@@ -55,9 +62,14 @@ from repro.experiments.results import save_results
 from repro.serving import (PagedPipelinedEngine, PagedServingEngine,
                            PipelinedEngine, Request, ServingEngine)
 from repro.serving.instrument import instrument
+from repro.serving.scheduler import goodput
 
 ENGINE_KINDS = ("dense", "pipelined", "paged", "paged_pipelined")
 DEFAULT_KS = "1,4,16"
+#: deterministic class assignment for the goodput column: request i of
+#: the trace gets QOS_CYCLE[i % 3] (mixed-class without reshaping the
+#: token trace)
+QOS_CYCLE = ("interactive", "standard", "batch")
 
 
 def make_engine(kind: str, cfg, k: int, *, max_batch, cache_len, max_rows,
@@ -126,8 +138,10 @@ def drive(eng, trace, k: int, prefill_chunk: int, reps: int = 3) -> dict:
 
         t0_step = eng.t
         pending = [(t + t0_step,
-                    Request(id=i, prompt=list(p), max_new_tokens=n))
+                    Request(id=i, prompt=list(p), max_new_tokens=n,
+                            qos=QOS_CYCLE[i % len(QOS_CYCLE)]))
                    for i, (t, p, n) in enumerate(trace)]
+        pass_reqs = [r for _, r in pending]
         done = []
         t0 = time.perf_counter()
         while pending or eng.queue or not eng._idle():
@@ -162,6 +176,8 @@ def drive(eng, trace, k: int, prefill_chunk: int, reps: int = 3) -> dict:
                 if is_paged else 0.0),
             "preemptions": (eng.n_preemptions - pre_empt0
                             if is_paged else 0),
+            # engine-step-clock SLO metric: identical across passes
+            "goodput": goodput(pass_reqs),
         }
         if best is None or row["tok_per_s"] > best["tok_per_s"]:
             best = row
@@ -194,7 +210,7 @@ def main(configs: str = "smollm-360m", scenario: str = "bursty_mmpp",
               f"K in {k_list}, engines {kinds} ==")
         print(f"{'engine':>15s} {'K':>3s} {'tok/s':>8s} {'disp/tok':>9s} "
               f"{'sync/tok':>9s} {'steady':>7s} {'upld/tok':>9s} "
-              f"{'preempt':>7s} {'match':>6s}")
+              f"{'preempt':>7s} {'goodput':>8s} {'match':>6s}")
         for kind in kinds:
             for k in k_list:
                 r = drive(make_engine(kind, cfg, k, **geom), trace, k,
@@ -210,6 +226,7 @@ def main(configs: str = "smollm-360m", scenario: str = "bursty_mmpp",
                       f"{r['steady_syncs_per_token']:7.4f} "
                       f"{r['uploads_per_token']:9.4f} "
                       f"{r['preemptions']:7d} "
+                      f"{r['goodput']:8.3f} "
                       f"{str(r['outputs_match']):>6s}")
                 rows.append({"arch": arch, "engine": kind, "k": k, **r})
         kmax = max(k_list)

@@ -116,6 +116,44 @@ def engine_table(path: str) -> None:
         print("\n" + "; ".join(lines))
 
 
+def goodput_table(path: str) -> None:
+    """Markdown summary of a benchmarks.goodput_bench JSON: overall and
+    per-QoS-class goodput by scheduling policy, plus the on-time /
+    rejected breakdown the SLO story turns on."""
+    from repro.experiments.results import load_results
+    try:
+        rows, meta = load_results(path)
+    except FileNotFoundError:
+        print(f"\n### §SLO goodput — {path}: missing, skipped\n")
+        return
+    classes = sorted(meta.get("qos_classes",
+                              {"interactive": 0, "standard": 0,
+                               "batch": 0}))
+    print(f"\n### §SLO goodput — {path} "
+          f"({meta.get('n_requests', '?')} reqs over "
+          f"{meta.get('span_steps', '?')} steps, seed "
+          f"{meta.get('seed', '?')})\n")
+    print("| policy | goodput | done | rej | preempt | "
+          + " | ".join(classes) + " | match |")
+    print("|---" * (6 + len(classes)) + "|")
+    for r in rows:
+        per_cls = " | ".join(f"{r.get(f'{c}_goodput', 0.0):.3f}"
+                             for c in classes)
+        print(f"| {r['policy']} | {r['goodput']:.3f} | {r['completed']} "
+              f"| {r['rejected']} | {r['preemptions']} | {per_cls} "
+              f"| {r['outputs_match']} |")
+    print("\n| policy | class | n | on-time | rejected | TTFT mean |")
+    print("|---|---|---|---|---|---|")
+    for r in rows:
+        for c in classes:
+            if f"{c}_n" not in r:
+                continue
+            ttft = r.get(f"{c}_ttft_mean")
+            print(f"| {r['policy']} | {c} | {r[f'{c}_n']} "
+                  f"| {r[f'{c}_on_time']} | {r[f'{c}_rejected']} "
+                  f"| {'-' if ttft is None else f'{ttft:.1f}'} |")
+
+
 def experiments_tables(paths) -> None:
     """Markdown summaries of replication-runner JSON result files."""
     from repro.experiments.results import (load_results, markdown_table,
@@ -145,14 +183,19 @@ def main():
     ap.add_argument("--engine", default=None,
                     help="benchmarks.engine_bench JSON to summarize "
                          "(e.g. bench_engine.json)")
+    ap.add_argument("--goodput", default=None,
+                    help="benchmarks.goodput_bench JSON to summarize "
+                         "(e.g. bench_goodput.json)")
     args = ap.parse_args()
 
     if args.experiments:
         experiments_tables(args.experiments)
     if args.engine:
         engine_table(args.engine)
-        if not args.experiments:
-            return
+    if args.goodput:
+        goodput_table(args.goodput)
+    if (args.engine or args.goodput) and not args.experiments:
+        return
 
     dry = load(args.dryrun)
     roof = load(args.roofline)

@@ -8,6 +8,8 @@
   paged    paged KV + continuous batching vs dense slots (SERVING.md)
   engine   decode hot loop: macro-step K sweep, dispatches/syncs per
            token, all four engines (SERVING.md §The decode hot loop)
+  goodput  SLO-goodput: FIFO vs EDF vs EDF+effective-capacity on a
+           mixed-QoS overload trace (SERVING.md §Scheduling)
   simbench vectorized simulator core vs scalar reference (trials/s)
   scale    scale_load population sweep via experiments.report
 
@@ -34,8 +36,8 @@ def main() -> None:
                     help="fewer trials (CI-sized)")
     ap.add_argument("--only", default=None,
                     choices=[None, "fig3", "fig4", "ablation", "kernels",
-                             "pipeline", "paged", "engine", "simbench",
-                             "scale"])
+                             "pipeline", "paged", "engine", "goodput",
+                             "simbench", "scale"])
     ap.add_argument("--scenario", default="baseline",
                     help="registered scenario for fig3/fig4 "
                          "(see --list-scenarios)")
@@ -151,6 +153,19 @@ def main() -> None:
                    out="bench_engine_quick.json")
         else:
             engine(scenario=args.scenario, out="bench_engine.json")
+
+    if args.only in (None, "goodput"):
+        print("=" * 72)
+        print("## SLO goodput — FIFO vs EDF vs EDF+effective-capacity "
+              "admission on a mixed-QoS overload trace")
+        from benchmarks.goodput_bench import main as gp
+        if args.quick:
+            # CI-sized output goes to a scratch name; bench_goodput.json
+            # is the committed full-run baseline
+            gp(n_requests=24, span_steps=48,
+               out="bench_goodput_quick.json")
+        else:
+            gp(out="bench_goodput.json")
 
     print("=" * 72)
     print("done. roofline: PYTHONPATH=src python -m benchmarks.roofline")

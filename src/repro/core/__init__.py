@@ -48,8 +48,9 @@ Paper-notation glossary (symbols as they appear in code):
   ========  ==================================================  ==========
 
 Serving-side terms (the paged engines apply the same admit-under-
-contention pattern to KV memory — SERVING.md §Paper ↔ code has the
-Algorithm-1 correspondence table):
+contention pattern to KV memory — SERVING.md §Scheduling covers the
+QoS/policy layer and §Paper ↔ code has the Algorithm-1 correspondence
+table):
 
   ==============  ==============================================  ==========
   term            meaning                                         where
@@ -63,9 +64,25 @@ Algorithm-1 correspondence table):
   watermark       free-block headroom held back at admission to   ``PagedCache.watermark_blocks``
                   protect running requests' decode growth
                   (serving analogue of g_{m,eps} headroom)
-  preemption      recompute-on-readmission eviction of the        ``_PagedEngine._preempt`` (serving/engine.py)
-                  newest request when the pool is exhausted;
-                  greedy decode keeps outputs token-identical
+  preemption      recompute-on-readmission eviction of a          ``_PagedEngine._preempt`` (serving/engine.py)
+                  policy-chosen victim when the pool is
+                  exhausted; greedy decode keeps outputs
+                  token-identical
+  QoS class       per-request SLO tier (interactive / standard    ``Request.qos``, ``scheduler.QOS_CLASSES``
+                  / batch) carrying TTFT + TPOT deadlines in
+                  engine steps (serving analogue of task type
+                  n with deadline D_n)
+  TTFT            time-to-first-token budget: t_first - t_submit  ``QoSClass.ttft``, ``scheduler.ttft_met``
+                  must not exceed it (engine steps)
+  TPOT            time-per-output-token budget: decode steps      ``QoSClass.tpot``, ``scheduler.tpot_met``
+                  per generated token after the first
+  slack           steps until a request's effective deadline,     ``EDFPolicy.slack`` (serving/scheduler.py)
+                  the EDF ordering/victim key (aged by
+                  age_rate, boosted by the class's H_c)
+  goodput         fraction of submitted requests meeting both     ``scheduler.goodput`` / ``per_class_stats``
+                  TTFT and TPOT — rejected/unfinished count
+                  as misses (the paper's on-time completion
+                  ratio at the serving layer)
   ==============  ==============================================  ==========
 
 See README.md §Paper ↔ code mapping for the construct-level table,

@@ -3,3 +3,7 @@ from repro.serving.engine import (  # noqa: F401
 from repro.serving.pipeline import (  # noqa: F401
     PLACEMENT_STRATEGIES, PagedPipelinedEngine, PipelinedEngine,
     place_stages)
+from repro.serving.scheduler import (  # noqa: F401
+    POLICIES, QOS_CLASSES, EDFCapacityPolicy, EDFPolicy, FIFOPolicy,
+    QoSClass, SchedulerPolicy, get_qos, goodput, make_policy,
+    per_class_stats, slo_met)

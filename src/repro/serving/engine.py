@@ -73,6 +73,8 @@ import numpy as np
 
 from repro.models import build_model
 from repro.models.kvcache import PagedCache, paged_reset_row
+from repro.serving.scheduler import (DEFER, REJECT, CapacityView,
+                                     make_policy)
 
 
 def chunk_sizes(n: int, chunk: int) -> List[int]:
@@ -100,17 +102,28 @@ def reset_cache_row(caches, slot):
 @dataclass
 class Request:
     """One generation request.  ``t_*`` are engine step-counter stamps
-    (:meth:`_SlotEngine.step` iterations): ``t_submit`` on submit,
-    ``t_admit`` on *first* admission (preemption keeps the original),
-    ``t_done`` on completion or rejection.  ``error`` is set instead of
-    raising when the request can never fit the engine's cache."""
+    (:meth:`_SlotEngine.step` iterations): ``t_submit`` on submit
+    (stamped once — a resubmitted / resumed request keeps the
+    original), ``t_admit`` on *first* admission (preemption keeps the
+    original), ``t_first`` at the device step the first output token
+    was produced (the TTFT stamp), ``t_done`` on completion or
+    rejection.  ``qos`` names a :data:`repro.serving.scheduler.
+    QOS_CLASSES` tier — deadline-driven policies read its TTFT/TPOT
+    budgets; the default FIFO policy ignores it.  ``n_preempted``
+    counts preempt-by-recompute evictions (policies with
+    ``max_preemptions`` bound it).  ``error`` is set instead of
+    raising when the request can never fit the engine's cache (or a
+    policy's admission test rejects it)."""
     id: int
     prompt: List[int]
     max_new_tokens: int = 16
+    qos: str = "standard"
     out_tokens: List[int] = field(default_factory=list)
-    t_submit: int = 0
+    t_submit: Optional[int] = None
     t_admit: Optional[int] = None
+    t_first: Optional[int] = None
     t_done: Optional[int] = None
+    n_preempted: int = 0
     error: Optional[str] = None
 
     @property
@@ -127,10 +140,15 @@ class _EngineBase:
 
     MAX_STEPS = 512
 
-    def __init__(self, cfg, *, prefill_chunk: int, decode_steps: int = 1):
+    def __init__(self, cfg, *, prefill_chunk: int, decode_steps: int = 1,
+                 policy=None):
         self.cfg = cfg
         self.prefill_chunk = max(1, prefill_chunk)
         self.decode_k = max(1, decode_steps)  # macro-step K
+        # pluggable scheduling discipline (serving/scheduler.py);
+        # default FIFO reproduces the historical admit/preempt order
+        # bit-for-bit (tests/golden_decode.json)
+        self.policy = make_policy(policy)
         self.queue: List[Request] = []
         self.rejected: List[Request] = []
         self.unfinished: List[Request] = []  # in flight at last run() exit
@@ -143,8 +161,10 @@ class _EngineBase:
         self.max_macro_tokens = 0  # most tokens emitted by one macro-step
 
     def submit(self, req: Request):
-        req.t_submit = self.t
+        if req.t_submit is None:  # resubmission keeps the original stamp
+            req.t_submit = self.t
         self.queue.append(req)
+        self.policy.on_submit(req, self.t)
 
     def _reject(self, req: Request, msg: str):
         """Fail one request without killing the engine (an oversized
@@ -216,12 +236,15 @@ class _EngineBase:
         for i in active:
             req = store[i]
             v = int(budgets[i])
+            if v > 0 and req.t_first is None and not req.out_tokens:
+                req.t_first = t0 + 1  # first token lands on device step 1
             req.out_tokens += [int(t) for t in out[i, :v]]
             self.tokens_generated += v
             self.pos[i] += v
             if req.done or self.pos[i] >= max_len - 1:
                 req.t_done = t0 + v
                 finished.append((i, req))
+                self.policy.on_done(req, t0 + v)
         self.t = t0 + k_eff
         return finished
 
@@ -292,9 +315,9 @@ class _SlotEngine(_EngineBase):
     """
 
     def __init__(self, cfg, *, max_batch: int, cache_len: int,
-                 prefill_chunk: int, decode_steps: int = 1):
+                 prefill_chunk: int, decode_steps: int = 1, policy=None):
         super().__init__(cfg, prefill_chunk=prefill_chunk,
-                         decode_steps=decode_steps)
+                         decode_steps=decode_steps, policy=policy)
         self.max_batch = max_batch
         self.cache_len = cache_len
         self.pos = np.zeros(max_batch, dtype=np.int32)
@@ -309,25 +332,49 @@ class _SlotEngine(_EngineBase):
     def _in_flight(self) -> List[Request]:
         return [s for s in self.slots if s is not None]
 
+    def _capacity_view(self, free_slots: int) -> CapacityView:
+        """Dense capacity in policy units: one slot = one full
+        ``cache_len`` granule (slot admission IS paging with one huge
+        block)."""
+        return CapacityView(free_tokens=free_slots * self.cache_len,
+                            total_tokens=self.max_batch * self.cache_len,
+                            granule=self.cache_len)
+
     def _admit(self):
         """Prefill queued requests into free slots: ``prefill_chunk``
         prompt tokens per jitted call (the final prompt token is fed as
-        the first decode input in :meth:`step`)."""
+        the first decode input in :meth:`step`).  The policy chooses
+        *which* queued request is tried next and may reject it up
+        front; a deferred choice blocks admission (head-of-line — it is
+        never overtaken)."""
         free = self._free_slots()
         while free and self.queue:
-            req = self.queue.pop(0)
+            req = self.policy.next_admission(self.queue, self.t)
+            if req is None:
+                break
             # admission must leave max_new_tokens of cache headroom: the
             # decode loop stops a slot at pos >= cache_len - 1, so a
             # prompt of exactly cache_len would otherwise finish after a
             # SINGLE decode step, silently truncating the request
             if len(req.prompt) + req.max_new_tokens > self.cache_len:
+                self.queue.remove(req)
                 self._reject(
                     req, f"prompt of {len(req.prompt)} + max_new_tokens "
                          f"{req.max_new_tokens} exceeds cache_len "
                          f"{self.cache_len}")
                 continue
+            verdict, msg = self.policy.admission_test(
+                req, self.t, self._capacity_view(len(free)))
+            if verdict == REJECT:
+                self.queue.remove(req)
+                self._reject(req, msg or "rejected by admission test")
+                continue
+            if verdict == DEFER:
+                break
             slot = free.pop(0)
-            req.t_admit = self.t
+            self.queue.remove(req)
+            if req.t_admit is None:
+                req.t_admit = self.t
             self.slots[slot] = req
             self._reset_row(slot)
             toks = req.prompt[:-1]
@@ -342,6 +389,7 @@ class _SlotEngine(_EngineBase):
         finished requests."""
         t0 = self.t
         self.t += 1  # admission/rejection stamps land on the first step
+        self.policy.on_step(self.t, self.queue, self._in_flight())
         self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
@@ -360,6 +408,7 @@ class _SlotEngine(_EngineBase):
         for i, req in self._macro_tail(self.slots, budgets, active,
                                        self.cache_len, t0, k_cap=k_cap):
             self.slots[i] = None
+            self.policy.on_free(1, self.t)  # one slot granule returned
             done.append(req)
         return done
 
@@ -391,9 +440,9 @@ class _PagedEngine(_EngineBase):
     def __init__(self, cfg, *, max_rows: int, max_len: int,
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  prefill_chunk: int = 16, watermark_blocks: int = 0,
-                 decode_steps: int = 1):
+                 decode_steps: int = 1, policy=None):
         super().__init__(cfg, prefill_chunk=prefill_chunk,
-                         decode_steps=decode_steps)
+                         decode_steps=decode_steps, policy=policy)
         self.max_rows = max_rows
         self.max_len = max_len
         self.pc = PagedCache(cfg, max_rows=max_rows, max_len=max_len,
@@ -413,30 +462,52 @@ class _PagedEngine(_EngineBase):
     def _in_flight(self) -> List[Request]:
         return [r for r in self.rows if r is not None]
 
+    def _capacity_view(self) -> CapacityView:
+        """Block-pool capacity in policy units (the watermark reserve is
+        the ledger's own business — ``can_admit`` still arbitrates the
+        final allocation)."""
+        bs = self.pc.block_size
+        return CapacityView(free_tokens=self.pc.free_blocks * bs,
+                            total_tokens=self.pc.num_blocks * bs,
+                            granule=bs)
+
     def _admit(self):
-        """Token-level admission: FIFO head admits whenever a decode row
-        is free and the pool holds its blocks (prompt + already-decoded
-        prefix after a preemption).  Head-of-line order is kept — a
-        blocked head waits rather than being overtaken, so admission
-        order (and with it preemption priority) is deterministic."""
+        """Token-level admission: the policy's choice admits whenever a
+        decode row is free and the pool holds its blocks (prompt +
+        already-decoded prefix after a preemption).  Head-of-line order
+        is kept — a blocked or deferred choice waits rather than being
+        overtaken, so admission order (and with it preemption
+        priority) is deterministic.  A policy admission test may
+        instead *reject* the choice up front (effective-capacity test:
+        the pool cannot free its deficit within the class's TTFT slack
+        — ``_reject`` path, class-specific error)."""
         free = self._free_rows()
         while free and self.queue:
-            req = self.queue[0]
+            req = self.policy.next_admission(self.queue, self.t)
+            if req is None:
+                break
             if (len(req.prompt) + req.max_new_tokens > self.max_len
                     or not self.pc.fits(
                         len(req.prompt) + req.max_new_tokens)):
-                self.queue.pop(0)
+                self.queue.remove(req)
                 self._reject(
                     req, f"prompt of {len(req.prompt)} + max_new_tokens "
                          f"{req.max_new_tokens} exceeds capacity "
                          f"(max_len {self.max_len}, "
                          f"{self.pc.num_blocks} blocks)")
                 continue
+            verdict, msg = self.policy.admission_test(
+                req, self.t, self._capacity_view())
+            if verdict == REJECT:
+                self.queue.remove(req)
+                self._reject(req, msg or "rejected by admission test")
+                continue
             total = len(req.prompt) + len(req.out_tokens)
             wm = (None if any(r is not None for r in self.rows) else 0)
-            if not self.pc.can_admit(total, watermark=wm):
+            if verdict == DEFER or not self.pc.can_admit(total,
+                                                         watermark=wm):
                 break
-            self.queue.pop(0)
+            self.queue.remove(req)
             row = free.pop(0)
             if not self.pc.admit(row, total, watermark=wm):
                 # can_admit above said yes; a refusal here is a ledger
@@ -458,13 +529,25 @@ class _PagedEngine(_EngineBase):
         """Preempt-by-recompute: free the row's blocks and put the
         request back at the head of the queue carrying its generated
         prefix; re-admission re-prefills prompt+prefix, and greedy
-        decode continues token-identically."""
+        decode continues token-identically.  A request bounced
+        ``policy.max_preemptions`` times is *evicted* to
+        ``engine.rejected`` instead of requeued — bounding recompute
+        churn (and the ``n_preempted`` property invariant,
+        tests/test_scheduler_props.py)."""
         req = self.rows[row]
         self.pc.release(row)
         self.rows[row] = None
         self._admit_order.remove(row)
-        self.queue.insert(0, req)
         self.n_preemptions += 1
+        req.n_preempted += 1
+        cap = self.policy.max_preemptions
+        if cap is not None and req.n_preempted >= cap:
+            self._reject(
+                req, f"{req.qos}: evicted after {req.n_preempted} "
+                     f"preemptions (max_preemptions={cap})")
+            return
+        self.queue.insert(0, req)
+        self.policy.on_preempt(req, self.t)
 
     def _grow(self, k: int) -> tuple:
         """Block-budgeted macro-step sizing.  For every active row (in
@@ -488,8 +571,18 @@ class _PagedEngine(_EngineBase):
                 continue
             pos = int(self.pos[row])
             while not self.pc.ensure(row, pos):
-                victim = next(r for r in reversed(self._admit_order)
-                              if self.rows[r] is not None)
+                # victim choice is the policy's (FIFO: newest admission,
+                # the historical LIFO; EDF: most slack, TTFT-protected
+                # rows exempt).  ``None`` — every candidate protected —
+                # falls back to the needy row preempting itself, the
+                # same terminating self-preempt the LIFO rule had when
+                # the needy row was the newest.
+                cands = [(r, self.rows[r]) for r in self._admit_order
+                         if self.rows[r] is not None]
+                victim = self.policy.select_victim(cands, self.t,
+                                                   needy=row)
+                if victim is None:
+                    victim = row
                 self._preempt(victim)
                 if victim == row:
                     break
@@ -513,6 +606,7 @@ class _PagedEngine(_EngineBase):
         budget).  Returns finished requests."""
         t0 = self.t
         self.t += 1  # admission/rejection stamps land on the first step
+        self.policy.on_step(self.t, self.queue, self._in_flight())
         self._admit()
         k = (self.decode_k if k_cap is None
              else max(1, min(self.decode_k, k_cap)))
@@ -527,7 +621,11 @@ class _PagedEngine(_EngineBase):
                                        self.max_len, t0, k_cap=cap):
             self.rows[i] = None
             self._admit_order.remove(i)
+            fb0 = self.pc.free_blocks
             self.pc.release(i)
+            # completion releases feed the EC policy's service model
+            # (preemption frees are churn, not service — not counted)
+            self.policy.on_free(self.pc.free_blocks - fb0, self.t)
             done.append(req)
         return done
 
@@ -543,10 +641,11 @@ class ServingEngine(_SlotEngine):
 
     def __init__(self, cfg, params=None, *, max_batch: int = 4,
                  cache_len: int = 128, seed: int = 0,
-                 prefill_chunk: int = 16, decode_steps: int = 1):
+                 prefill_chunk: int = 16, decode_steps: int = 1,
+                 policy=None):
         super().__init__(cfg, max_batch=max_batch, cache_len=cache_len,
                          prefill_chunk=prefill_chunk,
-                         decode_steps=decode_steps)
+                         decode_steps=decode_steps, policy=policy)
         self.model = build_model(cfg)
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else self.model.init(key)
@@ -586,12 +685,12 @@ class PagedServingEngine(_PagedEngine):
                  max_len: int = 128, block_size: int = 16,
                  num_blocks: Optional[int] = None, seed: int = 0,
                  prefill_chunk: int = 16, watermark_blocks: int = 0,
-                 decode_steps: int = 1):
+                 decode_steps: int = 1, policy=None):
         super().__init__(cfg, max_rows=max_rows, max_len=max_len,
                          block_size=block_size, num_blocks=num_blocks,
                          prefill_chunk=prefill_chunk,
                          watermark_blocks=watermark_blocks,
-                         decode_steps=decode_steps)
+                         decode_steps=decode_steps, policy=policy)
         self.model = build_model(cfg)
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else self.model.init(key)

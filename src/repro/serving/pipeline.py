@@ -388,10 +388,11 @@ class PipelinedEngine(_SlotEngine, _NetShimMixin):
                  max_batch: int = 4, cache_len: int = 128, seed: int = 0,
                  prefill_chunk: int = 16, net=None,
                  placement: Optional[Dict[str, int]] = None,
-                 entry_node: Optional[int] = None, decode_steps: int = 1):
+                 entry_node: Optional[int] = None, decode_steps: int = 1,
+                 policy=None):
         super().__init__(cfg, max_batch=max_batch, cache_len=cache_len,
                          prefill_chunk=prefill_chunk,
-                         decode_steps=decode_steps)
+                         decode_steps=decode_steps, policy=policy)
         self._init_stages_and_net(cfg, params, n_stages=n_stages,
                                   max_batch=max_batch, cache_len=cache_len,
                                   seed=seed, net=net, placement=placement,
@@ -435,12 +436,13 @@ class PagedPipelinedEngine(_PagedEngine, _NetShimMixin):
                  seed: int = 0, prefill_chunk: int = 16,
                  watermark_blocks: int = 0, net=None,
                  placement: Optional[Dict[str, int]] = None,
-                 entry_node: Optional[int] = None, decode_steps: int = 1):
+                 entry_node: Optional[int] = None, decode_steps: int = 1,
+                 policy=None):
         super().__init__(cfg, max_rows=max_rows, max_len=max_len,
                          block_size=block_size, num_blocks=num_blocks,
                          prefill_chunk=prefill_chunk,
                          watermark_blocks=watermark_blocks,
-                         decode_steps=decode_steps)
+                         decode_steps=decode_steps, policy=policy)
         self._init_stages_and_net(cfg, params, n_stages=n_stages,
                                   max_batch=max_rows, cache_len=max_len,
                                   seed=seed, net=net, placement=placement,

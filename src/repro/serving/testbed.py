@@ -1,0 +1,85 @@
+"""Deterministic scheduler testbed: the paged engine state machine
+with no model, no parameters, and no JAX dispatch.
+
+:class:`FakeEngine` subclasses :class:`repro.serving.engine.
+_PagedEngine`, so admission, block growth, preemption-by-recompute,
+macro-step budgeting and the step clock are the *real* scheduler code
+— only the three device hooks are replaced:
+
+* ``_reset_row`` / ``_prefill_row`` — host no-ops (the
+  :class:`repro.models.kvcache.PagedCache` ledger is pure numpy, so
+  block accounting still runs for real);
+* ``_forward_steps`` — a position-dependent integer recurrence::
+
+      tok' = (31 * tok + 7 * pos + 1) mod 997
+
+  Each step depends only on the previous token and its absolute
+  position, so streams are macro-step-K-invariant and survive
+  preempt-by-recompute token-identically — exactly the property the
+  real greedy decode has, at zero cost.
+
+Every policy decision (EDF ordering, admission-test verdicts, victim
+selection, slack aging, virtual-queue drift) is therefore
+unit-testable in milliseconds (tests/test_scheduler_policy.py,
+tests/test_scheduler_props.py), and the goodput benchmark's
+FIFO-vs-EDF deltas come from the same state machine the JAX engines
+run (benchmarks/goodput_bench.py drives FakeEngine for its committed
+baseline so the numbers are host-independent).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.serving.engine import _PagedEngine
+
+#: recurrence constants — small primes; 997 keeps tokens in-vocab for
+#: every smoke config
+_A, _B, _C, _MOD = 31, 7, 1, 997
+
+
+def fake_stream(prompt, n: int) -> list:
+    """Reference continuation of ``prompt`` under the testbed
+    recurrence — what a request's ``out_tokens`` must equal regardless
+    of scheduling (the testbed's golden oracle)."""
+    toks = list(prompt)
+    out = []
+    for _ in range(n):
+        pos = len(toks) - 1  # position of the token being fed
+        out.append((_A * toks[-1] + _B * pos + _C) % _MOD)
+        toks.append(out[-1])
+    return out
+
+
+class FakeEngine(_PagedEngine):
+    """The real paged scheduler over a scripted integer decoder."""
+
+    def __init__(self, cfg=None, *, max_rows: int = 4, max_len: int = 64,
+                 block_size: int = 8, num_blocks: Optional[int] = None,
+                 prefill_chunk: int = 16, watermark_blocks: int = 0,
+                 decode_steps: int = 1, policy=None):
+        cfg = cfg or get_smoke_config("smollm-360m")
+        super().__init__(cfg, max_rows=max_rows, max_len=max_len,
+                         block_size=block_size, num_blocks=num_blocks,
+                         prefill_chunk=prefill_chunk,
+                         watermark_blocks=watermark_blocks,
+                         decode_steps=decode_steps, policy=policy)
+
+    # ------------------------------------------------------- no devices
+    def _reset_row(self, row: int):
+        pass
+
+    def _prefill_row(self, row: int, toks: np.ndarray, pos0: int):
+        pass
+
+    def _forward_steps(self, tokens: np.ndarray, pos: np.ndarray,
+                       budgets: np.ndarray, k: int) -> np.ndarray:
+        out = np.zeros((len(tokens), k), dtype=np.int32)
+        for i in range(len(tokens)):
+            tok, p = int(tokens[i, 0]), int(pos[i])
+            for j in range(k):
+                tok = (_A * tok + _B * (p + j) + _C) % _MOD
+                out[i, j] = tok
+        return out

@@ -1,0 +1,336 @@
+"""Scheduler policy unit tests on the FakeEngine testbed.
+
+Every decision point of ``serving/scheduler.py`` pinned without JAX
+dispatch: EDF ordering, effective-capacity admission accept/reject
+boundaries, deadline-aware victim selection, slack-aging starvation
+avoidance (bounded promotion), hand-computed virtual-queue drift, and
+the rejection/resume bookkeeping regressions."""
+import pytest
+
+from repro.core.effective_capacity import latency_budget
+from repro.serving.engine import Request
+from repro.serving.scheduler import (
+    ADMIT, DEFER, REJECT, CapacityView, EDFCapacityPolicy, EDFPolicy,
+    FIFOPolicy, SchedulerPolicy, get_qos, goodput, make_policy,
+    per_class_stats, slo_met)
+from repro.serving.testbed import FakeEngine, fake_stream
+
+
+def _req(i, qos="standard", t_submit=0, **kw):
+    r = Request(id=i, prompt=kw.pop("prompt", [1, 2, 3]), qos=qos, **kw)
+    r.t_submit = t_submit
+    return r
+
+
+# ----------------------------------------------------------------------
+# policy registry / FIFO equivalence
+# ----------------------------------------------------------------------
+def test_make_policy_registry():
+    assert isinstance(make_policy(None), FIFOPolicy)
+    assert make_policy("edf").name == "edf"
+    assert make_policy("edf_ec").name == "edf_ec"
+    p = EDFPolicy()
+    assert make_policy(p) is p
+    with pytest.raises(ValueError):
+        make_policy("lottery")
+
+
+def test_fifo_is_the_historical_discipline():
+    """Queue-head admission, newest-admitted victim, no admission
+    test, unlimited preemptions — the pre-policy engine behaviour."""
+    pol = SchedulerPolicy()
+    q = [_req(0, t_submit=5), _req(1, t_submit=0)]
+    assert pol.next_admission(q, 10) is q[0]       # head, not earliest
+    cands = [(3, q[0]), (1, q[1])]                 # admission order
+    assert pol.select_victim(cands, 10, needy=3) == 1   # newest = LIFO
+    assert pol.admission_test(q[0], 10, None) == (ADMIT, None)
+    assert pol.max_preemptions is None
+
+
+# ----------------------------------------------------------------------
+# EDF ordering
+# ----------------------------------------------------------------------
+def test_edf_orders_by_class_deadline():
+    pol = EDFPolicy()
+    q = [_req(0, "batch"), _req(1, "standard"), _req(2, "interactive")]
+    assert pol.next_admission(q, 0).id == 2   # ttft 16 < 48 < 512
+    q.pop(2)
+    assert pol.next_admission(q, 0).id == 1
+
+
+def test_edf_resume_deadline_is_next_token():
+    """A preempted mid-stream request's deadline is its *next token*
+    TPOT due-date — it can outrank a fresher arrival."""
+    pol = EDFPolicy()
+    resume = _req(0, "standard", t_submit=0, out_tokens=[9, 9, 9])
+    resume.t_admit, resume.t_first = 1, 2
+    fresh = _req(1, "interactive", t_submit=10)
+    # dl(resume) = 2 + 4.0 * 4 = 18 < dl(fresh) = 10 + 16 = 26
+    assert pol.deadline(resume) == 18
+    assert pol.deadline(fresh) == 26
+    assert pol.next_admission([fresh, resume], 12).id == 0
+
+
+def test_edf_tiebreak_deterministic():
+    pol = EDFPolicy()
+    q = [_req(7, "standard"), _req(3, "standard")]
+    assert pol.next_admission(q, 0).id == 3   # equal key -> lowest id
+
+
+# ----------------------------------------------------------------------
+# effective-capacity admission boundaries
+# ----------------------------------------------------------------------
+def _view(free_blocks, granule=8, total=16):
+    return CapacityView(free_tokens=free_blocks * granule,
+                        total_tokens=total * granule, granule=granule)
+
+
+def test_ec_admits_when_it_fits_now():
+    pol = EDFCapacityPolicy(service_shape=2.0, service_scale=0.5)
+    req = _req(0, "interactive", prompt=[1] * 20)
+    assert pol.admission_test(req, 0, _view(3))[0] == ADMIT  # 20tok=3blk
+
+
+def test_ec_rejects_exhausted_ttft_slack():
+    pol = EDFCapacityPolicy(service_shape=2.0, service_scale=0.5)
+    req = _req(0, "interactive", t_submit=0)
+    verdict, msg = pol.admission_test(req, 17, _view(0))  # ttft 16 < 17
+    assert verdict == REJECT and "interactive" in msg
+
+
+def test_ec_reject_defer_boundary_matches_latency_budget():
+    """The verdict flips exactly where eq. 21's Chernoff inversion says
+    the pool cannot free the deficit within remaining TTFT slack."""
+    shape, scale = 2.0, 0.5
+    pol = EDFCapacityPolicy(service_shape=shape, service_scale=scale)
+    cls = get_qos("standard")
+    deficit = 4
+    view = _view(0)
+    need_tok = deficit * view.granule  # 4-block deficit, 0 free
+    d = latency_budget(shape, scale, cls.eps, float(deficit))
+    # submit so that remaining slack straddles d
+    tight = _req(0, "standard", t_submit=0, prompt=[1] * need_tok,
+                 max_new_tokens=0)
+    t_fail = int(cls.ttft - d) + 1      # slack = ttft - t < d
+    t_ok = int(cls.ttft - d) - 1        # slack > d
+    assert pol.admission_test(tight, t_fail, view)[0] == REJECT
+    assert pol.admission_test(tight, t_ok, view)[0] == DEFER
+
+
+def test_ec_resumed_requests_always_pass():
+    pol = EDFCapacityPolicy(service_shape=2.0, service_scale=0.5)
+    req = _req(0, "interactive", t_submit=0, out_tokens=[4])
+    req.t_admit = 1   # admitted once: contract honoured at admission
+    assert pol.admission_test(req, 999, _view(0))[0] == ADMIT
+
+
+def test_ec_defers_until_service_model_warm():
+    """Online estimator: before MIN_SAMPLES observations the test
+    must defer (plain EDF head-of-line wait), never reject on a cold
+    model."""
+    pol = EDFCapacityPolicy()
+    req = _req(0, "standard", t_submit=0, prompt=[1] * 64)
+    assert pol.admission_test(req, 1, _view(1))[0] == DEFER
+    # warm it: one block freed per step across enough sample windows
+    # for the EWMA to converge near the true 1 block/step rate
+    horizon = pol.SAMPLE_WINDOW * (pol.MIN_SAMPLES + 8) + 2
+    for t in range(1, horizon):
+        pol.on_step(t, [], [])
+        pol.on_free(1, t)
+    shape, scale = pol.service_stats()
+    assert shape is not None and shape * scale == pytest.approx(
+        1.0, rel=0.2)  # per-step mean rate recovered
+    assert pol.admission_test(req, 1, _view(1))[0] in (DEFER, REJECT)
+
+
+# ----------------------------------------------------------------------
+# victim selection
+# ----------------------------------------------------------------------
+def test_victim_is_most_slack_never_protected():
+    pol = EDFPolicy(ttft_protect=4)
+    t = 14
+    # fresh interactive, deadline 2+16=18, slack 4 <= protect: immune
+    prot = _req(0, "interactive", t_submit=2)
+    # generating standard: dl = 4 + 4*(2+1) = 16, slack 2
+    std = _req(1, "standard", t_submit=0, out_tokens=[5, 5])
+    std.t_admit, std.t_first = 2, 4
+    # generating batch: dl = 4 + 16*(1+1) = 36, slack 22 (most)
+    bat = _req(2, "batch", t_submit=0, out_tokens=[5])
+    bat.t_admit, bat.t_first = 2, 4
+    cands = [(0, prot), (1, std), (2, bat)]
+    assert pol.select_victim(cands, t, needy=0) == 2
+    # without batch, standard is the only eligible
+    assert pol.select_victim([(0, prot), (1, std)], t, needy=1) == 1
+    # all protected -> None (engine falls back to self-preemption)
+    assert pol.select_victim([(0, prot)], t, needy=0) is None
+
+
+def test_victim_no_protection_for_already_missed():
+    pol = EDFPolicy(ttft_protect=4)
+    missed = _req(0, "interactive", t_submit=0)   # dl 16 < t: missed
+    assert pol.select_victim([(0, missed)], 30, needy=0) == 0
+
+
+def test_victim_tie_breaks_to_newest():
+    pol = EDFPolicy()
+    a, b = _req(0, "batch"), _req(1, "batch")
+    for r in (a, b):
+        r.t_admit, r.t_first = 1, 2
+        r.out_tokens = [7]
+    assert pol.select_victim([(0, a), (1, b)], 5, needy=0) == 1
+
+
+# ----------------------------------------------------------------------
+# slack aging: bounded starvation
+# ----------------------------------------------------------------------
+def test_slack_aging_promotes_starving_batch():
+    """A batch request facing an endless stream of fresh interactive
+    arrivals must be promoted within a bounded number of steps: key
+    closure rate is (1 + age_rate) per step, so promotion lands by
+    (ttft_batch - ttft_int) / (1 + age_rate) ~ 331 steps — well inside
+    its own 512-step TTFT budget."""
+    pol = EDFPolicy(age_rate=0.5)
+    starving = _req(0, "batch", t_submit=0)
+    promoted_at = None
+    for t in range(1, 513):
+        fresh = _req(100 + t, "interactive", t_submit=t)
+        q = [fresh, starving]
+        pol.on_step(t, q, [])
+        if pol.next_admission(q, t).id == 0:
+            promoted_at = t
+            break
+    assert promoted_at is not None and promoted_at <= 340
+    assert promoted_at > 100  # and not trivially early
+
+
+# ----------------------------------------------------------------------
+# virtual-queue drift: hand-computed trace
+# ----------------------------------------------------------------------
+def test_virtual_queue_drift_matches_hand_trace():
+    """Eq. (18) with zeta=1, interactive ttft=16, driven by the class's
+    longest queued fresh wait:
+
+        t=20 wait 20: H = max(1 + 20 - 16, 1) = 5
+        t=21 wait 21: H = max(5 + 21 - 16, 1) = 10
+        t=22 drained: H = max(10 + 0 - 16, 1) = 1
+    """
+    pol = EDFPolicy()
+    r = _req(0, "interactive", t_submit=0)
+    assert pol.vq.get("interactive") == 1.0          # floor before drift
+    pol.on_step(20, [r], [])
+    assert pol.vq.get("interactive") == 5.0
+    pol.on_step(21, [r], [])
+    assert pol.vq.get("interactive") == 10.0
+    pol.on_step(22, [], [])                          # class drained
+    assert pol.vq.get("interactive") == 1.0
+    # admitted requests stop driving drift (t_admit set -> not queued-fresh)
+    r.t_admit = 22
+    pol.on_step(40, [r], [])
+    assert pol.vq.get("interactive") == 1.0
+
+
+def test_virtual_queue_uses_longest_wait_per_class():
+    pol = EDFPolicy()
+    old, young = _req(0, "interactive", t_submit=0), _req(
+        1, "interactive", t_submit=15)
+    pol.on_step(20, [young, old], [])
+    assert pol.vq.get("interactive") == 5.0  # wait 20, not 5
+
+
+def test_virtual_queue_boosts_admission_key():
+    """Deadline debt pulls the whole class forward: with H_int inflated,
+    a fresh interactive overtakes an otherwise-earlier standard."""
+    pol = EDFPolicy(age_rate=0.0)
+    std = _req(0, "standard", t_submit=0)       # dl 48
+    itv = _req(1, "interactive", t_submit=40)   # dl 56: later
+    assert pol.next_admission([std, itv], 40).id == 0
+    pol.vq.update("interactive", 20.0, 16.0)    # H: 1 -> 5
+    # key(itv) = 56 - 4.0 * (5 - 1) = 40 < 48
+    assert pol.next_admission([std, itv], 40).id == 1
+
+
+# ----------------------------------------------------------------------
+# SLO accounting helpers
+# ----------------------------------------------------------------------
+def test_slo_met_boundaries():
+    r = _req(0, "interactive", t_submit=0, out_tokens=[1] * 4,
+             max_new_tokens=4)
+    r.t_admit, r.t_first = 1, 16
+    r.t_done = 16 + 6      # tpot 2.0 * (4-1) = 6: exactly on time
+    assert slo_met(r)
+    r.t_done = 23          # one step late on TPOT
+    assert not slo_met(r)
+    r.t_done, r.t_first = 23 - 6 + 6, 17   # TTFT one step late
+    r.t_done = r.t_first + 6
+    assert not slo_met(r)
+
+
+def test_goodput_counts_rejected_and_unfinished_as_misses():
+    ok = _req(0, "batch", t_submit=0, out_tokens=[1], max_new_tokens=1)
+    ok.t_admit = ok.t_first = ok.t_done = 1
+    rej = _req(1, "batch", t_submit=0)
+    rej.error, rej.t_done = "rejected", 1
+    hung = _req(2, "batch", t_submit=0)
+    assert goodput([ok, rej, hung]) == pytest.approx(1 / 3)
+    stats = per_class_stats([ok, rej, hung])
+    assert stats["batch"]["n"] == 3
+    assert stats["batch"]["rejected"] == 1
+    assert stats["batch"]["goodput"] == pytest.approx(1 / 3)
+
+
+# ----------------------------------------------------------------------
+# regressions: rejection stamping + resume without restamping
+# ----------------------------------------------------------------------
+def test_admission_reject_stamps_t_done_and_class_error():
+    """Requests rejected by the admission test before first admission
+    get the full ``_reject`` treatment: ``t_done`` stamped, landed in
+    ``engine.rejected``, class-specific error message."""
+    # slow pool: latency_budget(1.0, 0.25, .05, 4 blocks) ~ 27 steps
+    pol = EDFCapacityPolicy(service_shape=1.0, service_scale=0.25)
+    eng = FakeEngine(max_rows=2, max_len=64, block_size=8, num_blocks=8,
+                     policy=pol)
+    eng.submit(Request(id=0, prompt=[2] * 32, max_new_tokens=20,
+                       qos="batch"))         # hogs 4+ blocks for a while
+    eng.run(max_steps=2)                     # batch admitted + running
+    # needs 8 blocks now, <=4 free: the Gamma model says freeing the
+    # deficit blows the 16-step interactive TTFT -> reject up front
+    eng.submit(Request(id=1, prompt=[3] * 60, max_new_tokens=4,
+                       qos="interactive"))
+    eng.run()
+    assert [r.id for r in eng.rejected] == [1]
+    rej = eng.rejected[0]
+    assert rej.t_done is not None and rej.t_admit is None
+    assert "interactive" in rej.error and "effective-capacity" in rej.error
+    assert rej.t_submit <= rej.t_done
+
+
+def test_unfinished_resume_without_restamping():
+    """``run()`` exhausting its step budget leaves requests in
+    ``engine.unfinished``; a further ``run()`` must resume them to
+    completion with their original ``t_submit`` (no duplicate
+    restamping) and byte-identical streams."""
+    eng = FakeEngine(max_rows=2, max_len=64)
+    reqs = [Request(id=i, prompt=[4 + i, 5], max_new_tokens=12)
+            for i in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_steps=3)
+    assert eng.unfinished                    # budget too small to drain
+    stamps = {r.id: r.t_submit for r in reqs}
+    eng.run()                                # resume
+    assert not eng.unfinished
+    for r in reqs:
+        assert r.t_submit == stamps[r.id]    # original stamp survives
+        assert r.out_tokens == fake_stream(r.prompt, 12)
+        assert r.t_submit <= r.t_admit <= r.t_done
+
+
+def test_resubmit_keeps_original_t_submit():
+    eng = FakeEngine(max_rows=1)
+    r = Request(id=0, prompt=[5], max_new_tokens=2)
+    eng.submit(r)
+    eng.run()
+    assert r.t_submit == 0
+    eng.queue.append(r)  # hypothetical re-enqueue path
+    eng.submit(Request(id=1, prompt=[6], max_new_tokens=2))
+    assert r.t_submit == 0  # no restamp on later submits

@@ -1,0 +1,133 @@
+"""Property-based scheduler invariants on the FakeEngine testbed.
+
+Randomized mixed-class traces (seeded, via ``tests/_propcheck.py`` —
+no hypothesis dependency) drive the real paged scheduler state machine
+under every policy, pinning the contracts the serving engines promise
+regardless of discipline:
+
+* **conservation** — every submitted request ends in exactly one of
+  done / ``engine.rejected`` / ``engine.unfinished``;
+* **monotone clocks** — ``t_submit <= t_admit <= t_done`` (and
+  ``t_first`` between admission and completion) for every stamp that
+  exists;
+* **bounded churn** — no request is preempted more than the policy's
+  ``max_preemptions`` (eviction, not starvation-by-recompute);
+* **determinism** — byte-identical replay across two runs of the same
+  seed (policies carry no hidden nondeterminism — the committed
+  goodput baseline depends on this).
+"""
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 runs green without hypothesis
+    from _propcheck import given, settings, st
+
+from repro.serving.engine import Request
+from repro.serving.scheduler import make_policy
+from repro.serving.testbed import FakeEngine
+
+CLASSES = ["interactive", "standard", "batch"]
+
+
+def _drive(seed: int, policy: str, decode_steps: int, num_blocks: int):
+    """One randomized serving session: staggered submission bursts with
+    partial ``run()`` budgets in between, then drain.  Returns the
+    engine, every submitted request, and the completed list."""
+    rng = np.random.default_rng(seed)
+    eng = FakeEngine(max_rows=3, max_len=64, block_size=8,
+                     num_blocks=num_blocks, decode_steps=decode_steps,
+                     policy=make_policy(policy))
+    reqs, done = [], []
+    for _ in range(int(rng.integers(2, 5))):
+        for _ in range(int(rng.integers(1, 5))):
+            plen = int(rng.integers(1, 40))
+            r = Request(
+                id=len(reqs),
+                prompt=[int(x) for x in rng.integers(1, 900, size=plen)],
+                max_new_tokens=int(rng.integers(1, 14)),
+                qos=CLASSES[int(rng.integers(3))])
+            reqs.append(r)
+            eng.submit(r)
+        done += eng.run(max_steps=int(rng.integers(1, 12)))
+    done += eng.run()
+    return eng, reqs, done
+
+
+def _state(eng, reqs, done):
+    """Full observable outcome of a session, for replay comparison."""
+    return repr((
+        [(r.id, r.t_submit, r.t_admit, r.t_first, r.t_done,
+          r.n_preempted, r.error, r.out_tokens) for r in reqs],
+        sorted(r.id for r in done),
+        sorted(r.id for r in eng.rejected),
+        sorted(r.id for r in eng.unfinished),
+        eng.t, eng.tokens_generated, eng.n_preemptions))
+
+
+@settings(max_examples=12)
+@given(seed=st.integers(0, 10_000),
+       policy=st.sampled_from(["fifo", "edf", "edf_ec"]),
+       decode_steps=st.sampled_from([1, 4]),
+       num_blocks=st.sampled_from([6, 9, 14]))
+def test_every_request_exactly_one_outcome(seed, policy, decode_steps,
+                                           num_blocks):
+    eng, reqs, done = _drive(seed, policy, decode_steps, num_blocks)
+    done_ids = {r.id for r in done}
+    rej_ids = {r.id for r in eng.rejected}
+    unf_ids = {r.id for r in eng.unfinished}
+    assert done_ids | rej_ids | unf_ids == {r.id for r in reqs}
+    assert not (done_ids & rej_ids)
+    assert not (done_ids & unf_ids)
+    assert not (rej_ids & unf_ids)
+    for r in done:
+        assert r.done and r.error is None and r.t_done is not None
+    for r in eng.rejected:
+        assert r.error is not None and r.t_done is not None
+
+
+@settings(max_examples=12)
+@given(seed=st.integers(0, 10_000),
+       policy=st.sampled_from(["fifo", "edf", "edf_ec"]),
+       decode_steps=st.sampled_from([1, 4]),
+       num_blocks=st.sampled_from([6, 9, 14]))
+def test_timestamps_monotone(seed, policy, decode_steps, num_blocks):
+    eng, reqs, done = _drive(seed, policy, decode_steps, num_blocks)
+    for r in reqs:
+        assert r.t_submit is not None          # submit always stamps
+        if r.t_admit is not None:
+            assert r.t_submit <= r.t_admit
+        if r.t_first is not None:
+            # admission and the first emitted token can land on the
+            # same engine step (prefill + decode in one iteration)
+            assert r.t_admit is not None and r.t_admit <= r.t_first
+        if r.t_done is not None:
+            base = r.t_admit if r.t_admit is not None else r.t_submit
+            assert base <= r.t_done
+        if r.t_first is not None and r.t_done is not None:
+            assert r.t_first <= r.t_done
+
+
+@settings(max_examples=12)
+@given(seed=st.integers(0, 10_000),
+       policy=st.sampled_from(["edf", "edf_ec"]),
+       decode_steps=st.sampled_from([1, 4]),
+       num_blocks=st.sampled_from([6, 9]))
+def test_preemptions_bounded(seed, policy, decode_steps, num_blocks):
+    eng, reqs, done = _drive(seed, policy, decode_steps, num_blocks)
+    cap = eng.policy.max_preemptions
+    assert cap is not None                     # EDF policies set one
+    for r in reqs:
+        assert r.n_preempted <= cap
+        if r.n_preempted == cap:               # evicted, never requeued
+            assert r.error is not None and "preemption" in r.error
+
+
+@settings(max_examples=8)
+@given(seed=st.integers(0, 10_000),
+       policy=st.sampled_from(["fifo", "edf", "edf_ec"]),
+       decode_steps=st.sampled_from([1, 4]))
+def test_replay_byte_identical(seed, policy, decode_steps):
+    a = _state(*_drive(seed, policy, decode_steps, 9))
+    b = _state(*_drive(seed, policy, decode_steps, 9))
+    assert a == b
