@@ -64,7 +64,9 @@ DEFAULT_CONFIGS = "smollm-360m,qwen2-72b"
 
 def build_trace(scenario: str, seed: int, n_requests: int, max_len: int,
                 span_steps: int | None = None, short_frac: float = 0.7,
-                new_lo: int = 4, new_hi: int = 21):
+                new_lo: int = 4, new_hi: int = 21,
+                shared_prefix_frac: float = 0.0,
+                shared_prefix_len: int = 48):
     """Deterministic mixed-length request trace: (arrival_step, prompt,
     max_new_tokens) tuples, arrival counts modulated by the scenario's
     workload dynamics (stationary scenarios fall back to Poisson).
@@ -74,13 +76,22 @@ def build_trace(scenario: str, seed: int, n_requests: int, max_len: int,
     block-granular admission matters.  ``new_lo``/``new_hi`` bound the
     sampled ``max_new_tokens`` — the defaults keep this bench's
     admission-heavy mix; `benchmarks/engine_bench.py` raises them for a
-    decode-dominant (steady-state) variant of the same trace."""
+    decode-dominant (steady-state) variant of the same trace.
+
+    ``shared_prefix_frac`` models system-prompt traffic: that fraction
+    of requests carries one deterministic ``shared_prefix_len``-token
+    common stem plus a short random tail — the workload prefix-sharing
+    admission (SERVING.md §Prefix sharing) turns into mapped blocks and
+    skipped prefill.  At 0.0 (the default) the draw stream is untouched
+    and traces are bit-identical to the pre-knob bench."""
     if span_steps is None:
         span_steps = max(8, n_requests // 2)
     ss = np.random.SeedSequence(
         [seed, zlib.crc32(scenario.encode()), zlib.crc32(b"paged_bench")])
     r_arr, r_len, r_mod = [np.random.default_rng(s) for s in ss.spawn(3)]
     modulation = get_scenario(scenario).arrival_modulation(r_mod)
+    stem = [int(x) for x in np.random.default_rng(ss.spawn(1)[0])
+            .integers(1, 500, size=shared_prefix_len)]
     rate = n_requests / span_steps
     trace = []
     t = 0
@@ -89,6 +100,16 @@ def build_trace(scenario: str, seed: int, n_requests: int, max_len: int,
         for _ in range(r_arr.poisson(rate * mult)):
             if len(trace) >= n_requests:
                 break
+            if (shared_prefix_frac
+                    and r_len.random() < shared_prefix_frac):
+                new = min(int(r_len.integers(new_lo, new_hi)), max_len - 2)
+                t_len = int(r_len.integers(4, 14))
+                t_len = max(1, min(t_len,
+                                   max_len - new - shared_prefix_len))
+                prompt = stem + [int(x) for x in
+                                 r_len.integers(1, 500, size=t_len)]
+                trace.append((t, prompt, new))
+                continue
             if r_len.random() < short_frac:
                 p_len = int(r_len.integers(6, 17))
             else:
@@ -113,6 +134,13 @@ def drive(eng, trace, is_paged: bool) -> dict:
     jax.block_until_ready(jax.tree.leaves(caches))
 
     t0_step = eng.t
+    # counter snapshots: the warmup request's prefill (and any prefix
+    # registration it left behind is already drained — its blocks
+    # deindexed at release) must not pollute the timed-phase stats
+    pf0 = eng.prefill_tokens
+    share0 = ((eng.pc.n_prefix_hits, eng.pc.prefix_tokens_hit,
+               eng.pc.blocks_saved, eng.pc.n_cow_copies)
+              if is_paged else (0, 0, 0, 0))
     pending = [(t + t0_step, Request(id=i, prompt=list(p), max_new_tokens=n))
                for i, (t, p, n) in enumerate(trace)]
     done, conc, util = [], [], []
@@ -138,7 +166,7 @@ def drive(eng, trace, is_paged: bool) -> dict:
     busy = [c for c in conc if c > 0]
     queue_d = np.array([r.t_admit - r.t_submit for r in done], float)
     complete = np.array([r.t_done - r.t_submit for r in done], float)
-    return {
+    row = {
         "completed": len(done),
         "rejected": len(eng.rejected),
         "tokens": toks,
@@ -158,46 +186,88 @@ def drive(eng, trace, is_paged: bool) -> dict:
         "preemptions": eng.n_preemptions if is_paged else 0,
         "outputs": {r.id: list(r.out_tokens) for r in done},
     }
+    prefilled = eng.prefill_tokens - pf0
+    row["prefill_tokens"] = prefilled
+    if is_paged:
+        hits = eng.pc.n_prefix_hits - share0[0]
+        hit_tok = eng.pc.prefix_tokens_hit - share0[1]
+        # admissions = every completion reached the rows once, plus one
+        # re-admission per preemption (rejects never admit)
+        admits = len(done) + eng.n_preemptions
+        row.update({
+            "prefix_hits": hits,
+            "admit_hit_rate": hits / admits if admits else 0.0,
+            "prefill_skip_frac": (hit_tok / (hit_tok + prefilled)
+                                  if hit_tok + prefilled else 0.0),
+            "blocks_saved": eng.pc.blocks_saved - share0[2],
+            "cow_copies": eng.pc.n_cow_copies - share0[3],
+        })
+    else:
+        row.update({"prefix_hits": 0, "admit_hit_rate": 0.0,
+                    "prefill_skip_frac": 0.0, "blocks_saved": 0,
+                    "cow_copies": 0})
+    return row
 
 
 def main(configs=DEFAULT_CONFIGS, scenario: str = "bursty_mmpp",
          n_requests: int = 32, max_batch: int = 4, cache_len: int = 96,
          max_rows: int = 12, block_size: int = 16, prefill_chunk: int = 16,
          watermark_blocks: int = 0, seed: int = 0,
+         shared_prefix_frac: float = 0.7, shared_prefix_len: int = 48,
          out: str | None = None):
     num_blocks = max_batch * cache_len // block_size  # equal token-slots
     rows = []
     for arch in str(configs).split(","):
         cfg = get_smoke_config(arch)
-        trace = build_trace(scenario, seed, n_requests, cache_len)
+        trace = build_trace(scenario, seed, n_requests, cache_len,
+                            shared_prefix_frac=shared_prefix_frac,
+                            shared_prefix_len=shared_prefix_len)
+
+        def paged_engine(sharing):
+            return PagedServingEngine(
+                cfg, max_rows=max_rows, max_len=cache_len,
+                block_size=block_size, num_blocks=num_blocks,
+                prefill_chunk=prefill_chunk,
+                watermark_blocks=watermark_blocks,
+                prefix_sharing=sharing)
+
+        # three engines at EQUAL cache memory: dense slots, the paged
+        # pool with exclusive block ownership, and the paged pool with
+        # prefix sharing — so the bench separates the paging gain
+        # (paged/dense) from the sharing gain (shared/paged)
         res = {}
         for label, mk in (
                 ("dense", lambda: ServingEngine(
                     cfg, max_batch=max_batch, cache_len=cache_len,
                     prefill_chunk=prefill_chunk)),
-                ("paged", lambda: PagedServingEngine(
-                    cfg, max_rows=max_rows, max_len=cache_len,
-                    block_size=block_size, num_blocks=num_blocks,
-                    prefill_chunk=prefill_chunk,
-                    watermark_blocks=watermark_blocks))):
-            res[label] = drive(mk(), trace, is_paged=(label == "paged"))
-        match = res["dense"]["outputs"] == res["paged"]["outputs"]
-        gain = (res["paged"]["concurrency_mean"]
-                / max(res["dense"]["concurrency_mean"], 1e-9))
-        print(f"\n== {arch} [{scenario}] {n_requests} reqs, "
+                ("paged", lambda: paged_engine(False)),
+                ("shared", lambda: paged_engine(True))):
+            res[label] = drive(mk(), trace, is_paged=(label != "dense"))
+        match = (res["dense"]["outputs"] == res["paged"]["outputs"]
+                 == res["shared"]["outputs"])
+        gain_paged = (res["paged"]["concurrency_mean"]
+                      / max(res["dense"]["concurrency_mean"], 1e-9))
+        gain_shared = (res["shared"]["concurrency_mean"]
+                       / max(res["paged"]["concurrency_mean"], 1e-9))
+        print(f"\n== {arch} [{scenario}] {n_requests} reqs "
+              f"(shared-prefix frac {shared_prefix_frac}), "
               f"{num_blocks} blocks x {block_size} == "
               f"{max_batch} slots x {cache_len} tokens ==")
         print(f"{'engine':>6s} {'tok/s':>8s} {'conc':>6s} {'peak':>5s} "
-              f"{'util':>6s} {'q_mean':>7s} {'q_p95':>6s} {'preempt':>7s}")
-        for label in ("dense", "paged"):
+              f"{'util':>6s} {'q_mean':>7s} {'q_p95':>6s} {'preempt':>7s} "
+              f"{'hits':>5s} {'skip':>5s} {'saved':>6s}")
+        for label in ("dense", "paged", "shared"):
             r = res[label]
             print(f"{label:>6s} {r['tok_per_s']:8.1f} "
                   f"{r['concurrency_mean']:6.2f} {r['concurrency_peak']:5d} "
                   f"{r['cache_util_mean']:6.2f} {r['queue_delay_mean']:7.1f} "
-                  f"{r['queue_delay_p95']:6.1f} {r['preemptions']:7d}")
+                  f"{r['queue_delay_p95']:6.1f} {r['preemptions']:7d} "
+                  f"{r['prefix_hits']:5d} {r['prefill_skip_frac']:5.2f} "
+                  f"{r['blocks_saved']:6d}")
         print(f"outputs identical: {match}; sustained concurrency "
-              f"paged/dense = {gain:.2f}x")
-        for label in ("dense", "paged"):
+              f"paged/dense = {gain_paged:.2f}x, "
+              f"shared/paged = {gain_shared:.2f}x")
+        for label in ("dense", "paged", "shared"):
             row = {"arch": arch, "engine": label, **res[label]}
             row.pop("outputs")
             row["outputs_match"] = match
@@ -209,6 +279,8 @@ def main(configs=DEFAULT_CONFIGS, scenario: str = "bursty_mmpp",
             "max_batch": max_batch, "cache_len": cache_len,
             "max_rows": max_rows, "block_size": block_size,
             "num_blocks": num_blocks, "seed": seed,
+            "shared_prefix_frac": shared_prefix_frac,
+            "shared_prefix_len": shared_prefix_len,
             "note": "wall_s/tok_per_s are host-dependent; all other "
                     "columns are deterministic given the seed"})
     return rows
@@ -230,6 +302,12 @@ if __name__ == "__main__":
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--watermark", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--shared-prefix-frac", type=float, default=0.7,
+                    help="fraction of requests carrying the common "
+                         "system-prompt stem (0 disables the knob)")
+    ap.add_argument("--shared-prefix-len", type=int, default=48,
+                    help="stem length in tokens (a multiple of "
+                         "--block-size shares every stem block)")
     ap.add_argument("--quick", action="store_true",
                     help="one config, fewer requests")
     ap.add_argument("--out", default=None)
@@ -241,4 +319,5 @@ if __name__ == "__main__":
          n_requests=args.requests, max_batch=args.max_batch,
          cache_len=args.cache_len, max_rows=args.rows,
          block_size=args.block_size, watermark_blocks=args.watermark,
-         seed=args.seed, out=args.out)
+         seed=args.seed, shared_prefix_frac=args.shared_prefix_frac,
+         shared_prefix_len=args.shared_prefix_len, out=args.out)

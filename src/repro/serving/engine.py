@@ -72,7 +72,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import build_model
-from repro.models.kvcache import PagedCache, paged_reset_row
+from repro.models.kvcache import (PagedCache, paged_copy_blocks,
+                                  paged_reset_row)
 from repro.serving.scheduler import (DEFER, REJECT, CapacityView,
                                      make_policy)
 
@@ -159,6 +160,9 @@ class _EngineBase:
         self._jits = {}
         self.n_host_syncs = 0      # device->host materializations (decode)
         self.max_macro_tokens = 0  # most tokens emitted by one macro-step
+        self.prefill_tokens = 0    # tokens actually prefilled (a prefix
+        #                            hit shrinks this: the engine's
+        #                            admission-cost / t_first budget)
 
     def submit(self, req: Request):
         if req.t_submit is None:  # resubmission keeps the original stamp
@@ -174,14 +178,17 @@ class _EngineBase:
         req.t_done = self.t
         self.rejected.append(req)
 
-    def _prefill_chunks(self, row: int, toks: List[int]):
+    def _prefill_chunks(self, row: int, toks: List[int], pos0: int = 0):
         """Chunked prefill of one admitted request through the
-        ``_prefill_row`` hook."""
+        ``_prefill_row`` hook.  ``pos0`` offsets the absolute positions
+        — a prefix-cache hit prefills only the tail beyond the shared
+        span (the skipped span never costs a prefill dispatch)."""
         i = 0
         for c in chunk_sizes(len(toks), self.prefill_chunk):
             self._prefill_row(row, np.asarray(toks[i:i + c],
-                                              dtype=np.int32), i)
+                                              dtype=np.int32), pos0 + i)
             i += c
+        self.prefill_tokens += len(toks)
 
     def _next_tokens(self, width: int, active: List[int],
                      store: List[Optional[Request]]) -> np.ndarray:
@@ -440,14 +447,20 @@ class _PagedEngine(_EngineBase):
     def __init__(self, cfg, *, max_rows: int, max_len: int,
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  prefill_chunk: int = 16, watermark_blocks: int = 0,
-                 decode_steps: int = 1, policy=None):
+                 decode_steps: int = 1, policy=None,
+                 prefix_sharing: bool = True):
         super().__init__(cfg, prefill_chunk=prefill_chunk,
                          decode_steps=decode_steps, policy=policy)
         self.max_rows = max_rows
         self.max_len = max_len
+        # prefix sharing defaults on: with no overlapping full-block
+        # prefixes in flight it is a no-op (token streams are pinned
+        # identical either way — tests/test_paged.py's ON-vs-OFF sweep),
+        # and the ledger auto-gates it off on SWA/SSM/cross archs
         self.pc = PagedCache(cfg, max_rows=max_rows, max_len=max_len,
                              block_size=block_size, num_blocks=num_blocks,
-                             watermark_blocks=watermark_blocks)
+                             watermark_blocks=watermark_blocks,
+                             share_prefixes=prefix_sharing)
         self.pos = np.zeros(max_rows, dtype=np.int32)
         self.rows: List[Optional[Request]] = [None] * max_rows
         self._admit_order: List[int] = []   # rows, oldest admission first
@@ -469,7 +482,8 @@ class _PagedEngine(_EngineBase):
         bs = self.pc.block_size
         return CapacityView(free_tokens=self.pc.free_blocks * bs,
                             total_tokens=self.pc.num_blocks * bs,
-                            granule=bs)
+                            granule=bs,
+                            shared_blocks=self.pc.probe_hit)
 
     def _admit(self):
         """Token-level admission: the policy's choice admits whenever a
@@ -503,13 +517,15 @@ class _PagedEngine(_EngineBase):
                 self._reject(req, msg or "rejected by admission test")
                 continue
             total = len(req.prompt) + len(req.out_tokens)
+            toks = (req.prompt + req.out_tokens)[:-1]
             wm = (None if any(r is not None for r in self.rows) else 0)
             if verdict == DEFER or not self.pc.can_admit(total,
-                                                         watermark=wm):
+                                                         watermark=wm,
+                                                         tokens=toks):
                 break
             self.queue.remove(req)
             row = free.pop(0)
-            if not self.pc.admit(row, total, watermark=wm):
+            if not self.pc.admit(row, total, watermark=wm, tokens=toks):
                 # can_admit above said yes; a refusal here is a ledger
                 # bug and must not be silently skipped (nor live in an
                 # assert — ``python -O`` would strip the allocation)
@@ -521,8 +537,12 @@ class _PagedEngine(_EngineBase):
             self.rows[row] = req
             self._admit_order.append(row)
             self._reset_row(row)
-            toks = (req.prompt + req.out_tokens)[:-1]
-            self._prefill_chunks(row, toks)
+            # a prefix hit maps the matched span's blocks into the
+            # table already filled — prefill only the tail beyond it
+            # (hit == len(toks) skips prefill entirely: decode input is
+            # the last token itself, not a prefill output)
+            hit = self.pc.hit_tokens(row)
+            self._prefill_chunks(row, toks[hit:], pos0=hit)
             self.pos[row] = len(toks)
 
     def _preempt(self, row: int):
@@ -611,6 +631,12 @@ class _PagedEngine(_EngineBase):
         k = (self.decode_k if k_cap is None
              else max(1, min(self.decode_k, k_cap)))
         budgets, clip = self._grow(k)
+        # any copy-on-write the ledger queued (a row about to write a
+        # still-shared block) must hit the device pools before the scan
+        # reads or writes the fresh copies
+        pairs = self.pc.take_pending_copies()
+        if pairs:
+            self._apply_cow(pairs)
         active = [i for i, r in enumerate(self.rows) if r is not None]
         if not active:
             return []
@@ -628,6 +654,13 @@ class _PagedEngine(_EngineBase):
             self.policy.on_free(self.pc.free_blocks - fb0, self.t)
             done.append(req)
         return done
+
+    def _apply_cow(self, pairs: List[tuple]):
+        """Apply queued COW pool copies ``[(src, dst), ...]`` to the
+        device-side caches.  The base implementation is a host no-op —
+        enough for ledgers without device pools (``FakeEngine``'s
+        integer recurrence keeps no per-position state); real engines
+        override with a jitted :func:`paged_copy_blocks`."""
 
     @property
     def active_rows(self) -> int:
@@ -685,12 +718,14 @@ class PagedServingEngine(_PagedEngine):
                  max_len: int = 128, block_size: int = 16,
                  num_blocks: Optional[int] = None, seed: int = 0,
                  prefill_chunk: int = 16, watermark_blocks: int = 0,
-                 decode_steps: int = 1, policy=None):
+                 decode_steps: int = 1, policy=None,
+                 prefix_sharing: bool = True):
         super().__init__(cfg, max_rows=max_rows, max_len=max_len,
                          block_size=block_size, num_blocks=num_blocks,
                          prefill_chunk=prefill_chunk,
                          watermark_blocks=watermark_blocks,
-                         decode_steps=decode_steps, policy=policy)
+                         decode_steps=decode_steps, policy=policy,
+                         prefix_sharing=prefix_sharing)
         self.model = build_model(cfg)
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else self.model.init(key)
@@ -702,6 +737,16 @@ class PagedServingEngine(_PagedEngine):
             lambda caches, row, xids: paged_reset_row(caches, segs, row,
                                                       xids),
             donate_argnums=(0,))
+        has_swa = self.pc.has_swa
+        self._jits["cow"] = jax.jit(
+            lambda caches, src, dst: paged_copy_blocks(
+                caches, segs, src, dst, has_swa=has_swa),
+            donate_argnums=(0,))
+
+    def _apply_cow(self, pairs):
+        src = jnp.asarray([s for s, _ in pairs], jnp.int32)
+        dst = jnp.asarray([d for _, d in pairs], jnp.int32)
+        self.caches = self._jits["cow"](self.caches, src, dst)
 
     def _reset_row(self, row: int):
         xids = jnp.asarray(self.pc.cross_tables[row].copy())

@@ -59,7 +59,8 @@ from repro.core.qos import qos_scores
 from repro.microservice.partition import (StageSpec, decompose,
                                           profile_stage_ms, to_application)
 from repro.models import build_model
-from repro.models.kvcache import PagedCache, paged_reset_row
+from repro.models.kvcache import (PagedCache, paged_copy_blocks,
+                                  paged_reset_row)
 from repro.models.model import (greedy_scan_update, row_isolated,
                                 ssm_row_isolated)
 from repro.models.transformer import segment_range
@@ -186,6 +187,11 @@ class _CoreStage:
                 lambda caches, row, xids: paged_reset_row(caches, segs,
                                                           row, xids),
                 donate_argnums=(0,))
+            has_swa = paged.has_swa
+            self._jits["cow"] = jax.jit(
+                lambda caches, src, dst: paged_copy_blocks(
+                    caches, segs, src, dst, has_swa=has_swa),
+                donate_argnums=(0,))
 
         self._jits["decode"] = jax.jit(_decode)  # profile-only: no donation
         self._jits["prefill"] = jax.jit(_prefill, donate_argnums=(1,))
@@ -199,6 +205,10 @@ class _CoreStage:
     def reset_row(self, slot, xids=None):
         args = (() if self.paged is None else (xids,))
         self.caches = self._jits["reset"](self.caches, slot, *args)
+
+    def copy_blocks(self, src, dst):
+        """COW pool copies on this stage's layer slice of the pools."""
+        self.caches = self._jits["cow"](self.caches, src, dst)
 
 
 class _NetShimMixin:
@@ -437,12 +447,13 @@ class PagedPipelinedEngine(_PagedEngine, _NetShimMixin):
                  watermark_blocks: int = 0, net=None,
                  placement: Optional[Dict[str, int]] = None,
                  entry_node: Optional[int] = None, decode_steps: int = 1,
-                 policy=None):
+                 policy=None, prefix_sharing: bool = True):
         super().__init__(cfg, max_rows=max_rows, max_len=max_len,
                          block_size=block_size, num_blocks=num_blocks,
                          prefill_chunk=prefill_chunk,
                          watermark_blocks=watermark_blocks,
-                         decode_steps=decode_steps, policy=policy)
+                         decode_steps=decode_steps, policy=policy,
+                         prefix_sharing=prefix_sharing)
         self._init_stages_and_net(cfg, params, n_stages=n_stages,
                                   max_batch=max_rows, cache_len=max_len,
                                   seed=seed, net=net, placement=placement,
@@ -466,6 +477,12 @@ class PagedPipelinedEngine(_PagedEngine, _NetShimMixin):
         for k, st in enumerate(self.stages):
             x = st.prefill(x, p0, r, meta)
             self._ship_between(k, c, self._act_bytes)
+
+    def _apply_cow(self, pairs):
+        src = jnp.asarray([s for s, _ in pairs], jnp.int32)
+        dst = jnp.asarray([d for _, d in pairs], jnp.int32)
+        for st in self.stages:
+            st.copy_blocks(src, dst)
 
     def _forward_steps(self, tokens: np.ndarray, pos: np.ndarray,
                        budgets: np.ndarray, k: int) -> np.ndarray:

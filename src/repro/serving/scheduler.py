@@ -48,7 +48,7 @@ goodput is deterministic given a trace — unlike wall-clock tokens/s.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.effective_capacity import latency_budget
 from repro.core.lyapunov import VirtualQueues
@@ -170,6 +170,11 @@ class CapacityView:
     free_tokens: int     # tokens admissible right now (above watermark)
     total_tokens: int    # whole pool
     granule: int         # allocation unit (block_size / cache_len)
+    # prefix-sharing probe: tokens -> blocks an admission would *share*
+    # rather than allocate (PagedCache.probe_hit; None when the engine
+    # has no prefix index).  A cache hit shrinks the modeled service
+    # demand in the effective-capacity admission test.
+    shared_blocks: Optional[Callable[[List[int]], int]] = None
 
     def blocks(self, n_tokens: int) -> int:
         return -(-n_tokens // self.granule)
@@ -439,6 +444,11 @@ class EDFCapacityPolicy(EDFPolicy):
                 f"{cls.name}: TTFT deadline exhausted before admission "
                 f"(waited {t - req.t_submit} > ttft {cls.ttft} steps)")
         need_now = view.blocks(len(req.prompt) + len(req.out_tokens))
+        if view.shared_blocks is not None:
+            # a prefix-cache hit maps blocks instead of allocating them:
+            # the modeled service demand shrinks by the shared span
+            need_now -= view.shared_blocks(
+                (req.prompt + req.out_tokens)[:-1])
         deficit = need_now - view.free_blocks
         if deficit <= 0:
             return ADMIT, None

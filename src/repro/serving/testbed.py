@@ -16,7 +16,11 @@ macro-step budgeting and the step clock are the *real* scheduler code
   Each step depends only on the previous token and its absolute
   position, so streams are macro-step-K-invariant and survive
   preempt-by-recompute token-identically — exactly the property the
-  real greedy decode has, at zero cost.
+  real greedy decode has, at zero cost.  (``_apply_cow`` stays the
+  inherited host no-op for the same reason: the recurrence keeps no
+  per-position device state a copy-on-write would have to duplicate,
+  while the refcount/COW *ledger* machinery still runs for real —
+  tests/test_prefix_sharing.py drives it through this class.)
 
 Every policy decision (EDF ordering, admission-test verdicts, victim
 selection, slack aging, virtual-queue drift) is therefore
@@ -59,13 +63,15 @@ class FakeEngine(_PagedEngine):
     def __init__(self, cfg=None, *, max_rows: int = 4, max_len: int = 64,
                  block_size: int = 8, num_blocks: Optional[int] = None,
                  prefill_chunk: int = 16, watermark_blocks: int = 0,
-                 decode_steps: int = 1, policy=None):
+                 decode_steps: int = 1, policy=None,
+                 prefix_sharing: bool = True):
         cfg = cfg or get_smoke_config("smollm-360m")
         super().__init__(cfg, max_rows=max_rows, max_len=max_len,
                          block_size=block_size, num_blocks=num_blocks,
                          prefill_chunk=prefill_chunk,
                          watermark_blocks=watermark_blocks,
-                         decode_steps=decode_steps, policy=policy)
+                         decode_steps=decode_steps, policy=policy,
+                         prefix_sharing=prefix_sharing)
 
     # ------------------------------------------------------- no devices
     def _reset_row(self, row: int):

@@ -1,0 +1,147 @@
+"""Property-based paged-cache ledger invariants under prefix sharing.
+
+Randomized (seeded, via ``tests/_propcheck.py`` — no hypothesis
+dependency) interleavings of admit / grow / COW-write / release /
+preempt over *overlapping-prefix* prompt families pin the refcounted
+ownership contract the engines rely on (SERVING.md §Prefix sharing):
+
+* **partition** — after every operation, every attn-pool block is
+  exactly one of {free, scratch, referenced}; a block is on the free
+  list iff its refcount is zero;
+* **accounting** — each block's refcount equals both its multiplicity
+  across the per-row held lists and its occupancy across the block
+  tables (``PagedCache.check`` asserts all of this internally);
+* **no double-free** — releasing an already-drained row never returns
+  a still-referenced (or already-free) block to the free list;
+* **drain** — releasing every row returns the pool to its initial
+  free-list size with an empty prefix index, regardless of how many
+  admissions shared blocks along the way.
+
+The same interleavings are replayed through :class:`FakeEngine` (the
+real ``_PagedEngine`` state machine) to pin the stream-level contract:
+prefix sharing changes which blocks are allocated, never which tokens
+come out (every stream equals the ``fake_stream`` oracle).
+"""
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 runs green without hypothesis
+    from _propcheck import given, settings, st
+
+from repro.configs import get_smoke_config
+from repro.models.kvcache import PagedCache
+from repro.serving.engine import Request
+from repro.serving.testbed import FakeEngine, fake_stream
+
+BS = 8
+# overlapping-prefix prompt families: two distinct shared stems (one and
+# two full blocks) plus divergent tails, so random admissions hit each
+# other's indexed blocks at varying depths
+_STEM1 = [5, 6, 7, 2, 9, 3, 8, 1]
+_STEM2 = _STEM1 + [4, 4, 2, 2, 6, 6, 1, 1]
+_TAILS = [[], [3], [9, 9], [12, 1, 7], [2, 8, 5, 5]]
+
+
+def _prompt(rng) -> list:
+    stem = (_STEM1, _STEM2, [])[int(rng.integers(3))]
+    tail = _TAILS[int(rng.integers(len(_TAILS)))]
+    if not stem and not tail:
+        tail = [int(rng.integers(1, 900))]
+    return list(stem) + list(tail)
+
+
+def _drive_ledger(seed: int, num_blocks: int, n_ops: int):
+    """One randomized ledger session.  Draws ops against a sharing-
+    enabled cache, running ``check()`` after every mutation; returns
+    the cache for the drain assertion."""
+    rng = np.random.default_rng(seed)
+    cfg = get_smoke_config("smollm-360m")
+    pc = PagedCache(cfg, max_rows=4, max_len=64, block_size=BS,
+                    num_blocks=num_blocks, share_prefixes=True)
+    assert pc.share_prefixes
+    pos = [0] * pc.max_rows   # simulated decode position per live row
+    live = [False] * pc.max_rows
+    for _ in range(n_ops):
+        op = int(rng.integers(4))
+        row = int(rng.integers(pc.max_rows))
+        if op == 0 and not live[row]:          # admit
+            toks = _prompt(rng)
+            if pc.admit(row, len(toks) + 1, tokens=toks):
+                live[row] = True
+                pos[row] = len(toks)
+        elif op == 1 and live[row]:            # grow one decode step
+            if pos[row] < pc.max_len - 1 and pc.ensure(row, pos[row]):
+                pos[row] += 1
+        elif op == 2 and live[row]:            # write INSIDE the held
+            # span — lands on a shared block often, forcing COW (real
+            # engines never do this; the ledger must survive it anyway)
+            pc.ensure(row, int(rng.integers(0, max(1, pos[row]))))
+        elif op == 3 and live[row]:            # release / preempt
+            pc.release(row)
+            live[row] = False
+            pos[row] = 0
+        pc.check()
+    return pc, live
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       num_blocks=st.integers(6, 16),
+       n_ops=st.integers(10, 60))
+def test_ledger_random_interleavings_hold_invariants(seed, num_blocks,
+                                                     n_ops):
+    pc, live = _drive_ledger(seed, num_blocks, n_ops)
+    # partition + refcount accounting held after every op (check()
+    # in the loop); now drain and require the pool whole again
+    for row in range(pc.max_rows):
+        if live[row]:
+            pc.release(row)
+        pc.check()
+    assert pc.used_blocks == 0
+    assert pc.free_blocks == num_blocks
+    assert not pc._prefix_index and not pc._block_key
+    assert not pc.pending_copies or pc.take_pending_copies()
+    # double-free guard: a drained row's second release is a no-op,
+    # but a forged still-referenced block must trip the RuntimeError
+    pc.release(0)
+    assert pc.admit(0, BS, tokens=_STEM1)
+    blk = pc._held["attn"][0][0]
+    pc.release(0)
+    pc._held["attn"][0].append(blk)
+    try:
+        pc.release(0)
+    except RuntimeError:
+        pc._held["attn"][0].clear()
+    else:  # pragma: no cover - the guard must fire
+        raise AssertionError("double free not caught")
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       num_blocks=st.integers(5, 10),
+       decode_steps=st.sampled_from([1, 4, 8]))
+def test_engine_random_shared_traces_match_oracle(seed, num_blocks,
+                                                  decode_steps):
+    """The real scheduler over random overlapping-prefix traces:
+    streams equal the recurrence oracle token-for-token (sharing and
+    the COW/preemption churn it adds are invisible), and the drained
+    ledger returns every block."""
+    rng = np.random.default_rng(seed)
+    eng = FakeEngine(max_rows=3, max_len=64, block_size=BS,
+                     num_blocks=num_blocks, decode_steps=decode_steps,
+                     prefix_sharing=True)
+    reqs = []
+    for _ in range(int(rng.integers(4, 10))):
+        r = Request(id=len(reqs), prompt=_prompt(rng),
+                    max_new_tokens=int(rng.integers(1, 12)))
+        reqs.append(r)
+        eng.submit(r)
+    done = eng.run()
+    eng.pc.check()
+    assert len(done) == len(reqs)
+    for r in done:
+        assert r.out_tokens == fake_stream(r.prompt, r.max_new_tokens), \
+            f"request {r.id} diverged from the oracle"
+    assert eng.pc.used_blocks == 0
+    assert eng.pc.free_blocks == num_blocks

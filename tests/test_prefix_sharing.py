@@ -1,0 +1,296 @@
+"""Prefix sharing: refcount/COW ledger semantics + engine behavior.
+
+Unit-level lockdown of the shared-ownership model (SERVING.md §Prefix
+sharing): hand-traced refcount lifecycles (hit-then-release,
+hit-then-preempt), copy-on-write isolation, the preemption regression
+(a victim's shared blocks must NOT return to the free list while a
+survivor references them), architecture gating, and the engine-side
+prefill skip + effective-capacity coupling.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.kvcache import PagedCache
+from repro.serving.engine import Request
+from repro.serving.scheduler import CapacityView, make_policy
+from repro.serving.testbed import FakeEngine, fake_stream
+
+BS = 8
+PRE = [5, 6, 7, 2, 9, 3, 8, 1]          # exactly one full block
+
+
+def _cache(num_blocks=8, max_rows=3, **kw):
+    cfg = get_smoke_config("smollm-360m")
+    return PagedCache(cfg, max_rows=max_rows, max_len=32, block_size=BS,
+                      num_blocks=num_blocks, share_prefixes=True, **kw)
+
+
+# ----------------------------------------------------------------------
+# ledger: match, refcounts, COW
+# ----------------------------------------------------------------------
+def test_admit_maps_shared_prefix_with_refcount_bump():
+    pc = _cache()
+    t0, t1 = PRE + [4, 2], PRE + [9, 9, 1]
+    assert pc.admit(0, len(t0) + 1, tokens=t0)
+    assert pc.hit_tokens(0) == 0            # first arrival: cold
+    assert pc.probe_hit(t1) == 1            # index now holds PRE's block
+    assert pc.admit(1, len(t1) + 1, tokens=t1)
+    assert pc.hit_tokens(1) == BS           # one full block skipped
+    shared = int(pc.tables[0, 0])
+    assert int(pc.tables[1, 0]) == shared
+    assert pc._ref[shared] == 2
+    assert pc.blocks_saved == 1 and pc.n_prefix_hits == 1
+    assert pc.prefix_tokens_hit == BS
+    pc.check()
+
+
+def test_partial_block_prefix_never_matches():
+    """Only *full* blocks are content-addressed: a 7-token common
+    prefix (one short of the block) shares nothing."""
+    pc = _cache()
+    t0, t1 = PRE[:7] + [1, 1], PRE[:7] + [2, 2]
+    assert pc.admit(0, len(t0) + 1, tokens=t0)
+    assert pc.probe_hit(t1) == 0
+    assert pc.admit(1, len(t1) + 1, tokens=t1)
+    assert pc.hit_tokens(1) == 0
+    assert int(pc.tables[0, 0]) != int(pc.tables[1, 0])
+    pc.check()
+
+
+def test_cow_write_isolates_the_writer():
+    """A write into a refcount>1 block moves the writer to a fresh
+    block (queued as a device pool copy) and leaves the other owner's
+    mapping untouched."""
+    pc = _cache()
+    t0, t1 = PRE + [4, 2], PRE + [9, 9, 1]
+    pc.admit(0, len(t0) + 1, tokens=t0)
+    pc.admit(1, len(t1) + 1, tokens=t1)
+    shared = int(pc.tables[1, 0])
+    assert pc.ensure(1, 3)                  # write inside the shared block
+    fresh = int(pc.tables[1, 0])
+    assert fresh != shared
+    assert int(pc.tables[0, 0]) == shared   # row 0 untouched
+    assert pc._ref[shared] == 1 and pc._ref[fresh] == 1
+    assert pc.take_pending_copies() == [(shared, fresh)]
+    assert pc.take_pending_copies() == []   # drained exactly once
+    assert pc.n_cow_copies == 1
+    pc.check()
+
+
+def test_cow_pool_exhaustion_returns_false_and_keeps_sharing():
+    """COW with an empty free list reports failure (the engine's grow
+    loop preempts) without corrupting the shared mapping."""
+    pc = _cache(num_blocks=3)
+    t0, t1 = PRE + [4, 2], PRE + [9, 9, 1]
+    pc.admit(0, len(t0) + 1, tokens=t0)     # 2 blocks
+    pc.admit(1, len(t1) + 1, tokens=t1)     # +1 fresh, pool now empty
+    assert pc.free_blocks == 0
+    shared = int(pc.tables[1, 0])
+    assert not pc.ensure(1, 3)              # COW needs a block: none
+    assert int(pc.tables[1, 0]) == shared   # mapping unchanged
+    assert pc._ref[shared] == 2
+    assert pc.pending_copies == []
+    pc.check()
+
+
+def test_exclusive_indexed_block_deindexes_on_write():
+    """A write into a block the row owns exclusively but that is still
+    indexed must drop the index entry — the content is about to
+    diverge from the indexed token prefix."""
+    pc = _cache()
+    t0 = PRE + [4, 2]
+    pc.admit(0, len(t0) + 1, tokens=t0)
+    blk = int(pc.tables[0, 0])
+    assert blk in pc._block_key
+    assert pc.ensure(0, 3)                  # write inside own block
+    assert blk not in pc._block_key
+    assert pc.probe_hit(PRE + [1]) == 0     # no stale match possible
+    pc.check()
+
+
+# ----------------------------------------------------------------------
+# hand-traced refcount lifecycles
+# ----------------------------------------------------------------------
+def test_lifecycle_hit_then_release():
+    """Owner releases first, then the sharer: the block survives the
+    first release (ref 2 -> 1), leaves the index and returns to the
+    free list only on the last (ref 1 -> 0)."""
+    pc = _cache()
+    t0, t1 = PRE + [4, 2], PRE + [9, 9, 1]
+    pc.admit(0, len(t0) + 1, tokens=t0)
+    pc.admit(1, len(t1) + 1, tokens=t1)
+    shared = int(pc.tables[0, 0])
+    pc.release(0)                           # original owner done
+    pc.check()
+    assert pc._ref[shared] == 1
+    assert shared not in pc._free["attn"]
+    assert shared in pc._block_key          # still matchable
+    assert pc.probe_hit(PRE + [7]) == 1
+    pc.release(1)                           # last owner done
+    pc.check()
+    assert pc._ref[shared] == 0
+    assert shared in pc._free["attn"]
+    assert shared not in pc._block_key
+    assert pc.used_blocks == 0
+
+
+def test_lifecycle_hit_then_preempt():
+    """Preempting the *sharer* (release via the same refcount path)
+    keeps the block resident and indexed for its re-admission, which
+    matches again without allocating."""
+    pc = _cache()
+    t0, t1 = PRE + [4, 2], PRE + [9, 9, 1]
+    pc.admit(0, len(t0) + 1, tokens=t0)
+    pc.admit(1, len(t1) + 1, tokens=t1)
+    shared = int(pc.tables[0, 0])
+    free0 = pc.free_blocks
+    pc.release(1)                           # preemption frees row 1
+    pc.check()
+    assert pc._ref[shared] == 1             # row 0 still owns it
+    assert shared not in pc._free["attn"]
+    assert pc.probe_hit(t1) == 1            # resume will re-match
+    assert pc.admit(1, len(t1) + 1, tokens=t1)
+    assert int(pc.tables[1, 0]) == shared
+    assert pc._ref[shared] == 2
+    assert pc.free_blocks == free0          # round-trip leaked nothing
+    pc.check()
+
+
+# ----------------------------------------------------------------------
+# regression: preemption must not free still-referenced blocks
+# ----------------------------------------------------------------------
+def test_preempt_victim_with_shared_blocks_keeps_them_resident():
+    """THE regression this PR's refcounted ``release`` exists for: the
+    pre-sharing ledger returned every held block to the free list on
+    preemption — with sharing, that hands a surviving request's prefix
+    block to the next allocation.  Drive the real ``_PagedEngine``
+    preemption path and require the survivor's mapping intact."""
+    eng = FakeEngine(max_rows=2, max_len=32, block_size=BS, num_blocks=6,
+                     prefill_chunk=4, prefix_sharing=True)
+    r0 = Request(id=0, prompt=PRE + [4, 2], max_new_tokens=8)
+    r1 = Request(id=1, prompt=PRE + [9, 9, 1], max_new_tokens=8)
+    eng.submit(r0)
+    eng.submit(r1)
+    eng.step()                              # both admitted, prefix shared
+    row0 = eng.rows.index(r0)
+    row1 = eng.rows.index(r1)
+    shared = int(eng.pc.tables[row0, 0])
+    assert int(eng.pc.tables[row1, 0]) == shared
+    assert eng.pc._ref[shared] == 2
+    eng._preempt(row1)                      # victim holds shared blocks
+    assert eng.n_preemptions == 1
+    assert eng.pc._ref[shared] == 1
+    assert shared not in eng.pc._free["attn"], \
+        "preemption freed a block the survivor still references"
+    assert int(eng.pc.tables[row0, 0]) == shared
+    eng.pc.check()
+    # ... and the drained session still ends whole + oracle-exact
+    done = {r.id: r.out_tokens for r in eng.run()}
+    assert done[0] == fake_stream(r0.prompt, 8)
+    assert done[1] == fake_stream(r1.prompt, 8)
+    eng.pc.check()
+    assert eng.pc.used_blocks == 0
+
+
+# ----------------------------------------------------------------------
+# engine: divergence isolation, prefill skip, capacity coupling
+# ----------------------------------------------------------------------
+def test_divergent_streams_never_cross_contaminate():
+    """Two requests sharing a prefix then diverging: each stream equals
+    its own oracle continuation — neither observes the other's
+    writes (the testbed recurrence is position+token-exact, so any
+    table/COW mixup changes tokens)."""
+    for k in (1, 8):
+        eng = FakeEngine(max_rows=2, max_len=64, block_size=BS,
+                         num_blocks=10, prefill_chunk=4, decode_steps=k,
+                         prefix_sharing=True)
+        p0, p1 = PRE + [4, 2], PRE + [9, 9, 1]
+        eng.submit(Request(id=0, prompt=p0, max_new_tokens=10))
+        eng.submit(Request(id=1, prompt=p1, max_new_tokens=10))
+        done = {r.id: r.out_tokens for r in eng.run()}
+        assert eng.pc.n_prefix_hits == 1
+        assert done[0] == fake_stream(p0, 10)
+        assert done[1] == fake_stream(p1, 10)
+        eng.pc.check()
+        assert eng.pc.used_blocks == 0
+
+
+def test_cache_hit_admission_prefills_only_the_tail():
+    """The skipped span never costs a prefill dispatch:
+    ``engine.prefill_tokens`` (the t_first/admission budget) drops by
+    exactly the matched span."""
+    def run(sharing):
+        eng = FakeEngine(max_rows=2, max_len=32, block_size=BS,
+                         num_blocks=8, prefill_chunk=4,
+                         prefix_sharing=sharing)
+        for i, p in enumerate((PRE + [4, 2], PRE + [9, 9, 1])):
+            eng.submit(Request(id=i, prompt=list(p), max_new_tokens=4))
+        done = {r.id: r.out_tokens for r in eng.run()}
+        return eng, done
+
+    on, out_on = run(True)
+    off, out_off = run(False)
+    assert out_on == out_off
+    assert on.pc.prefix_tokens_hit == BS
+    assert on.prefill_tokens == off.prefill_tokens - BS
+
+
+def test_probe_hit_shrinks_ec_admission_demand():
+    """The effective-capacity admission test models a prefix hit as
+    reduced service demand: with the shared span discounted the
+    deficit vanishes and the request ADMITs instead of DEFERring."""
+    policy = make_policy("edf_ec")
+    req = Request(id=0, prompt=PRE + [4, 2], max_new_tokens=4,
+                  qos="interactive")
+    req.t_submit = 0
+    toks = (req.prompt + req.out_tokens)[:-1]
+    need = -(-len(req.prompt) // BS)        # 2 blocks demanded
+    base = dict(free_tokens=BS, total_tokens=8 * BS, granule=BS)
+    verdict_cold, _ = policy.admission_test(
+        req, 1, CapacityView(**base))
+    verdict_hit, _ = policy.admission_test(
+        req, 1, CapacityView(**base, shared_blocks=lambda t: 1))
+    assert need == 2
+    assert verdict_cold == "defer"          # 2 needed, 1 free
+    assert verdict_hit == "admit"           # hit discounts the stem
+    # the engine wires the real probe into its view
+    eng = FakeEngine(num_blocks=8, prefix_sharing=True)
+    view = eng._capacity_view()
+    assert view.shared_blocks == eng.pc.probe_hit  # the real probe
+    assert view.shared_blocks(toks) == 0    # cold index
+
+
+# ----------------------------------------------------------------------
+# gating + disabled path
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("arch,supported", [
+    ("smollm-360m", True), ("qwen2-72b", True),
+    ("mixtral-8x7b", False),      # SWA ring is per-request state
+    ("gemma3-12b", False),        # SWA
+    ("falcon-mamba-7b", False),   # SSM state
+    ("zamba2-7b", False),         # SSM hybrid
+])
+def test_sharing_gated_to_pure_attention_archs(arch, supported):
+    pc = PagedCache(get_smoke_config(arch), max_rows=2, max_len=32,
+                    block_size=BS, share_prefixes=True)
+    assert pc.sharing_supported == supported
+    assert pc.share_prefixes == supported
+
+
+def test_sharing_off_is_the_exclusive_ledger():
+    """``share_prefixes=False`` (or an unsupported arch): admission
+    with tokens never matches, refcounts stay 0/1, and behavior is the
+    historical exclusive-ownership ledger bit-for-bit."""
+    cfg = get_smoke_config("smollm-360m")
+    pc = PagedCache(cfg, max_rows=3, max_len=32, block_size=BS,
+                    num_blocks=8, share_prefixes=False)
+    t0, t1 = PRE + [4, 2], PRE + [9, 9, 1]
+    assert pc.admit(0, len(t0) + 1, tokens=t0)
+    assert pc.probe_hit(t1) == 0
+    assert pc.admit(1, len(t1) + 1, tokens=t1)
+    assert pc.hit_tokens(1) == 0
+    assert int(pc.tables[0, 0]) != int(pc.tables[1, 0])
+    assert pc.n_prefix_hits == pc.blocks_saved == 0
+    assert not pc._prefix_index
+    pc.check()
