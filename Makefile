@@ -1,7 +1,20 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke simbench engine-bench goodput-bench docs ci
+.PHONY: lint typecheck test smoke simbench engine-bench goodput-bench docs ci
+
+# invariant linter (tools/reprolint/): AST rules for the serving
+# stack's contracts — jit donation, host-sync budget, seeded RNG,
+# jax-free host layer, step-counter clock, ledger privacy.  See
+# TOOLING.md for the rule catalogue and suppression syntax; --json
+# for machine-readable output
+lint:
+	$(PY) -m tools.reprolint src benchmarks tests
+
+# typecheck gate over the curated host-layer modules (pyright, else
+# mypy, else a syntax-only fallback — see tools/typecheck.py)
+typecheck:
+	$(PY) tools/typecheck.py
 
 # tier-1: must collect and pass with or without hypothesis installed
 test:
@@ -38,4 +51,4 @@ docs:
 	$(PY) tools/check_docs.py
 	$(PY) examples/quickstart.py
 
-ci: test smoke simbench docs
+ci: lint typecheck test smoke simbench docs

@@ -36,6 +36,9 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                                   interpret=interpret)
 
 
+# reprolint: disable-next=jit-donation -- read-only KV view: returns
+# attention output, not an updated cache; donating would invalidate
+# the caller's live cache buffers (engines donate at their own jits)
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def decode_attention(q, k_cache, v_cache, pos, *, use_pallas: bool = True,
                      interpret: bool | None = None):

@@ -701,6 +701,8 @@ class ServingEngine(_SlotEngine):
             self.params, self.caches,
             {"token": jnp.asarray(tokens), "pos": jnp.asarray(pos),
              "budget": jnp.asarray(budgets)})
+        # reprolint: disable-next=host-sync -- the ONE deliberate sync
+        # per macro-step (counted in n_host_syncs; <= 1/K per token)
         return np.asarray(toks)
 
 
@@ -764,4 +766,6 @@ class PagedServingEngine(_PagedEngine):
             {"token": jnp.asarray(tokens), "pos": jnp.asarray(pos),
              "budget": jnp.asarray(budgets)},
             self.pc.meta())
+        # reprolint: disable-next=host-sync -- the ONE deliberate sync
+        # per macro-step (counted in n_host_syncs; <= 1/K per token)
         return np.asarray(toks)

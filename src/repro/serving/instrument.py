@@ -38,15 +38,18 @@ class DispatchCounter(dict):
     callables are the engines' compiled programs).
     """
 
-    def __init__(self, base: dict, counts: Counter, prefix: str = ""):
+    def __init__(self, base: dict, counts: Counter, prefix: str = "",
+                 raw: dict = None):
         super().__init__()
         self.counts = counts
         self.prefix = prefix
+        self.raw = {} if raw is None else raw
         for name, fn in base.items():
             self[name] = fn
 
     def __setitem__(self, name, fn):
         key = self.prefix + name
+        self.raw[key] = fn
 
         def counted(*args, _fn=fn, _key=key, **kw):
             self.counts[_key] += 1
@@ -61,6 +64,7 @@ class EngineCounts:
     def __init__(self, engine):
         self.engine = engine
         self.counts: Counter = Counter()
+        self.raw: dict = {}  # jit name -> underlying (unwrapped) callable
 
     @property
     def decode_dispatches(self) -> int:
@@ -82,13 +86,27 @@ class EngineCounts:
         n = getattr(self, f"{kind}_dispatches")
         return n / max(self.engine.tokens_generated, 1)
 
+    def compiled_programs(self) -> int:
+        """Total programs XLA has compiled for the engine's jits: the
+        sum of jax's per-callable compilation-cache sizes over every
+        (unwrapped) ``_jits`` entry.  Dispatch counts say how often the
+        hot loop *calls* its programs; this says how many distinct
+        programs those calls traced — the number that silently explodes
+        when a shape or a captured Python value stops being stable.
+        Entries without a compilation cache (e.g. a FakeEngine's plain
+        callables, or an unexpectedly old jax) contribute zero, so a
+        result of 0 means 'nothing measurable', not 'no compiles'."""
+        return sum(fn._cache_size() for fn in self.raw.values()
+                   if hasattr(fn, "_cache_size"))
+
 
 def instrument(engine) -> EngineCounts:
     """Wrap ``engine``'s jitted callables (and its pipeline stages', if
     any) with dispatch counters.  Counting starts now: tallies cover
     only calls made after instrumentation."""
     ec = EngineCounts(engine)
-    engine._jits = DispatchCounter(engine._jits, ec.counts)
+    engine._jits = DispatchCounter(engine._jits, ec.counts, raw=ec.raw)
     for i, st in enumerate(getattr(engine, "stages", [])):
-        st._jits = DispatchCounter(st._jits, ec.counts, prefix=f"s{i}.")
+        st._jits = DispatchCounter(st._jits, ec.counts, prefix=f"s{i}.",
+                                   raw=ec.raw)
     return ec

@@ -193,7 +193,9 @@ class _CoreStage:
                     caches, segs, src, dst, has_swa=has_swa),
                 donate_argnums=(0,))
 
-        self._jits["decode"] = jax.jit(_decode)  # profile-only: no donation
+        # reprolint: disable-next=jit-donation -- profile-only jit:
+        # profile() must not consume the live serving caches (PR 5)
+        self._jits["decode"] = jax.jit(_decode)
         self._jits["prefill"] = jax.jit(_prefill, donate_argnums=(1,))
 
     def prefill(self, x, pos0, slot, pmeta=None):
@@ -350,6 +352,8 @@ class _NetShimMixin:
         for st, nc in zip(self.stages, new_caches):
             st.caches = nc
         self._account_macro(budgets, k)
+        # reprolint: disable-next=host-sync -- the ONE deliberate sync
+        # per macro-step (counted in n_host_syncs; <= 1/K per token)
         return np.asarray(toks)
 
     def _account_macro(self, budgets: np.ndarray, k: int):

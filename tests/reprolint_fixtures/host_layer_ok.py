@@ -1,0 +1,11 @@
+"""Clean: a pure-numpy scheduler module."""
+from typing import List, Optional
+
+import numpy as np
+
+
+def next_admission(queue: List, now: int) -> Optional[int]:
+    if not queue:
+        return None
+    slacks = np.asarray([q.deadline - now for q in queue])
+    return int(np.argmin(slacks))

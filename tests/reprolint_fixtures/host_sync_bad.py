@@ -1,0 +1,27 @@
+"""Violating: host syncs inside traced code and the macro-step path."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def traced(x):
+    v = x.item()           # EXPECT: host-sync
+    y = np.asarray(x)      # EXPECT: host-sync
+    n = int(x)             # EXPECT: host-sync
+    jax.device_get(x)      # EXPECT: host-sync
+    return v, y, n
+
+
+def scan_caller(xs):
+    def body(carry, x):
+        carry = carry + float(x)  # EXPECT: host-sync
+        return carry, x
+    return jax.lax.scan(body, 0.0, xs)
+
+
+class Engine:
+    def _forward_steps(self, tokens):
+        toks = self._jits["decode"](tokens)
+        toks.block_until_ready()   # EXPECT: host-sync
+        extra = toks.tolist()      # EXPECT: host-sync
+        return np.asarray(toks), extra  # EXPECT: host-sync

@@ -1,0 +1,31 @@
+"""Clean: static casts in traced code; host casts outside hot paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def traced(x):
+    k = int(x.shape[0])       # shape metadata: resolved at trace time
+    m = float(1.5)            # literal
+    j = int(len([1, 2]))      # len() is static
+    return x * k * m * j
+
+
+def body(carry, x):
+    return carry + jnp.sum(x), x   # pure device math in the scan body
+
+
+def outer(xs):
+    return jax.lax.scan(body, 0.0, xs)
+
+
+def host_helper(a):
+    # plain host code: casts and np.asarray are not syncs here
+    return int(a.max()) + float(a.min()), np.asarray(a)
+
+
+class Engine:
+    def _prefill_row(self, toks):
+        # admission path, not the macro-step hot loop
+        return np.asarray(toks)

@@ -1,0 +1,20 @@
+"""Violating: cache-carrying jits that do not donate."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("k",))  # EXPECT: jit-donation
+def decode(params, caches, batch, *, k):
+    return caches
+
+
+def _reset(caches, slot):
+    return caches
+
+
+reset = jax.jit(_reset)  # EXPECT: jit-donation
+
+cow = jax.jit(lambda caches, src: caches)  # EXPECT: jit-donation
+
+opt = jax.jit(lambda opt_state, grads: opt_state)  # EXPECT: jit-donation

@@ -1,0 +1,19 @@
+"""Clean: donation declared, or no cache-carrying parameters."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, donate_argnums=(1,), static_argnames=("k",))
+def decode(params, caches, batch, *, k):
+    return caches
+
+
+def _reset(caches, slot):
+    return caches
+
+
+reset = jax.jit(_reset, donate_argnums=(0,))
+named = jax.jit(_reset, donate_argnames=("caches",))
+plain = jax.jit(lambda x, y: x + y)   # no cache-named parameters
+wrapped = jax.jit(some_imported_fn)   # noqa: F821 - not resolvable, skipped

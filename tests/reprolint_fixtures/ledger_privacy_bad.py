@@ -1,0 +1,20 @@
+"""Violating: private PagedCache state poked from outside the ledger."""
+from repro.models.kvcache import PagedCache
+
+
+def poke(cfg):
+    pc = PagedCache(cfg, max_rows=1, max_len=8, block_size=4)
+    pc._free["attn"].append(3)       # EXPECT: ledger-privacy
+    n = len(pc._held["attn"][0])     # EXPECT: ledger-privacy
+    return n
+
+
+class Engine:
+    def grow(self):
+        return self.pc._ref[0]       # EXPECT: ledger-privacy
+
+
+def tracked(cfg):
+    store = PagedCache(cfg)
+    store._version += 1              # EXPECT: ledger-privacy
+    return store

@@ -1,0 +1,20 @@
+"""Clean: the public ledger API, and private fields that are not
+PagedCache's."""
+from repro.models.kvcache import PagedCache
+
+
+def use(cfg):
+    pc = PagedCache(cfg, max_rows=1, max_len=8, block_size=4)
+    if pc.can_admit(8):
+        pc.admit(0, 8)
+    pc.ensure(0, 7)
+    pc.release(0)
+    pc.check()
+    return pc.free_blocks, pc.num_blocks
+
+
+class Engine:
+    def ok(self):
+        self._jits = {}              # the engine's own private state
+        self._admit_order.append(1)  # not the ledger's
+        return self.pc.probe_hit     # public ledger API

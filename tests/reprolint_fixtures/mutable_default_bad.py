@@ -1,0 +1,20 @@
+"""Violating: shared-mutable defaults (arguments and dataclass
+fields)."""
+from dataclasses import dataclass
+from typing import Dict, List
+
+
+def admit(req, queue=[]):             # EXPECT: mutable-default
+    queue.append(req)
+    return queue
+
+
+def route(table={},                   # EXPECT: mutable-default
+          *, hops=set()):             # EXPECT: mutable-default
+    return table, hops
+
+
+@dataclass
+class Req:
+    out_tokens: List[int] = []        # EXPECT: mutable-default
+    meta: Dict[str, int] = dict()     # EXPECT: mutable-default

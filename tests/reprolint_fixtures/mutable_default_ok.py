@@ -1,0 +1,24 @@
+"""Clean: None/tuple defaults, default_factory fields, non-dataclass
+class registries."""
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+def admit(req, queue=None):
+    queue = [] if queue is None else queue
+    queue.append(req)
+    return queue
+
+
+def windowed(sizes=(1, 2, 4)):        # tuples are immutable
+    return sizes
+
+
+@dataclass
+class Req:
+    out_tokens: List[int] = field(default_factory=list)
+    note: Optional[str] = None
+
+
+class Plain:
+    registry = {}   # not a dataclass: a class-level registry is fine

@@ -1,0 +1,13 @@
+"""Violating: global-stream RNG draws and salted hash() seeding."""
+import random
+
+import numpy as np
+
+
+def draw(n):
+    a = np.random.rand(n)         # EXPECT: seeded-rng
+    np.random.seed(0)             # EXPECT: seeded-rng
+    b = random.random()           # EXPECT: seeded-rng
+    random.shuffle([1, 2, 3])     # EXPECT: seeded-rng
+    s = hash("scenario-name")     # EXPECT: seeded-rng
+    return a, b, s

@@ -1,0 +1,24 @@
+"""Clean: explicit injected streams, crc32 folding, shadowed names."""
+import zlib
+
+import numpy as np
+
+
+def draw(n, seed):
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 7]))
+    folded = zlib.crc32("scenario".encode())
+    return rng.normal(size=n), folded
+
+
+def with_generator(rng: np.random.Generator):
+    return rng.integers(0, 10)
+
+
+def local_hash(hash):
+    # parameter shadows the builtin: not a seeding hazard
+    return hash("x")
+
+
+class Key:
+    def __hash__(self):
+        return 7

@@ -1,0 +1,12 @@
+"""Violating: wall-clock reads inside engine step logic."""
+import time
+from time import perf_counter
+
+
+class Engine:
+    def step(self):
+        t0 = time.time()             # EXPECT: step-clock
+        t1 = time.perf_counter()     # EXPECT: step-clock
+        t2 = perf_counter()          # EXPECT: step-clock
+        t3 = time.monotonic()        # EXPECT: step-clock
+        return t0, t1, t2, t3

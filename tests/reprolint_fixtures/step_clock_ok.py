@@ -1,0 +1,13 @@
+"""Clean: the step counter is the engine clock."""
+
+
+class Engine:
+    def __init__(self):
+        self.t = 0
+
+    def step(self):
+        self.t += 1            # one step() == one decode iteration
+        return self.t
+
+    def stamp(self, req):
+        req.t_admit = self.t   # stamps are step-counter units

@@ -1,0 +1,12 @@
+"""Fixture: malformed suppressions the framework must reject."""
+
+
+def admit(req, queue=[]):  # reprolint: disable=mutable-default
+    return queue
+
+
+def route(table={}):  # reprolint: disable=no-such-rule -- typo'd name
+    return table
+
+
+x = 1  # reprolint: disable=host-sync -- nothing here to suppress

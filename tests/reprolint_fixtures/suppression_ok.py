@@ -1,0 +1,11 @@
+"""Fixture: correctly-suppressed violations (reasons given)."""
+
+
+def admit(req, queue=[]):  # reprolint: disable=mutable-default -- fixture
+    return queue
+
+
+# reprolint: disable-next=mutable-default -- fixture: disable-next form,
+# with the reason wrapping onto a continuation comment line
+def route(table={}):
+    return table

@@ -1,0 +1,22 @@
+"""Violating: Python control flow on traced jnp values."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def f(x):
+    if jnp.any(x > 0):            # EXPECT: traced-truthiness
+        return x
+    m = jnp.max(x)
+    while m > 0:                  # EXPECT: traced-truthiness
+        m = m - 1
+    return m
+
+
+def outer(xs):
+    def body(carry, x):
+        s = jnp.sum(x)
+        if s > 0:                 # EXPECT: traced-truthiness
+            carry = carry + 1
+        return carry, x
+    return jax.lax.scan(body, 0, xs)

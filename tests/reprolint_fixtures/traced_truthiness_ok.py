@@ -1,0 +1,21 @@
+"""Clean: static branching in traced code; device branching done
+right; host code untouched."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def f(x, *, use_fast=True, paged=None):
+    if paged is None:              # identity test: static config
+        x = x + 1
+    if use_fast:                   # plain flag parameter
+        x = x * 2
+    if x.shape[0] > 4:             # shape metadata: trace-time static
+        x = x[:4]
+    return jnp.where(x > 0, x, 0)  # data-dependent branch, on device
+
+
+def host(x):
+    if jnp.any(x > 0):             # not traced: host-side code may branch
+        return 1
+    return 0

@@ -55,6 +55,42 @@ def test_dispatches_per_token_bound_paged(k):
     assert eng.pc.n_meta_uploads <= 32 // 8 + 2
 
 
+# ----------------------------------------------------------------------
+# compile accounting: program count must be a function of the *shape
+# vocabulary* (chunk/macro sizes), never of how many requests ran
+# ----------------------------------------------------------------------
+def test_compile_count_stable_across_traces():
+    """Re-tracing is the quiet way to lose the macro-step win: a jit
+    keyed on a per-request Python value (or a drifting shape) recompiles
+    every trace and no parity test notices.  Pin the program budget
+    across a two-trace run: the second, identically-shaped trace must
+    add ZERO compiled programs, and a third request needing one new
+    power-of-two tail macro must add exactly one."""
+    cfg = get_smoke_config("smollm-360m")
+    eng = ServingEngine(cfg, max_batch=2, cache_len=64, prefill_chunk=4,
+                        decode_steps=8)
+    counts = instrument(eng)
+
+    _drain(eng, list(range(1, 9)), 32)          # trace 1
+    c1 = counts.compiled_programs()
+    if c1 == 0:
+        pytest.skip("this jax build exposes no compilation-cache sizes")
+    # prompt[:-1] = 7 tokens -> prefill shapes {4, 2, 1}; decode runs
+    # only full K=8 macros -> {decode8}; plus the one reset program
+    assert c1 == 5
+    d1 = counts.total_dispatches
+
+    _drain(eng, list(range(3, 11)), 32)         # trace 2: same shapes
+    assert counts.total_dispatches > d1         # it really ran...
+    assert counts.compiled_programs() == c1     # ...compiling nothing
+
+    _drain(eng, [5, 6, 7, 8, 9], 12)            # trace 3: 12 = 8 + 4
+    # new tail macro (decode4) is the single new program: the 4-token
+    # prefill chunk and the reset re-use trace 1's shapes
+    assert counts.compiled_programs() == c1 + 1
+    assert "decode4" in eng._jits and "decode8" in eng._jits
+
+
 def test_max_macro_tokens_tracks_full_budget():
     """steady_syncs_per_token in benchmarks/engine_bench.py is
     1/max_macro_tokens; a full-budget scan must reach K tokens."""

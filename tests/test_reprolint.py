@@ -1,0 +1,202 @@
+"""Tests for tools/reprolint: per-rule fixtures, the suppression
+framework, the CLI contract, and a self-lint of the repo.
+
+Fixture protocol (tests/reprolint_fixtures/): every rule has a
+``<rule>_bad.py`` whose violating lines carry a trailing
+``# EXPECT: <rule>`` marker, and a ``<rule>_ok.py`` of near-miss
+patterns that must stay silent.  The harness runs the single rule
+directly over a FileContext, so path-scoped rules (host-layer-jax,
+step-clock, ledger-privacy) are exercised without faking paths.
+"""
+import json
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)
+
+from tools.reprolint import framework, lint_paths  # noqa: E402
+from tools.reprolint.context import FileContext  # noqa: E402
+from tools.reprolint.framework import lint_file  # noqa: E402
+
+FIXTURES = os.path.join(ROOT, "tests", "reprolint_fixtures")
+EXPECT_RE = re.compile(r"#\s*EXPECT:\s*([\w,\s-]+?)\s*$")
+
+RULES = framework.all_rules()
+
+FIXTURE_RULES = [
+    ("jit_donation", "jit-donation"),
+    ("host_sync", "host-sync"),
+    ("seeded_rng", "seeded-rng"),
+    ("host_layer", "host-layer-jax"),
+    ("step_clock", "step-clock"),
+    ("ledger_privacy", "ledger-privacy"),
+    ("traced_truthiness", "traced-truthiness"),
+    ("mutable_default", "mutable-default"),
+]
+
+
+def _context(path):
+    with open(path, "r", encoding="utf-8") as fh:
+        source = fh.read()
+    rel = os.path.relpath(path, ROOT).replace(os.sep, "/")
+    return FileContext(path, rel, source)
+
+
+def _run_rule(rule_name, path):
+    ctx = _context(path)
+    return {(f.line, f.rule) for f in RULES[rule_name]().check(ctx)}
+
+
+def _expected(path):
+    want = set()
+    with open(path, "r", encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, start=1):
+            m = EXPECT_RE.search(line)
+            if m:
+                for rule in m.group(1).split(","):
+                    want.add((lineno, rule.strip()))
+    return want
+
+
+@pytest.mark.parametrize("stem,rule", FIXTURE_RULES)
+def test_rule_fires_on_bad_fixture(stem, rule):
+    path = os.path.join(FIXTURES, f"{stem}_bad.py")
+    want = _expected(path)
+    assert want, f"{stem}_bad.py has no EXPECT markers"
+    got = _run_rule(rule, path)
+    assert got == want, (
+        f"{rule} on {stem}_bad.py: expected {sorted(want)}, got {sorted(got)}"
+    )
+
+
+@pytest.mark.parametrize("stem,rule", FIXTURE_RULES)
+def test_rule_silent_on_ok_fixture(stem, rule):
+    path = os.path.join(FIXTURES, f"{stem}_ok.py")
+    got = _run_rule(rule, path)
+    assert got == set(), (
+        f"{rule} over-fired on {stem}_ok.py: {sorted(got)}"
+    )
+
+
+def test_every_rule_has_fixtures():
+    covered = {rule for _, rule in FIXTURE_RULES}
+    assert covered == set(RULES), (
+        f"rules without fixtures: {sorted(set(RULES) - covered)}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Suppression framework
+# ---------------------------------------------------------------------------
+
+def test_reasoned_suppressions_apply():
+    path = os.path.join(FIXTURES, "suppression_ok.py")
+    findings = lint_file(path, ROOT)
+    assert findings, "fixture should produce (suppressed) findings"
+    assert all(f.suppressed for f in findings)
+    assert all(f.rule == "mutable-default" for f in findings)
+    assert all(f.suppress_reason for f in findings)
+    # one same-line disable, one disable-next spanning a comment block
+    assert len(findings) == 2
+
+
+def test_malformed_suppressions_are_reported():
+    path = os.path.join(FIXTURES, "suppression_bad.py")
+    findings = lint_file(path, ROOT)
+    by_rule = {}
+    for f in findings:
+        by_rule.setdefault(f.rule, []).append(f)
+
+    # line 4: reason missing -> the violation is suppressed, but the
+    # directive itself is flagged
+    bad = by_rule.get("bad-suppression", [])
+    assert any(f.line == 4 and "reason" in f.message for f in bad)
+    # line 8: unknown rule name in the directive
+    assert any(f.line == 8 and "no-such-rule" in f.message for f in bad)
+    # line 8's actual violation is NOT suppressed (wrong rule named)
+    mut = [f for f in by_rule.get("mutable-default", []) if not f.suppressed]
+    assert any(f.line == 8 for f in mut)
+    # line 12: directive that suppresses nothing
+    unused = by_rule.get("unused-suppression", [])
+    assert any(f.line == 12 for f in unused)
+
+
+# ---------------------------------------------------------------------------
+# Self-lint: the repo must be clean under its own linter
+# ---------------------------------------------------------------------------
+
+def test_repo_self_lint_is_clean():
+    findings = lint_paths(["src", "benchmarks", "tests"], ROOT)
+    unsuppressed = [f for f in findings if not f.suppressed]
+    assert unsuppressed == [], "\n".join(f.render() for f in unsuppressed)
+    # every deliberate suppression must carry a reason
+    assert all(f.suppress_reason for f in findings if f.suppressed)
+
+
+def test_fixtures_excluded_from_repo_lint():
+    findings = lint_paths(["tests"], ROOT)
+    assert not any("reprolint_fixtures" in f.path for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# CLI contract: exit codes and --json schema
+# ---------------------------------------------------------------------------
+
+def _cli(args, cwd=ROOT):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.reprolint", *args],
+        cwd=cwd, capture_output=True, text=True,
+    )
+
+
+def test_cli_exit_one_on_findings(tmp_path):
+    victim = tmp_path / "victim.py"
+    victim.write_text("def f(x=[]):\n    return x\n")
+    proc = _cli(["--root", str(tmp_path), "victim.py"])
+    assert proc.returncode == 1
+    assert "mutable-default" in proc.stdout
+
+
+def test_cli_exit_zero_and_json_on_clean(tmp_path):
+    clean = tmp_path / "clean.py"
+    clean.write_text("def f(x=None):\n    return x\n")
+    proc = _cli(["--json", "--root", str(tmp_path), "clean.py"])
+    assert proc.returncode == 0
+    payload = json.loads(proc.stdout)
+    assert payload["version"] == 1
+    assert payload["clean"] is True
+    assert payload["files"] == 1
+    assert payload["findings"] == []
+
+
+def test_cli_json_findings_schema(tmp_path):
+    victim = tmp_path / "victim.py"
+    victim.write_text("import numpy as np\nv = np.random.rand(3)\n")
+    proc = _cli(["--json", "--root", str(tmp_path), "victim.py"])
+    assert proc.returncode == 1
+    payload = json.loads(proc.stdout)
+    assert payload["clean"] is False
+    assert payload["counts"].get("seeded-rng") == 1
+    (finding,) = payload["findings"]
+    assert finding["rule"] == "seeded-rng"
+    assert finding["line"] == 2
+    assert finding["path"].endswith("victim.py")
+    assert finding["suppressed"] is False
+
+
+def test_cli_exit_two_on_missing_path():
+    proc = _cli(["no/such/dir"])
+    assert proc.returncode == 2
+
+
+def test_cli_list_rules_covers_catalogue():
+    proc = _cli(["--list-rules"])
+    assert proc.returncode == 0
+    for name in RULES:
+        assert name in proc.stdout

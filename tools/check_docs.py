@@ -8,7 +8,8 @@ Two layers of rot protection, both part of ``make ci`` (``make docs``):
    (``src/...``, ``tests/...``, ``benchmarks/...``, ``examples/...``,
    ``tools/...``) must exist.
 2. **File references, curated docs** — in the living documentation set
-   (README / ARCHITECTURE / EXPERIMENTS / SERVING), *any* backtick
+   (README / ARCHITECTURE / EXPERIMENTS / SERVING / TOOLING), *any*
+   backtick
    reference that looks like a source path — ``core/simulator.py``,
    ``repro/experiments/scenarios.py``, ``serving/engine.py::step`` —
    must point at a real file, tried relative to the repo root,
@@ -35,7 +36,8 @@ REL_PATH_RE = re.compile(
     r"`([\w][\w./-]*/[\w.-]+\.(?:py|md|json|txt|toml|cfg))(?:::[\w.]+)?`")
 SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
 # the curated documentation set held to the stricter file-reference bar
-CURATED = ("README.md", "ARCHITECTURE.md", "EXPERIMENTS.md", "SERVING.md")
+CURATED = ("README.md", "ARCHITECTURE.md", "EXPERIMENTS.md", "SERVING.md",
+           "TOOLING.md")
 REL_ROOTS = ("", "src", os.path.join("src", "repro"))
 
 

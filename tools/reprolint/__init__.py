@@ -1,0 +1,30 @@
+"""reprolint: AST-based invariant linter for the serving stack.
+
+The repo's load-bearing invariants — jit cache donation, the <= 1/K
+host-sync bound, SeedSequence-only randomness, the engine-step clock,
+the JAX-free scheduler/testbed layer, PagedCache ledger privacy —
+were enforced by convention and after-the-fact parity tests; every one
+of them has burned a review cycle (the PYTHONHASHSEED crc32 fix in
+PR 1, the donation-contract retrofit in PR 5, the masked-row host-sync
+subtlety).  reprolint machine-checks them at commit time:
+
+    python -m tools.reprolint src benchmarks tests
+    python -m tools.reprolint --json src      # machine-readable
+    python -m tools.reprolint --list-rules    # rule catalogue
+
+Each rule is a small module under ``tools/reprolint/rules/`` registered
+with the framework (``framework.register``); which rules run on which
+paths is declared in ``config.py``.  Deliberate violations are
+suppressed inline — a "why" is required, reasonless suppressions fail
+the run:
+
+    x = np.asarray(toks)  # reprolint: disable=host-sync -- the one
+                          # deliberate sync per macro-step
+
+TOOLING.md documents every rule, the invariant it encodes, and the PR
+that motivated it.  ``make lint`` wires the linter into ``make ci``.
+"""
+from tools.reprolint.framework import (Finding, Rule, all_rules,  # noqa: F401
+                                       lint_file, lint_paths, register)
+
+__version__ = "1.0"

@@ -1,0 +1,108 @@
+"""Command-line front end.
+
+    python -m tools.reprolint [paths...]      # default: src benchmarks tests
+    python -m tools.reprolint --json src      # machine-readable output
+    python -m tools.reprolint --show-suppressed src
+    python -m tools.reprolint --list-rules
+
+Exit codes: 0 = clean (suppressed findings allowed), 1 = unsuppressed
+findings (including bad/unused suppressions and parse errors),
+2 = usage error.  The ``--json`` document is stable for dashboards:
+
+    {"version": ..., "files": N, "clean": bool,
+     "counts": {"<rule>": n, ...},
+     "findings": [{"path", "line", "rule", "message",
+                   "suppressed", "suppress_reason"}, ...]}
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional
+
+from tools.reprolint import framework
+from tools.reprolint.framework import Finding
+
+DEFAULT_PATHS = ("src", "benchmarks", "tests")
+
+
+def repo_root() -> str:
+    return os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+
+def _list_rules() -> str:
+    lines = ["reprolint rules:"]
+    for name, cls in sorted(framework.all_rules().items()):
+        lines.append(f"  {name:<20} {cls.description}")
+        if cls.motivation:
+            lines.append(f"  {'':<20} why: {cls.motivation}")
+    lines.append("meta:")
+    for name, desc in sorted(framework.META_RULES.items()):
+        lines.append(f"  {name:<20} {desc}")
+    lines.append(
+        "\nsuppress inline (reason required):\n"
+        "  x = f()  # reprolint: disable=<rule>[,<rule>] -- <why>\n"
+        "  # reprolint: disable-next=<rule> -- <why>")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description="AST-based invariant linter for the serving stack "
+                    "(rule catalogue: --list-rules; docs: TOOLING.md)")
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                    help="files/directories to lint "
+                         "(default: src benchmarks tests)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable output on stdout")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="also print findings silenced by inline "
+                         "suppressions")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: the checkout containing "
+                         "this tool)")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        print(_list_rules())
+        return 0
+
+    root = os.path.abspath(args.root) if args.root else repo_root()
+    for p in args.paths:
+        full = p if os.path.isabs(p) else os.path.join(root, p)
+        if not os.path.exists(full):
+            print(f"reprolint: no such path: {p}", file=sys.stderr)
+            return 2
+
+    findings = framework.lint_paths(args.paths, root)
+    nfiles = len(framework.target_files(args.paths, root))
+    unsuppressed = [f for f in findings if not f.suppressed]
+    suppressed = [f for f in findings if f.suppressed]
+
+    if args.as_json:
+        counts: dict = {}
+        for f in unsuppressed:
+            counts[f.rule] = counts.get(f.rule, 0) + 1
+        print(json.dumps({
+            "version": 1,
+            "files": nfiles,
+            "clean": not unsuppressed,
+            "counts": counts,
+            "findings": [f.to_json() for f in findings],
+        }, indent=2, sort_keys=True))
+        return 1 if unsuppressed else 0
+
+    shown = findings if args.show_suppressed else unsuppressed
+    for f in sorted(shown, key=lambda f: (f.path, f.line, f.rule)):
+        print(f.render())
+    status = "OK" if not unsuppressed else "FAIL"
+    extra = f", {len(suppressed)} suppressed" if suppressed else ""
+    print(f"reprolint: {nfiles} files, {len(unsuppressed)} "
+          f"finding(s){extra}: {status}")
+    return 1 if unsuppressed else 0

@@ -1,0 +1,106 @@
+"""Per-path rule sets: which invariant applies where.
+
+Paths are repo-root-relative posix globs (``fnmatch`` semantics, and a
+pattern with no ``/`` wildcard also matches by prefix for directories).
+Three kinds of scoping:
+
+* **generic rules** run on every linted file;
+* **scoped rules** only make sense on specific layers (the host-layer
+  JAX ban, the engine step-clock ban);
+* **exemptions** carve out files where the "violation" is the module's
+  job (the ledger touching its own private fields; benchmarks timing
+  with ``perf_counter``).
+
+Keeping this table in one module — instead of scattering per-rule
+lists across the rule files — is deliberate: a reviewer can read the
+whole enforcement surface in one screen, and the expansion frontier
+(paths a rule should grow to cover) is a one-line diff here.
+"""
+from __future__ import annotations
+
+import fnmatch
+from typing import Iterable
+
+#: directories never descended into
+EXCLUDE_DIRS = {"__pycache__", ".git"}
+
+#: files never linted: the rule fixtures violate on purpose
+EXCLUDE_PATHS = (
+    "tests/reprolint_fixtures/*",
+)
+
+#: rules that run on every linted file
+GENERIC_RULES = (
+    "jit-donation",
+    "host-sync",
+    "seeded-rng",
+    "traced-truthiness",
+    "mutable-default",
+)
+
+#: scoped rules -> the paths they run on.  step-clock covers the
+#: engine/simulator step logic only: benchmarks, examples, and the
+#: launch CLIs time wall-clock legitimately and are exempt by absence.
+SCOPED_RULES = {
+    # the planning/scheduling layer must stay importable (and testable)
+    # without JAX — FakeEngine's whole point (serving/testbed.py)
+    "host-layer-jax": (
+        "src/repro/serving/scheduler.py",
+        "src/repro/serving/testbed.py",
+        "src/repro/core/simulator*.py",
+    ),
+    # engine/simulator time is the step counter, never the wall clock
+    "step-clock": (
+        "src/repro/serving/*",
+        "src/repro/core/*",
+        "src/repro/models/*",
+    ),
+}
+
+#: rule -> paths exempt from it.  ledger-privacy: the ledger itself and
+#: its dedicated test harnesses (they assert on refcounts/free lists by
+#: design); everything else goes through the public PagedCache API.
+RULE_EXEMPT_PATHS = {
+    "ledger-privacy": (
+        "src/repro/models/kvcache.py",
+        "tests/test_paged.py",
+        "tests/test_paged_props.py",
+        "tests/test_prefix_sharing.py",
+    ),
+}
+
+#: ledger-privacy is scoped-on-everywhere minus its exemptions
+PRIVACY_RULES = ("ledger-privacy",)
+
+#: methods forming the engine macro-step host path: the one deliberate
+#: device->host materialization per macro-step lives here (suppressed
+#: with a reason); anything else is a hot-loop host sync.  Read by the
+#: host-sync rule.
+HOT_LOOP_METHODS = {"_forward_steps", "_run_macro", "_macro_tail",
+                    "_apply_cow"}
+
+#: jit-wrapped functions allowed to skip donation without suppression:
+#: none — the known exemption (the profiling decode jit) carries an
+#: inline suppression instead, so the "why" lives next to the code.
+JIT_DONATION_EXEMPT: tuple = ()
+
+
+def _match(rel: str, patterns: Iterable[str]) -> bool:
+    # fnmatch's ``*`` crosses ``/``, so ``dir/*`` covers nested files
+    return any(fnmatch.fnmatch(rel, pat) for pat in patterns)
+
+
+def excluded(rel: str) -> bool:
+    return _match(rel, EXCLUDE_PATHS)
+
+
+def rules_for(rel: str) -> set:
+    """The rule-name set to run on one repo-relative path."""
+    names = set(GENERIC_RULES)
+    for rule, pats in SCOPED_RULES.items():
+        if _match(rel, pats):
+            names.add(rule)
+    for rule in PRIVACY_RULES:
+        if not _match(rel, RULE_EXEMPT_PATHS.get(rule, ())):
+            names.add(rule)
+    return names

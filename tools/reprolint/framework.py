@@ -1,0 +1,176 @@
+"""Rule registry + per-file runner.
+
+A rule is a subclass of :class:`Rule` registered with
+:func:`register`; its :meth:`Rule.check` yields raw findings over one
+:class:`~tools.reprolint.context.FileContext`.  The runner applies the
+per-path rule sets from ``config.py``, matches findings against inline
+suppressions (``# reprolint: disable=<rule> -- <why>``), and emits the
+framework's own meta-findings:
+
+* ``bad-suppression`` — a directive with no ``-- <why>`` reason, or
+  naming a rule that does not exist (typo-proofing);
+* ``unused-suppression`` — a directive that suppressed nothing (the
+  violation it excused is gone: delete the directive);
+* ``parse-error`` — a file that does not parse (CI fails loudly
+  instead of silently skipping it).
+
+Suppressed findings are kept (with their reason) so ``--json`` can
+report them; only *unsuppressed* findings affect the exit code.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import asdict, dataclass
+from typing import Dict, Iterable, Iterator, List, Optional, Type
+
+from tools.reprolint import config
+from tools.reprolint.context import FileContext
+
+META_RULES = {
+    "bad-suppression": "suppression directives need a '-- <why>' reason "
+                       "and must name real rules",
+    "unused-suppression": "a directive that suppresses nothing must be "
+                          "deleted",
+    "parse-error": "every linted file must parse",
+}
+
+
+@dataclass
+class Finding:
+    path: str          # repo-root-relative, posix
+    line: int
+    rule: str
+    message: str
+    suppressed: bool = False
+    suppress_reason: Optional[str] = None
+
+    def render(self) -> str:
+        tag = "  [suppressed: {}]".format(self.suppress_reason) \
+            if self.suppressed else ""
+        return f"{self.path}:{self.line}: [{self.rule}] " \
+               f"{self.message}{tag}"
+
+    def to_json(self) -> dict:
+        return asdict(self)
+
+
+class Rule:
+    """One invariant check.  Subclasses set ``name``/``description``
+    (and optionally ``motivation`` — the PR/bug that earned the rule a
+    place here) and implement :meth:`check`."""
+
+    name: str = ""
+    description: str = ""
+    motivation: str = ""
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        raise NotImplementedError
+
+    def finding(self, ctx: FileContext, node: ast.AST,
+                message: str) -> Finding:
+        return Finding(path=ctx.relpath, line=node.lineno,
+                       rule=self.name, message=message)
+
+
+_REGISTRY: Dict[str, Type[Rule]] = {}
+
+
+def register(cls: Type[Rule]) -> Type[Rule]:
+    assert cls.name and cls.name not in _REGISTRY, cls
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def all_rules() -> Dict[str, Type[Rule]]:
+    # import for side effect: rule modules self-register
+    from tools.reprolint import rules  # noqa: F401
+    return dict(_REGISTRY)
+
+
+def known_rule_names() -> set:
+    return set(all_rules()) | set(META_RULES)
+
+
+# ----------------------------------------------------------------------
+# runner
+# ----------------------------------------------------------------------
+def lint_file(path: str, root: str) -> List[Finding]:
+    """Lint one file: run its per-path rule set, apply suppressions,
+    emit meta-findings."""
+    rel = os.path.relpath(path, root).replace(os.sep, "/")
+    try:
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+        ctx = FileContext(path, rel, source)
+    except (SyntaxError, ValueError, UnicodeDecodeError) as e:
+        line = getattr(e, "lineno", None) or 1
+        return [Finding(path=rel, line=line, rule="parse-error",
+                        message=f"cannot parse: {e}")]
+
+    rules = all_rules()
+    findings: List[Finding] = []
+    for name in sorted(config.rules_for(rel)):
+        for f in rules[name]().check(ctx):
+            sup = ctx.suppression_for(f.rule, f.line)
+            if sup is not None:
+                sup.used = True
+                f.suppressed = True
+                f.suppress_reason = sup.reason or "(no reason given)"
+            findings.append(f)
+
+    known = known_rule_names()
+    for sup in ctx.suppressions:
+        unknown = [r for r in sup.rules if r != "all" and r not in known]
+        if unknown:
+            findings.append(Finding(
+                path=rel, line=sup.line, rule="bad-suppression",
+                message=f"unknown rule(s) {', '.join(unknown)} in "
+                        f"suppression (known: "
+                        f"{', '.join(sorted(known))})"))
+        if not sup.reason:
+            findings.append(Finding(
+                path=rel, line=sup.line, rule="bad-suppression",
+                message="suppression without a reason — append "
+                        "'-- <why this violation is deliberate>'"))
+        elif not sup.used and not unknown:
+            findings.append(Finding(
+                path=rel, line=sup.line, rule="unused-suppression",
+                message=f"suppression for "
+                        f"{', '.join(sup.rules)} matches no finding — "
+                        f"delete it"))
+    findings.sort(key=lambda f: (f.line, f.rule))
+    return findings
+
+
+def iter_py_files(paths: Iterable[str], root: str) -> Iterator[str]:
+    for p in paths:
+        p = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield p
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d not in config.EXCLUDE_DIRS
+                                 and not d.startswith("."))
+            for f in sorted(filenames):
+                if f.endswith(".py"):
+                    yield os.path.join(dirpath, f)
+
+
+def target_files(paths: Iterable[str], root: str) -> List[str]:
+    """The non-excluded .py files a run will lint."""
+    out = []
+    for path in iter_py_files(paths, root):
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        if not config.excluded(rel):
+            out.append(path)
+    return out
+
+
+def lint_paths(paths: Iterable[str], root: str) -> List[Finding]:
+    findings: List[Finding] = []
+    for path in target_files(paths, root):
+        findings.extend(lint_file(path, root))
+    return findings

@@ -1,0 +1,5 @@
+"""Rule modules — importing this package registers every rule."""
+from tools.reprolint.rules import (host_layer, host_sync,  # noqa: F401
+                                   jit_donation, ledger_privacy,
+                                   mutable_default, seeded_rng,
+                                   step_clock, traced_truthiness)

@@ -1,0 +1,52 @@
+"""host-layer-jax: the scheduling/simulation layer must not import JAX.
+
+``serving/scheduler.py`` (policy decisions), ``serving/testbed.py``
+(FakeEngine), and ``core/simulator*.py`` (the evaluation loop) are the
+repo's *host* layer: pure numpy state machines that must stay
+importable — and unit-testable in milliseconds — on a box with no JAX,
+and must never accidentally trigger device work from a scheduling
+decision (policies choose WHICH rows run, never WHAT they compute).
+The 22-test policy suite and the goodput baseline both depend on this:
+FakeEngine exists precisely so every policy decision runs with "no
+model, no parameters, and no JAX dispatch".
+
+Any ``import jax`` / ``from jax import ...`` (top-level or nested
+inside a function) in a configured host-layer file is a finding.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.reprolint.context import FileContext
+from tools.reprolint.framework import Finding, Rule, register
+
+
+@register
+class HostLayerJax(Rule):
+    name = "host-layer-jax"
+    description = ("the scheduler/testbed/simulator host layer must "
+                   "not import jax (pure-numpy state machines, "
+                   "JAX-free testable)")
+    motivation = ("PR 6's testbed contract: FakeEngine runs the real "
+                  "scheduler with zero JAX dispatch; a jax import "
+                  "here couples policy decisions to device state")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            mod = None
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == "jax" or a.name.startswith("jax."):
+                        mod = a.name
+            elif isinstance(node, ast.ImportFrom):
+                if node.module and (node.module == "jax"
+                                    or node.module.startswith("jax.")):
+                    mod = node.module
+            if mod is not None:
+                yield self.finding(
+                    ctx, node,
+                    f"host-layer module imports {mod} — scheduler/"
+                    f"testbed/simulator code is a pure-numpy state "
+                    f"machine (move device work behind an engine "
+                    f"hook)")

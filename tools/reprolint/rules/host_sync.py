@@ -1,0 +1,111 @@
+"""host-sync: no device->host materialization in the decode hot loop.
+
+The hot-loop contract (SERVING.md §The decode hot loop, PR 5) is
+quantitative: steady-state decode costs at most **1/K** host syncs per
+generated token — one ``np.asarray`` on the macro-step output, nothing
+else.  A stray ``.item()`` / ``int(traced)`` / ``np.asarray`` /
+``block_until_ready`` re-introduces a per-token (or per-scan-step!)
+device round trip without failing any parity test; the masked-row
+subtlety in PR 5 came from exactly this class of bug.
+
+Two scopes:
+
+* **traced regions** (jit-decorated functions, ``lax.scan`` bodies):
+  ANY host materialization is flagged — inside a trace these are
+  either errors (``int()`` on a tracer raises) or silent
+  constant-folding hazards.  ``int()``/``float()`` casts of shapes,
+  ``len()``, and literals are static and stay allowed.
+* **engine macro-step methods** (``config.HOT_LOOP_METHODS``:
+  ``_forward_steps`` / ``_run_macro`` / ``_macro_tail`` /
+  ``_apply_cow``): device-transfer calls (``np.asarray`` /
+  ``np.array`` / ``jax.device_get`` / ``.block_until_ready()`` /
+  ``.item()`` / ``.tolist()``) are flagged — the ONE deliberate sync
+  per macro-step carries an inline suppression saying so.  Host-side
+  ``int()`` casts of numpy values are fine there and are not flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.reprolint import config
+from tools.reprolint.context import FileContext
+from tools.reprolint.framework import Finding, Rule, register
+
+#: method attributes that force a device sync wherever they appear
+_SYNC_ATTRS = {"item", "block_until_ready", "tolist"}
+#: call targets that materialize a device value on the host
+_TRANSFER_FNS = {"numpy.asarray", "numpy.array", "jax.device_get"}
+#: builtin casts that sync when fed a traced/device value
+_CAST_FNS = {"int", "float", "bool", "complex"}
+#: attribute roots that make a cast static (trace-time) and safe
+_STATIC_ATTRS = {"shape", "ndim", "size", "dtype", "itemsize"}
+
+
+def _is_static_arg(node: ast.AST) -> bool:
+    """Casts of literals, ``len(...)``, and shape/dtype metadata are
+    resolved at trace time — not host syncs."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id == "len":
+        return True
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr in _STATIC_ATTRS:
+            return True
+    return False
+
+
+@register
+class HostSync(Rule):
+    name = "host-sync"
+    description = ("no device->host materialization (.item(), "
+                   "int()/float() casts, np.asarray, "
+                   "block_until_ready) inside traced code or the "
+                   "engine macro-step path")
+    motivation = ("PR 5's <=1/K host-sync bound: one np.asarray per "
+                  "macro-step is the budget; everything else rots "
+                  "tokens/s silently")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            in_trace = ctx.in_traced(node)
+            in_hot = self._in_hot_method(ctx, node)
+            if not (in_trace or in_hot):
+                continue
+            where = ("traced code" if in_trace
+                     else "the engine macro-step path")
+            q = ctx.call_qualname(node)
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _SYNC_ATTRS:
+                yield self.finding(
+                    ctx, node,
+                    f".{node.func.attr}() forces a device sync inside "
+                    f"{where}")
+                continue
+            if q in _TRANSFER_FNS:
+                yield self.finding(
+                    ctx, node,
+                    f"{q.replace('numpy', 'np')}() materializes a "
+                    f"device value inside {where} — keep the hot loop "
+                    f"on device (one sync per macro-step is the "
+                    f"budget)")
+                continue
+            if in_trace and isinstance(node.func, ast.Name) \
+                    and node.func.id in _CAST_FNS \
+                    and not ctx.binds(node.func.id, node) \
+                    and node.args \
+                    and not _is_static_arg(node.args[0]):
+                yield self.finding(
+                    ctx, node,
+                    f"{node.func.id}() cast of a (potentially traced) "
+                    f"value inside traced code — a concretization "
+                    f"error at best, a silent constant-fold at worst")
+
+    @staticmethod
+    def _in_hot_method(ctx: FileContext, node: ast.AST) -> bool:
+        return any(isinstance(f, (ast.FunctionDef, ast.AsyncFunctionDef))
+                   and f.name in config.HOT_LOOP_METHODS
+                   for f in ctx.enclosing_functions(node))

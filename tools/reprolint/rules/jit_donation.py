@@ -1,0 +1,143 @@
+"""jit-donation: cache-carrying jits must donate their cache argument.
+
+The engines treat caches as *linear state*: every jitted call rebinds
+``self.caches`` to the returned pytree and never touches the donated
+input again, so XLA reuses the cache buffers in place (PR 5's donation
+contract — without it every macro-step copies the full KV cache).  A
+``jax.jit`` whose wrapped function takes a cache/state-named parameter
+and does not declare ``donate_argnums``/``donate_argnames`` covering
+it silently doubles cache memory traffic; nothing else fails.
+
+The check resolves the wrapped callable when it can see it: decorated
+defs, ``jax.jit(fn)`` over a local def, ``jax.jit(lambda ...)``, and
+``functools.partial(jax.jit, ...)`` decorators.  Cross-module targets
+(``jax.jit(self.model.prefill_chunk)``) are *not* resolvable
+statically — those stay covered by the dispatch/compile regressions in
+tests/test_engine_macro.py.
+
+Known exemption: profiling jits must NOT donate (they would consume
+the live serving caches) — suppressed inline where deliberate.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator, List, Optional, Tuple
+
+from tools.reprolint import config
+from tools.reprolint.context import FileContext
+from tools.reprolint.framework import Finding, Rule, register
+
+#: parameter names that hold engine cache / linear state
+CACHE_PARAM_RE = re.compile(r"(^|_)(caches?|state|carry)(_|$|s$)")
+
+
+def _param_names(fn: ast.AST) -> List[str]:
+    args = fn.args
+    return [a.arg for a in args.posonlyargs + args.args]
+
+
+def _donated(call: ast.Call) -> Tuple[Optional[set], Optional[set]]:
+    """(donated indices, donated names) declared on a jax.jit call —
+    (None, None) when neither kwarg is present."""
+    idxs = names = None
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            idxs = _int_tuple(kw.value)
+        elif kw.arg == "donate_argnames":
+            names = _str_tuple(kw.value)
+    return idxs, names
+
+
+def _int_tuple(node: ast.AST) -> set:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return {e.value for e in node.elts
+                if isinstance(e, ast.Constant)
+                and isinstance(e.value, int)}
+    return set()
+
+
+def _str_tuple(node: ast.AST) -> set:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return {e.value for e in node.elts
+                if isinstance(e, ast.Constant)
+                and isinstance(e.value, str)}
+    return set()
+
+
+@register
+class JitDonation(Rule):
+    name = "jit-donation"
+    description = ("jax.jit over a function with a cache/state-named "
+                   "parameter must donate it "
+                   "(donate_argnums/donate_argnames)")
+    motivation = ("PR 5's cache-donation contract: a non-donating "
+                  "cache jit silently copies the whole KV cache every "
+                  "macro-step")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._check_decorated(ctx, node)
+            elif isinstance(node, ast.Call) \
+                    and ctx.call_qualname(node) == "jax.jit":
+                yield from self._check_wrap(ctx, node)
+
+    # -- @functools.partial(jax.jit, ...) / @jax.jit -------------------
+    def _check_decorated(self, ctx, fn) -> Iterator[Finding]:
+        for dec in fn.decorator_list:
+            if isinstance(dec, ast.Call) \
+                    and ctx.call_qualname(dec) == "functools.partial" \
+                    and dec.args \
+                    and ctx.qualname(dec.args[0]) == "jax.jit":
+                yield from self._verify(ctx, dec, fn, fn.name,
+                                        *_donated(dec))
+            elif ctx.qualname(dec) == "jax.jit":
+                # bare decorator: nothing can be donated
+                yield from self._verify(ctx, dec, fn, fn.name,
+                                        None, None)
+
+    # -- jax.jit(fn, ...) ----------------------------------------------
+    def _check_wrap(self, ctx, call) -> Iterator[Finding]:
+        if not call.args:
+            return
+        target = call.args[0]
+        fn: Optional[ast.AST] = None
+        label = "<callable>"
+        if isinstance(target, ast.Lambda):
+            fn, label = target, "<lambda>"
+        elif isinstance(target, ast.Name):
+            # nearest local def with that name (the engines build their
+            # jits right next to the defs they wrap)
+            defs = [n for n in ast.walk(ctx.tree)
+                    if isinstance(n, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef))
+                    and n.name == target.id]
+            if not defs:
+                return  # imported/cross-module target: not resolvable
+            fn, label = defs[-1], target.id
+        else:
+            return  # attribute chains etc.: not statically resolvable
+        yield from self._verify(ctx, call, fn, label, *_donated(call))
+
+    def _verify(self, ctx, call, fn, label, idxs, names) \
+            -> Iterator[Finding]:
+        if label in config.JIT_DONATION_EXEMPT:
+            return
+        cache_idx = [(i, p) for i, p in enumerate(_param_names(fn))
+                     if CACHE_PARAM_RE.search(p)]
+        for i, p in cache_idx:
+            covered = ((idxs is not None and i in idxs)
+                       or (names is not None and p in names))
+            if not covered:
+                yield self.finding(
+                    ctx, call,
+                    f"jax.jit({label}) does not donate cache-carrying "
+                    f"parameter {p!r} (index {i}) — declare "
+                    f"donate_argnums=({i},) and rebind the caller's "
+                    f"reference, or suppress with the reason the state "
+                    f"must survive (e.g. profiling)")

@@ -1,0 +1,81 @@
+"""ledger-privacy: PagedCache's underscore state is the ledger's own.
+
+The paged-cache ledger (``models/kvcache.py::PagedCache``) maintains a
+web of invariants over its private fields — ``_free`` LIFO lists,
+``_held`` per-row block sets, ``_ref`` refcounts, ``_prefix_index`` /
+``_block_key`` content addressing, the ``_version`` counter that keys
+incremental device-table uploads.  Every public method
+(``admit``/``ensure``/``release``/``check``/``meta``) preserves them
+together; an engine or benchmark reaching into ``pc._free`` directly
+can break refcount/occupancy consistency in ways only a long
+preemption+sharing trace would surface (the PR 7 COW machinery is
+exactly this kind of coupling).
+
+Flagged: any read or write of an underscore-prefixed attribute on a
+receiver that is PagedCache-shaped — a name bound from
+``PagedCache(...)``, or the conventional ``pc`` / ``*.pc`` handle.
+Exempt by path config: the ledger itself and its dedicated test
+harnesses (tests/test_paged*.py, tests/test_prefix_sharing.py), which
+assert on private state by design.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from tools.reprolint.context import FileContext
+from tools.reprolint.framework import Finding, Rule, register
+
+
+@register
+class LedgerPrivacy(Rule):
+    name = "ledger-privacy"
+    description = ("PagedCache underscore-prefixed fields are private "
+                   "to models/kvcache.py (and its tests) — use the "
+                   "public ledger API")
+    motivation = ("PR 7: refcount/COW consistency spans _free/_held/"
+                  "_ref/_prefix_index together; partial outside "
+                  "mutation breaks invariants only long traces catch")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        cache_names = self._paged_cache_names(ctx)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Attribute):
+                continue
+            attr = node.attr
+            if not attr.startswith("_") or attr.startswith("__"):
+                continue
+            if self._is_cache_receiver(node.value, cache_names):
+                yield self.finding(
+                    ctx, node,
+                    f"access to private ledger field "
+                    f"PagedCache.{attr} outside models/kvcache.py — "
+                    f"go through the public API (admit/ensure/release/"
+                    f"meta/check) so refcount and free-list "
+                    f"invariants stay maintained together")
+
+    @staticmethod
+    def _paged_cache_names(ctx: FileContext) -> Set[str]:
+        """Variables assigned (anywhere in the file) from a direct
+        ``PagedCache(...)`` construction."""
+        names: Set[str] = set()
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Assign) \
+                    and isinstance(node.value, ast.Call):
+                q = ctx.call_qualname(node.value)
+                if q and q.rsplit(".", 1)[-1] == "PagedCache":
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            names.add(t.id)
+        return names
+
+    @staticmethod
+    def _is_cache_receiver(value: ast.AST, cache_names: Set[str]) \
+            -> bool:
+        # pc._x / <tracked var>._x
+        if isinstance(value, ast.Name):
+            return value.id == "pc" or value.id in cache_names
+        # self.pc._x / eng.pc._x / anything.pc._x
+        if isinstance(value, ast.Attribute):
+            return value.attr == "pc"
+        return False

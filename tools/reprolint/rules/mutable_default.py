@@ -1,0 +1,97 @@
+"""mutable-default: no shared-mutable default arguments or dataclass
+fields.
+
+A ``def f(out=[])`` default (or a ``x: List = []`` dataclass field)
+is evaluated once and shared by every call/instance: request lists,
+block tables, and hop dicts silently alias across engines — exactly
+the co-batched-state-corruption genus the serving stack keeps having
+to rule out (``Request.out_tokens`` uses
+``field(default_factory=list)`` for this reason).  Dataclasses raise
+for bare ``[]`` fields only on *some* annotations; the linter flags
+them all uniformly.
+
+Flagged: list/dict/set displays and ``list()``/``dict()``/``set()``
+calls as function parameter defaults, and as dataclass field defaults
+in ``@dataclass``-decorated classes.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.reprolint.context import FileContext
+from tools.reprolint.framework import Finding, Rule, register
+
+_MUTABLE_DISPLAYS = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                     ast.DictComp, ast.SetComp)
+_MUTABLE_CTORS = {"list", "dict", "set", "bytearray", "defaultdict",
+                  "Counter", "deque", "OrderedDict"}
+
+
+def _is_mutable(node: ast.AST) -> bool:
+    if isinstance(node, _MUTABLE_DISPLAYS):
+        return True
+    if isinstance(node, ast.Call):
+        name = None
+        if isinstance(node.func, ast.Name):
+            name = node.func.id
+        elif isinstance(node.func, ast.Attribute):
+            name = node.func.attr
+        return name in _MUTABLE_CTORS
+    return False
+
+
+def _is_dataclass(ctx: FileContext, cls: ast.ClassDef) -> bool:
+    for dec in cls.decorator_list:
+        q = ctx.qualname(dec.func if isinstance(dec, ast.Call) else dec)
+        if q and q.rsplit(".", 1)[-1] == "dataclass":
+            return True
+    return False
+
+
+@register
+class MutableDefault(Rule):
+    name = "mutable-default"
+    description = ("no mutable default arguments or mutable dataclass "
+                   "field defaults — use None/field(default_factory)")
+    motivation = ("a shared default list aliases state across every "
+                  "call/instance — the same corruption genus as the "
+                  "co-batched SSM-row bug, but at the Python layer")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                yield from self._check_defaults(ctx, node)
+            elif isinstance(node, ast.ClassDef) \
+                    and _is_dataclass(ctx, node):
+                yield from self._check_fields(ctx, node)
+
+    def _check_defaults(self, ctx, fn) -> Iterator[Finding]:
+        defaults = list(fn.args.defaults) + [
+            d for d in fn.args.kw_defaults if d is not None]
+        for d in defaults:
+            if _is_mutable(d):
+                name = getattr(fn, "name", "<lambda>")
+                yield self.finding(
+                    ctx, d,
+                    f"mutable default argument in {name}() is "
+                    f"evaluated once and shared by every call — "
+                    f"default to None (or a tuple) and construct "
+                    f"inside")
+
+    def _check_fields(self, ctx, cls) -> Iterator[Finding]:
+        for stmt in cls.body:
+            if isinstance(stmt, ast.AnnAssign) and stmt.value is not None \
+                    and _is_mutable(stmt.value):
+                yield self.finding(
+                    ctx, stmt,
+                    f"mutable dataclass field default in "
+                    f"{cls.name} is shared across instances — use "
+                    f"field(default_factory=...)")
+            elif isinstance(stmt, ast.Assign) and _is_mutable(stmt.value):
+                yield self.finding(
+                    ctx, stmt,
+                    f"mutable class-level default in {cls.name} is "
+                    f"shared across instances — use "
+                    f"field(default_factory=...)")

@@ -1,0 +1,79 @@
+"""seeded-rng: SeedSequence-only randomness, crc32-only seeding.
+
+Reproducibility here is byte-level: trial results replay identically
+across worker counts and processes (tests/test_vectorized_replay.py).
+Two historical bug classes, both from PR 1:
+
+* **legacy global-state RNG** — ``np.random.rand()`` & friends draw
+  from a hidden module-global stream: any library call (or test
+  ordering change) that also touches it silently reshuffles every
+  "seeded" experiment.  All randomness flows through explicit
+  ``np.random.default_rng`` / ``Generator`` / ``SeedSequence`` objects
+  injected per stream.
+* **builtin hash() for seeding** — ``hash(name)`` is salted per
+  process by PYTHONHASHSEED, so "fixed-seed" trials differed across
+  runs until the crc32 fix (``core/experiment.py``,
+  tests/test_simulator_invariants.py pins the values).  Stable name
+  folding uses ``zlib.crc32``.
+
+The stdlib ``random`` module's global-state functions are banned for
+the same reason as numpy's.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.reprolint.context import FileContext
+from tools.reprolint.framework import Finding, Rule, register
+
+#: the explicit-stream API that is allowed through
+_NP_RANDOM_OK = {
+    "default_rng", "Generator", "SeedSequence", "BitGenerator",
+    "PCG64", "PCG64DXSM", "Philox", "SFC64", "MT19937",
+}
+#: stdlib random: constructing an explicit instance is fine
+_STDLIB_OK = {"Random", "SystemRandom"}
+
+
+@register
+class SeededRng(Rule):
+    name = "seeded-rng"
+    description = ("no module-level np.random.* / random.* draws (use "
+                   "an injected default_rng/SeedSequence stream) and "
+                   "no builtin hash() for seeding (use zlib.crc32)")
+    motivation = ("PR 1: hash() is PYTHONHASHSEED-salted and the "
+                  "legacy global RNG stream is shared mutable state — "
+                  "both broke byte-identical replay")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            q = ctx.call_qualname(node)
+            if q and q.startswith("numpy.random."):
+                leaf = q.split(".")[2]
+                if leaf not in _NP_RANDOM_OK:
+                    yield self.finding(
+                        ctx, node,
+                        f"np.random.{leaf}() draws from the hidden "
+                        f"module-global stream — thread an explicit "
+                        f"np.random.default_rng/SeedSequence stream "
+                        f"through instead")
+            elif q and q.startswith("random.") and q.count(".") == 1 \
+                    and ctx.imports.get("random") == "random":
+                leaf = q.split(".")[1]
+                if leaf not in _STDLIB_OK:
+                    yield self.finding(
+                        ctx, node,
+                        f"random.{leaf}() uses the stdlib's global "
+                        f"RNG state — use an injected "
+                        f"np.random.default_rng stream")
+            elif isinstance(node.func, ast.Name) \
+                    and node.func.id == "hash" \
+                    and not ctx.binds("hash", node):
+                yield self.finding(
+                    ctx, node,
+                    "builtin hash() is salted per process by "
+                    "PYTHONHASHSEED — for stable name folding use "
+                    "zlib.crc32(s.encode()) (core/experiment.py)")

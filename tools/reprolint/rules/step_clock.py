@@ -1,0 +1,53 @@
+"""step-clock: engine/simulator time is the step counter, not the wall.
+
+``Request.t_submit`` / ``t_admit`` / ``t_first`` / ``t_done`` are
+stamped in engine *step-counter* units (one ``step()`` = one decode
+iteration) and the simulator advances in slots — that is what makes
+queueing delay and TTFT/TPOT deadlines comparable across engines,
+machines, and CI boxes, and what keeps golden streams and goodput
+baselines byte-reproducible.  A ``time.time()`` / ``perf_counter()``
+leaking into step logic ties scheduling decisions to host load: the
+numbers stop replaying and the SLO accounting silently becomes
+machine-dependent.
+
+Benchmarks, examples, and the launch CLIs measure wall time on
+purpose; they are exempt by path in ``config.SCOPED_RULES`` (this rule
+only runs over the serving/core/models layers).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.reprolint.context import FileContext
+from tools.reprolint.framework import Finding, Rule, register
+
+_WALL_CLOCK = {
+    "time.time", "time.perf_counter", "time.perf_counter_ns",
+    "time.monotonic", "time.monotonic_ns", "time.process_time",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+}
+
+
+@register
+class StepClock(Rule):
+    name = "step-clock"
+    description = ("no wall-clock reads (time.time/perf_counter/...) "
+                   "in engine or simulator step logic — the step "
+                   "counter is the only clock")
+    motivation = ("engine-step stamps are what keep golden streams "
+                  "and goodput baselines byte-reproducible across "
+                  "machines (PR 4/6 timestamp semantics)")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            q = ctx.call_qualname(node)
+            if q in _WALL_CLOCK:
+                yield self.finding(
+                    ctx, node,
+                    f"{q}() reads the wall clock inside step logic — "
+                    f"engine/simulator time is the step counter "
+                    f"(Request.t_* stamps); wall timing belongs in "
+                    f"benchmarks/")

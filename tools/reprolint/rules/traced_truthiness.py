@@ -1,0 +1,110 @@
+"""traced-truthiness: no Python `if`/`while` on traced jnp values.
+
+Inside a jit-compiled function (or a ``lax.scan`` body), a jnp
+expression is a *tracer*: ``if jnp.any(mask):`` either raises a
+ConcretizationTypeError at trace time or — worse, when the value is
+accidentally concrete on the first call — silently bakes one branch
+into the compiled program for every future call.  Data-dependent
+control flow belongs in ``jnp.where`` / ``lax.cond`` / ``lax.select``
+(the macro-step scan's done-masking in ``greedy_scan_update`` is the
+canonical in-repo pattern).
+
+To stay quiet on the legitimate *static* branching the kernels and
+models do everywhere (``if not use_pallas:``, ``if paged is None:``,
+``if cfg.n_layers > ...``), the rule only taints values that
+demonstrably come from jnp/jax calls inside the traced function:
+
+* a test expression containing a direct ``jnp.*`` / ``jax.*`` call;
+* a name assigned (in the same function) from an expression
+  containing one.
+
+``is`` / ``is not`` comparisons and shape/dtype attribute tests are
+never flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from tools.reprolint.context import FileContext
+from tools.reprolint.framework import Finding, Rule, register
+
+_STATIC_ATTRS = {"shape", "ndim", "size", "dtype"}
+
+
+def _contains_jax_call(ctx: FileContext, node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            q = ctx.call_qualname(sub)
+            if q and (q.startswith("jax.numpy.")
+                      or q.startswith("jax.lax.")
+                      or q == "jax.numpy"):
+                # shape/dtype metadata access keeps a test static even
+                # when a jnp call produced the array
+                parent_attr = any(
+                    isinstance(a, ast.Attribute)
+                    and a.attr in _STATIC_ATTRS
+                    for a in ctx.ancestors(sub))
+                if not parent_attr:
+                    return True
+    return False
+
+
+def _tainted_names(ctx: FileContext, fn: ast.AST) -> Set[str]:
+    """Names assigned from jnp/jax-call expressions within ``fn``."""
+    names: Set[str] = set()
+    for sub in ast.walk(fn):
+        if isinstance(sub, ast.Assign) \
+                and _contains_jax_call(ctx, sub.value):
+            for t in sub.targets:
+                for leaf in ast.walk(t):
+                    if isinstance(leaf, ast.Name):
+                        names.add(leaf.id)
+        elif isinstance(sub, (ast.AugAssign, ast.AnnAssign)) \
+                and sub.value is not None \
+                and _contains_jax_call(ctx, sub.value) \
+                and isinstance(sub.target, ast.Name):
+            names.add(sub.target.id)
+    return names
+
+
+def _is_identity_test(node: ast.AST) -> bool:
+    return isinstance(node, ast.Compare) and all(
+        isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops)
+
+
+@register
+class TracedTruthiness(Rule):
+    name = "traced-truthiness"
+    description = ("no Python if/while on jnp expressions inside "
+                   "jit-traced code — use jnp.where/lax.cond/"
+                   "lax.select")
+    motivation = ("a truthy tracer raises at trace time or silently "
+                  "bakes one branch into the compiled program (the "
+                  "macro-step masks rows with jnp.where for exactly "
+                  "this reason)")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            if not ctx.in_traced(node):
+                continue
+            test = node.test
+            if _is_identity_test(test):
+                continue
+            fns = ctx.enclosing_functions(node)
+            tainted = _tainted_names(ctx, fns[0]) if fns else set()
+            direct = _contains_jax_call(ctx, test)
+            via_name = any(isinstance(leaf, ast.Name)
+                           and isinstance(leaf.ctx, ast.Load)
+                           and leaf.id in tainted
+                           for leaf in ast.walk(test))
+            if direct or via_name:
+                kw = "if" if isinstance(node, ast.If) else "while"
+                yield self.finding(
+                    ctx, node,
+                    f"Python `{kw}` on a traced jnp value inside "
+                    f"jit-compiled code — branches on tracers either "
+                    f"raise or silently specialize; use jnp.where / "
+                    f"lax.cond / lax.select")
