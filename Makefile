@@ -1,7 +1,13 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: lint typecheck test smoke simbench engine-bench goodput-bench docs ci
+.PHONY: lint typecheck test test-full smoke simbench engine-bench \
+        goodput-bench spec-bench docs ci
+
+# line-coverage floor over the serving-critical modules (serving/,
+# core/, models/kvcache.py): measured tier-1 baseline (89.5%) minus
+# one point — see tools/covgate.py and TOOLING.md §Coverage gate
+COV_FLOOR ?= 88.5
 
 # invariant linter (tools/reprolint/): AST rules for the serving
 # stack's contracts — jit donation, host-sync budget, seeded RNG,
@@ -16,8 +22,14 @@ lint:
 typecheck:
 	$(PY) tools/typecheck.py
 
-# tier-1: must collect and pass with or without hypothesis installed
+# tier-1 under the coverage gate: fast tests only (tier2 marks the
+# slow parity sweeps — TOOLING.md §Test tiers), must collect and pass
+# with or without hypothesis installed
 test:
+	$(PY) tools/covgate.py --floor $(COV_FLOOR) -- -x -q -m "not tier2"
+
+# both tiers: the full parity sweeps across every architecture
+test-full:
 	$(PY) -m pytest -x -q
 
 # CI-sized end-to-end gate: fig3/fig4 through the parallel replication
@@ -43,6 +55,14 @@ engine-bench:
 goodput-bench:
 	$(PY) -m benchmarks.goodput_bench --out bench_goodput.json
 	$(PY) -m benchmarks.report --goodput bench_goodput.json
+
+# speculative-decoding bench, full size: refreshes the committed
+# bench_spec.json baseline (best spec cell must clear 1.3x the paged
+# K=16 macro-step baseline — SERVING.md §Speculative decoding; the
+# `make smoke` chain writes CI-sized numbers to bench_spec_quick.json)
+spec-bench:
+	$(PY) -m benchmarks.spec_bench --out bench_spec.json
+	$(PY) -m benchmarks.report --spec bench_spec.json
 
 # docs gate: every relative link in *.md resolves, quoted source-file
 # references in README/ARCHITECTURE/EXPERIMENTS/SERVING point at real

@@ -116,6 +116,41 @@ def engine_table(path: str) -> None:
         print("\n" + "; ".join(lines))
 
 
+def spec_table(path: str) -> None:
+    """Markdown summary of a benchmarks.spec_bench JSON: tokens/s,
+    acceptance rate, and verify-dispatch/host-sync overhead per token
+    for the draft-verify cells vs the macro-step baseline, plus the
+    committed speedup-criterion line."""
+    from repro.experiments.results import load_results
+    try:
+        rows, meta = load_results(path)
+    except FileNotFoundError:
+        print(f"\n### §Speculative decoding — {path}: missing, skipped\n")
+        return
+    print(f"\n### §Speculative decoding — {path} "
+          f"({meta.get('n_requests', '?')} reqs x "
+          f"{meta.get('new_tokens', '?')} new tokens, "
+          f"{meta.get('draft', '?')} draft, baseline paged "
+          f"K={meta.get('baseline_k', '?')})\n")
+    print("| arch | cell | K | tok/s | acceptance | accept mean | "
+          "verify/token | syncs/token | match |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["cell"] == "summary":
+            continue
+        print(f"| {r['arch']} | {r['cell']} | {r['k']} "
+              f"| {r['tok_per_s']:.0f} | {r['acceptance_rate']:.3f} "
+              f"| {r['accept_mean']:.2f} | {r['verify_per_token']:.4f} "
+              f"| {r['syncs_per_token']:.4f} | {r['outputs_match']} |")
+    for r in rows:
+        if r["cell"] == "summary":
+            print(f"\n{r['arch']}: best spec K={r['k']} is "
+                  f"{r['speedup_vs_baseline']:.2f}x the macro-step "
+                  f"baseline (criterion >= {r['min_speedup']}x: "
+                  f"{'met' if r['meets_criterion'] else 'NOT met'}, "
+                  f"outputs_match={r['outputs_match']})")
+
+
 def goodput_table(path: str) -> None:
     """Markdown summary of a benchmarks.goodput_bench JSON: overall and
     per-QoS-class goodput by scheduling policy, plus the on-time /
@@ -186,6 +221,9 @@ def main():
     ap.add_argument("--goodput", default=None,
                     help="benchmarks.goodput_bench JSON to summarize "
                          "(e.g. bench_goodput.json)")
+    ap.add_argument("--spec", default=None,
+                    help="benchmarks.spec_bench JSON to summarize "
+                         "(e.g. bench_spec.json)")
     args = ap.parse_args()
 
     if args.experiments:
@@ -194,7 +232,9 @@ def main():
         engine_table(args.engine)
     if args.goodput:
         goodput_table(args.goodput)
-    if (args.engine or args.goodput) and not args.experiments:
+    if args.spec:
+        spec_table(args.spec)
+    if (args.engine or args.goodput or args.spec) and not args.experiments:
         return
 
     dry = load(args.dryrun)

@@ -8,6 +8,9 @@
   paged    paged KV + continuous batching vs dense slots (SERVING.md)
   engine   decode hot loop: macro-step K sweep, dispatches/syncs per
            token, all four engines (SERVING.md §The decode hot loop)
+  spec     draft-verify speculative decoding vs the paged macro-step
+           baseline: tokens/s, acceptance rate, verify dispatches
+           (SERVING.md §Speculative decoding)
   goodput  SLO-goodput: FIFO vs EDF vs EDF+effective-capacity on a
            mixed-QoS overload trace (SERVING.md §Scheduling)
   simbench vectorized simulator core vs scalar reference (trials/s)
@@ -36,8 +39,8 @@ def main() -> None:
                     help="fewer trials (CI-sized)")
     ap.add_argument("--only", default=None,
                     choices=[None, "fig3", "fig4", "ablation", "kernels",
-                             "pipeline", "paged", "engine", "goodput",
-                             "simbench", "scale"])
+                             "pipeline", "paged", "engine", "spec",
+                             "goodput", "simbench", "scale"])
     ap.add_argument("--scenario", default="baseline",
                     help="registered scenario for fig3/fig4 "
                          "(see --list-scenarios)")
@@ -153,6 +156,19 @@ def main() -> None:
                    out="bench_engine_quick.json")
         else:
             engine(scenario=args.scenario, out="bench_engine.json")
+
+    if args.only in (None, "spec"):
+        print("=" * 72)
+        print("## Speculative decoding — draft-verify vs macro-step "
+              "baseline on a high-acceptance trace")
+        from benchmarks.spec_bench import main as spec
+        if args.quick:
+            # CI-sized output goes to a scratch name; bench_spec.json
+            # is the committed full-run baseline
+            spec(n_requests=3, new_tokens=48, spec_ks="4,8", reps=2,
+                 out="bench_spec_quick.json")
+        else:
+            spec(out="bench_spec.json")
 
     if args.only in (None, "goodput"):
         print("=" * 72)

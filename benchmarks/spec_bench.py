@@ -1,0 +1,275 @@
+"""Draft-verify speculative decoding bench: tokens/s vs the macro-step
+baseline, acceptance rate, verify dispatches and host syncs per token.
+
+Measures what speculation buys over the fused macro-step it replaces
+(SERVING.md §Speculative decoding): the baseline K=16 paged engine
+pays one sequential model step per token (amortizing only *dispatch*
+overhead across the scan), while a verify round scores all K+1
+positions of a draft chunk in one parallel dispatch and emits the
+accepted prefix — per emitted token the model runs ~1/accept_mean
+chunk passes instead of one full step.  The win is therefore gated on
+the acceptance rate, which is a property of the *trace*: this bench
+replays a deliberately high-acceptance workload (greedy smoke streams
+collapse into short cycles after a wandering head, which the n-gram
+draft then predicts near-perfectly), so the committed numbers show the
+mechanism's headroom, not a fleet average.  Columns:
+
+* ``tok_per_s``           wall-clock generated tokens per second,
+* ``acceptance_rate``     accepted draft tokens / proposed draft tokens,
+* ``accept_mean``         tokens emitted per live row per verify round
+                          (accepted + 1 bonus; what EC admission sees),
+* ``verify_per_token``    verify-chunk jit dispatches / generated token
+                          (the speculative analogue of disp/tok —
+                          between 1/(K+1) and 1),
+* ``syncs_per_token``     device->host materializations / token (one
+                          per verify round: the <= 1/K-style bound),
+* ``outputs_match``       greedy token streams byte-identical to the
+                          non-speculative baseline cell — speculation
+                          must never trade exactness for speed.
+
+Wall-clock tok/s is host-dependent (engine_bench caveats apply); the
+acceptance/dispatch/sync columns and the outputs are deterministic
+given ``--seed``.  The acceptance gate in the committed baseline:
+spec K=8 must clear ``MIN_SPEEDUP``x the paged K=16 macro-step cell
+with ``outputs_match`` true (tests do not assert the wall-clock part;
+the committed JSON documents it).
+
+  PYTHONPATH=src python -m benchmarks.spec_bench --quick
+  PYTHONPATH=src python -m benchmarks.spec_bench --out bench_spec.json
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.configs import get_smoke_config
+from repro.experiments.results import save_results
+from repro.serving import PagedServingEngine, Request
+from repro.serving.instrument import instrument
+
+#: committed-baseline criterion: best speculative cell over the paged
+#: K=16 macro-step baseline on the high-acceptance trace
+MIN_SPEEDUP = 1.3
+DEFAULT_SPEC_KS = "4,8,16"
+
+
+def build_trace(n_requests: int, new_tokens: int, seed: int = 0,
+                vocab: int = 512) -> list:
+    """(submit_step, prompt, max_new) trace tuned for high acceptance:
+    short cyclic prompts (the n-gram table is seeded immediately) and
+    long generations (the stream's constant tail dominates the
+    unpredictable head).  Deterministic in ``seed`` via a tiny LCG —
+    the point is distinct per-request prompts, not realism."""
+    reqs, s = [], seed * 9973 + 12345
+    for i in range(n_requests):
+        s = (1103515245 * s + 12345) % (1 << 31)
+        base = [3 + (s + 7 * i) % (vocab // 4),
+                50 + (s // 7 + 11 * i) % (vocab // 4),
+                200 + (s // 11 + 13 * i) % (vocab // 4)]
+        reqs.append((4 * i, (base * 4)[:9], new_tokens))
+    return reqs
+
+
+def make_engine(cfg, *, speculative, decode_steps, max_rows, max_len,
+                block_size, num_blocks, prefill_chunk):
+    return PagedServingEngine(cfg, seed=0, speculative=speculative,
+                              max_rows=max_rows, max_len=max_len,
+                              block_size=block_size, num_blocks=num_blocks,
+                              prefill_chunk=prefill_chunk,
+                              decode_steps=decode_steps)
+
+
+def warmup(eng, k: int, prefill_chunk: int):
+    """Compile outside the timed phase.  One long-enough request covers
+    every prefill tail shape and — speculative engines — the single
+    fixed-width verify{K+1} program; macro-step baselines additionally
+    need the pow2 scan ladder (engine_bench.warmup rationale)."""
+    p_len = 2 * prefill_chunk
+    lengths, n = [], 1
+    while n < k:
+        lengths.append(n)
+        n *= 2
+    lengths.append(max(k, 17))  # long tail: spec reaches steady rounds
+    for n in lengths:
+        eng.submit(Request(id=-1000 - n, prompt=list(range(1, p_len + 1)),
+                           max_new_tokens=n))
+        eng.run()
+    eng.max_macro_tokens = 0
+
+
+def drive(eng, trace, k: int, prefill_chunk: int, reps: int = 3) -> dict:
+    """Replay ``trace`` ``reps`` times on one warmed-up engine, fastest
+    pass wins the wall-clock columns (engine_bench.drive rationale);
+    acceptance/dispatch/sync columns are per-pass deltas and identical
+    across passes, as are the outputs (asserted)."""
+    warmup(eng, k, prefill_chunk)
+    counts = instrument(eng)
+    spec_on = eng.spec is not None
+    best = None
+    outputs = None
+    for _ in range(max(1, reps)):
+        sync0, tok0 = eng.n_host_syncs, eng.tokens_generated
+        d0, a0, e0 = eng.spec_drafted, eng.spec_accepted, eng.spec_emitted
+        rr0, rounds0 = eng._spec_row_rounds, eng.spec_rounds
+        ver0, dec0 = counts.verify_dispatches, counts.decode_dispatches
+
+        t0_step = eng.t
+        pending = [(t + t0_step, Request(id=i, prompt=list(p),
+                                         max_new_tokens=n))
+                   for i, (t, p, n) in enumerate(trace)]
+        done = []
+        t0 = time.perf_counter()
+        while pending or eng.queue or not eng._idle():
+            while pending and pending[0][0] <= eng.t:
+                eng.submit(pending.pop(0)[1])
+            done += eng.step()
+        wall = time.perf_counter() - t0
+
+        done = [r for r in done if r.id >= 0]
+        outs = {r.id: list(r.out_tokens) for r in done}
+        if outputs is None:
+            outputs = outs
+        elif outs != outputs:
+            raise RuntimeError("outputs drifted across bench passes")
+        toks = eng.tokens_generated - tok0
+        syncs = eng.n_host_syncs - sync0
+        drafted = eng.spec_drafted - d0
+        row_rounds = eng._spec_row_rounds - rr0
+        row = {
+            "completed": len(done),
+            "tokens": toks,
+            "wall_s": wall,
+            "tok_per_s": toks / wall,
+            "spec_rounds": eng.spec_rounds - rounds0,
+            "acceptance_rate": ((eng.spec_accepted - a0) / drafted
+                                if drafted else 0.0),
+            "accept_mean": ((eng.spec_emitted - e0) / row_rounds
+                            if row_rounds else 1.0),
+            "verify_dispatches": counts.verify_dispatches - ver0,
+            "verify_per_token": ((counts.verify_dispatches - ver0)
+                                 / max(toks, 1)),
+            "decode_dispatches": counts.decode_dispatches - dec0,
+            "host_syncs": syncs,
+            "syncs_per_token": syncs / max(toks, 1),
+        }
+        if spec_on:
+            # the <= 1/K-style contract, checked live: one host sync
+            # per verify round, never per token
+            assert row["host_syncs"] == row["spec_rounds"], \
+                "speculative sync accounting drifted"
+        if best is None or row["tok_per_s"] > best["tok_per_s"]:
+            best = row
+    best["outputs"] = outputs
+    return best
+
+
+def main(configs: str = "smollm-360m", n_requests: int = 6,
+         new_tokens: int = 176, baseline_k: int = 16,
+         spec_ks: str = DEFAULT_SPEC_KS, max_rows: int = 2,
+         max_len: int = 256, block_size: int = 16, num_blocks: int = 32,
+         prefill_chunk: int = 8, reps: int = 3, seed: int = 0,
+         draft: str = "ngram", out: str | None = None):
+    k_list = [int(s) for s in str(spec_ks).split(",")]
+    geom = dict(max_rows=max_rows, max_len=max_len, block_size=block_size,
+                num_blocks=num_blocks, prefill_chunk=prefill_chunk)
+    rows = []
+    for arch in str(configs).split(","):
+        cfg = get_smoke_config(arch)
+        trace = build_trace(n_requests, new_tokens, seed,
+                            vocab=cfg.vocab_size)
+        print(f"\n== {arch} {n_requests} reqs x {new_tokens} new tokens, "
+              f"baseline paged K={baseline_k}, spec K in {k_list} "
+              f"({draft} draft) ==")
+        print(f"{'cell':>14s} {'K':>3s} {'tok/s':>8s} {'accept':>7s} "
+              f"{'acc_mean':>8s} {'verify/tok':>10s} {'sync/tok':>9s} "
+              f"{'match':>6s}")
+
+        def cell(name, k, r, ref=None):
+            r = dict(r)
+            outputs = r.pop("outputs")
+            r["k"] = k
+            r["outputs_match"] = ref is None or outputs == ref
+            print(f"{name:>14s} {k:3d} {r['tok_per_s']:8.1f} "
+                  f"{r['acceptance_rate']:7.3f} {r['accept_mean']:8.2f} "
+                  f"{r['verify_per_token']:10.4f} "
+                  f"{r['syncs_per_token']:9.4f} "
+                  f"{str(r['outputs_match']):>6s}")
+            rows.append({"arch": arch, "cell": name, **r})
+            return outputs, r
+
+        base = drive(make_engine(cfg, speculative=None,
+                                 decode_steps=baseline_k, **geom),
+                     trace, baseline_k, prefill_chunk, reps=reps)
+        ref, base_row = cell("baseline", baseline_k, base)
+        best = None
+        for k in k_list:
+            spec = k if draft == "ngram" else {"k": k, "draft": "model",
+                                               "draft_cfg": "smollm-360m"}
+            _, r = cell(f"spec-{draft}", k,
+                        drive(make_engine(cfg, speculative=spec,
+                                          decode_steps=1, **geom),
+                              trace, k, prefill_chunk, reps=reps),
+                        ref=ref)
+            if r["outputs_match"] and (best is None
+                                       or r["tok_per_s"]
+                                       > best["tok_per_s"]):
+                best = r
+        if best is not None:
+            gain = best["tok_per_s"] / base_row["tok_per_s"]
+            print(f"best spec K={best['k']} vs paged K={baseline_k}: "
+                  f"{gain:.2f}x tokens/s (criterion >= {MIN_SPEEDUP}x), "
+                  f"acceptance {best['acceptance_rate']:.3f}, "
+                  f"syncs/token {best['syncs_per_token']:.4f}")
+            rows.append({"arch": arch, "cell": "summary",
+                         "k": best["k"], "speedup_vs_baseline": gain,
+                         "min_speedup": MIN_SPEEDUP,
+                         "meets_criterion": gain >= MIN_SPEEDUP,
+                         "outputs_match": best["outputs_match"]})
+    if out:
+        save_results(out, rows, meta={
+            "section": "spec_bench", "configs": configs,
+            "n_requests": n_requests, "new_tokens": new_tokens,
+            "baseline_k": baseline_k, "spec_ks": spec_ks, "draft": draft,
+            "seed": seed, "reps": reps, **geom,
+            "note": "wall_s/tok_per_s are host-dependent; acceptance/"
+                    "dispatch/sync columns and outputs are deterministic "
+                    "given the seed; the trace is tuned for high n-gram "
+                    "acceptance (mechanism headroom, not fleet average)"})
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--configs", default="smollm-360m")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--new-tokens", type=int, default=176,
+                    help="generation length per request (longer = more "
+                         "of the stream is its predictable tail)")
+    ap.add_argument("--baseline-k", type=int, default=16,
+                    help="macro-step size of the non-speculative "
+                         "baseline cell")
+    ap.add_argument("--spec-ks", default=DEFAULT_SPEC_KS,
+                    help="comma list of draft lengths K")
+    ap.add_argument("--draft", default="ngram", choices=["ngram", "model"],
+                    help="draft provider for the speculative cells")
+    ap.add_argument("--rows", type=int, default=2)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=32)
+    ap.add_argument("--reps", type=int, default=3,
+                    help="timed passes per cell; fastest wins")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized: fewer/shorter requests, K in {4,8}")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.quick:
+        args.requests = 3
+        args.new_tokens = 48
+        args.spec_ks = "4,8"
+        args.reps = 2
+    main(configs=args.configs, n_requests=args.requests,
+         new_tokens=args.new_tokens, baseline_k=args.baseline_k,
+         spec_ks=args.spec_ks, max_rows=args.rows, max_len=args.max_len,
+         block_size=args.block_size, num_blocks=args.num_blocks,
+         reps=args.reps, seed=args.seed, draft=args.draft, out=args.out)

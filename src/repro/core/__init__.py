@@ -83,6 +83,16 @@ table):
                   TTFT and TPOT — rejected/unfinished count
                   as misses (the paper's on-time completion
                   ratio at the serving layer)
+  draft           K tokens proposed per row per verify round by   ``SpecConfig.provider`` (serving/speculative.py)
+                  a cheap provider (host n-gram table or a
+                  small shadow model) for the target model to
+                  score in one parallel chunk dispatch
+  acceptance      tokens emitted per row per verify round: the    ``greedy_verify_update`` (models/model.py),
+  length          longest draft prefix matching the target's      ``_EngineBase.spec_accept_mean``
+                  greedy argmax, + 1 correction/bonus token —
+                  its mean is the speculative speedup EC
+                  admission sees (``CapacityView.spec_accept``,
+                  serving analogue of a service-rate scale)
   ==============  ==============================================  ==========
 
 See README.md §Paper ↔ code mapping for the construct-level table,

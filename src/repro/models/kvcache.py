@@ -37,7 +37,15 @@ Cache layout invariants (relied on across models/serving/kernels):
   ``share_prefixes``): a block's content is a pure function of the
   token-id prefix it caches, a per-block refcount tracks its owners,
   and any write to a block with refcount > 1 first copies it
-  (SERVING.md §Prefix sharing).
+  (SERVING.md §Prefix sharing);
+* speculative write semantics: a draft-verify round writes KV for all
+  K+1 chunk positions unconditionally, then the engine advances
+  ``pos`` only past the accepted prefix — rejected positions become
+  ordinary stale KV (masked by position, overwritten by the next
+  chunk), which is why speculative rollback is a ledger-side position
+  decrement with **no KV rewrite**, and why it is gated to
+  pure-attention archs (stale SSM/recurrent state is not
+  position-masked; SERVING.md §Speculative decoding).
 """
 from __future__ import annotations
 

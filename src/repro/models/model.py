@@ -261,6 +261,44 @@ class Model:
         (caches, _, _, _), toks = jax.lax.scan(body, carry, None, length=k)
         return jnp.transpose(toks), caches
 
+    def verify_steps(self, params, caches, batch, paged=None):
+        """Teacher-forced parallel verification of K draft tokens (the
+        speculative-decoding scorer, SERVING.md §Speculative decoding).
+
+        One chunk-mode forward scores every draft position in a single
+        jitted dispatch: the (B, S) chunk ``[t0, d0..d_{S-2}]`` (the
+        row's next decode input followed by its K = S-1 draft tokens)
+        is embedded and run through the segment stack at positions
+        ``pos..pos+S-1``, writing KV exactly where sequential decode
+        would.  Greedy targets over the logical vocab are compared
+        against the drafts (:func:`greedy_verify_update`): row r emits
+        its longest exactly-matching draft prefix plus the greedy
+        correction/bonus token, clamped to ``budget[r]``; non-emitted
+        slots are -1.  Because every accepted draft *is* the greedy
+        target at its position, the emitted stream — and the KV
+        written at emitted positions — is byte-identical to plain
+        greedy decode; KV written above the accepted length is stale
+        by position (attention masks it, and the next round's writes
+        land on top), which is why the engines gate speculation to
+        pure-attention archs (`serving/speculative.py`).
+
+        batch: ``token`` (B, S) i32, ``pos`` (B,) i32 (position of
+        ``token[:, 0]``), ``budget`` (B,) i32 (max tokens this row may
+        emit; 0 masks the row).  With ``paged`` set the caches are
+        block pools; writes beyond a row's covered range land in the
+        scratch block (never read back below the accepted length).
+        Returns (emit (B, S) i32, caches).
+        """
+        x = embed(params["embed"], batch["token"]).astype(self.dtype)
+        x, new_caches, _ = tfm.apply_segments(
+            params["blocks"], x, cfg=self.cfg, mode="chunk",
+            segs=self.segments, pos=batch["pos"], caches=caches,
+            unroll=self.unroll, paged=paged)
+        logits = self._head(params, x)                   # (B,S,V_pad)
+        emit = greedy_verify_update(logits, batch["token"],
+                                    batch["budget"], self.cfg.vocab_size)
+        return emit, new_caches
+
     # ------------------------------------------------------------------
     # Paged-cache serving API (see serving/engine.py paged engines)
     # ------------------------------------------------------------------
@@ -320,6 +358,31 @@ def greedy_scan_update(logits, pos, budget, vocab: int):
     tok = jnp.where(budget > 0, nxt, 0)[:, None]
     pos = jnp.where(live, pos + 1, pos)
     return tok, pos, budget, emit
+
+
+def greedy_verify_update(logits, tokens, budget, vocab: int):
+    """Greedy draft-verification bookkeeping, shared by
+    :meth:`Model.verify_steps` and the pipelined fused verify
+    (`serving/pipeline.py`) so the acceptance semantics cannot drift.
+
+    ``logits`` (B, S, V_pad) score the fed chunk ``tokens`` (B, S) =
+    ``[t0, d0..d_{S-2}]``; the greedy target ``g[:, j]`` predicts the
+    token at position ``pos + j + 1``.  Draft ``d_j`` is accepted iff
+    every earlier draft matched and ``g[:, j] == d_j`` (the longest
+    exactly-matching prefix); the round then also emits ``g`` at the
+    first mismatch (the correction token) or, on full acceptance, at
+    the final position (the bonus token).  Emission is clamped to
+    ``budget`` and a zero-budget row emits nothing.  Since matched
+    drafts ARE the greedy targets, the emitted prefix is simply
+    ``g[:, :n_emit]`` — the exact greedy stream — with -1 in
+    non-emitted slots.
+    """
+    g = jnp.argmax(logits[:, :, :vocab], axis=-1).astype(jnp.int32)
+    match = (g[:, :-1] == tokens[:, 1:]).astype(jnp.int32)      # (B,S-1)
+    acc = jnp.cumprod(match, axis=1).sum(axis=1)                # (B,)
+    n_emit = jnp.minimum(acc + 1, budget)                       # (B,)
+    cols = jnp.arange(g.shape[1], dtype=jnp.int32)[None, :]
+    return jnp.where(cols < n_emit[:, None], g, -1)
 
 
 def ssm_row_isolated(apply_fn, segs, caches, row):

@@ -7,3 +7,5 @@ from repro.serving.scheduler import (  # noqa: F401
     POLICIES, QOS_CLASSES, EDFCapacityPolicy, EDFPolicy, FIFOPolicy,
     QoSClass, SchedulerPolicy, get_qos, goodput, make_policy,
     per_class_stats, slo_met)
+from repro.serving.speculative import (  # noqa: F401
+    ModelDraft, NgramDraft, SpecConfig, spec_supported)

@@ -76,6 +76,7 @@ from repro.models.kvcache import (PagedCache, paged_copy_blocks,
                                   paged_reset_row)
 from repro.serving.scheduler import (DEFER, REJECT, CapacityView,
                                      make_policy)
+from repro.serving.speculative import SpecConfig, spec_supported
 
 
 def chunk_sizes(n: int, chunk: int) -> List[int]:
@@ -142,7 +143,7 @@ class _EngineBase:
     MAX_STEPS = 512
 
     def __init__(self, cfg, *, prefill_chunk: int, decode_steps: int = 1,
-                 policy=None):
+                 policy=None, speculative=None):
         self.cfg = cfg
         self.prefill_chunk = max(1, prefill_chunk)
         self.decode_k = max(1, decode_steps)  # macro-step K
@@ -150,6 +151,19 @@ class _EngineBase:
         # default FIFO reproduces the historical admit/preempt order
         # bit-for-bit (tests/golden_decode.json)
         self.policy = make_policy(policy)
+        # draft-verify speculative decoding (serving/speculative.py):
+        # auto-gated off on archs whose cache cannot positionally roll
+        # back (SSM/SWA/cross/MoE), exactly like prefix sharing
+        self.spec = SpecConfig.make(speculative)
+        self.spec_gated_off = (self.spec is not None
+                               and not spec_supported(cfg))
+        if self.spec_gated_off:
+            self.spec = None
+        self.spec_rounds = 0     # verify rounds run
+        self.spec_drafted = 0    # draft tokens proposed (live rows)
+        self.spec_accepted = 0   # draft tokens emitted as matches
+        self.spec_emitted = 0    # tokens emitted by verify rounds
+        self._spec_row_rounds = 0  # live (row, round) pairs
         self.queue: List[Request] = []
         self.rejected: List[Request] = []
         self.unfinished: List[Request] = []  # in flight at last run() exit
@@ -267,6 +281,97 @@ class _EngineBase:
                 donate_argnums=(1,))
         return self._jits[key]
 
+    # ------------------------------------------------------------------
+    # draft-verify speculative decoding (SERVING.md §Speculative
+    # decoding; serving/speculative.py)
+    # ------------------------------------------------------------------
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of proposed draft tokens emitted as exact matches."""
+        return self.spec_accepted / max(1, self.spec_drafted)
+
+    def spec_accept_mean(self) -> float:
+        """Expected tokens emitted per live row per verify round (the
+        accepted length + 1 correction/bonus) — what EC admission sees
+        as the speculative service speedup (CapacityView.spec_accept)."""
+        if self._spec_row_rounds == 0:
+            return 1.0
+        return self.spec_emitted / self._spec_row_rounds
+
+    def _verify_jit(self, s: int):
+        """Lazily-compiled fused verify program for chunk width ``s`` =
+        K+1 (monolithic engines — requires ``self.model``; the
+        pipelined engines chain their stages in
+        ``_NetShimMixin._verify_chain_jit``)."""
+        key = f"verify{s}"
+        if key not in self._jits:
+            self._jits[key] = jax.jit(self.model.verify_steps,
+                                      donate_argnums=(1,))
+        return self._jits[key]
+
+    def _spec_tail(self, store, budgets: np.ndarray, active: List[int],
+                   max_len: int, t0: int) -> List[tuple]:
+        """Run one draft-verify round and do the host-side bookkeeping
+        (the speculative analogue of :meth:`_macro_tail`).
+
+        Each live row proposes K draft tokens (``spec.provider``), the
+        target scores all of them in one fused chunk dispatch
+        (``_forward_verify``), and the row advances by its accepted
+        length + 1 (correction/bonus), clamped to its budget.  Rollback
+        of rejected tails is purely positional: ``self.pos`` advances
+        only past emitted tokens, the paged ledger keeps its blocks
+        (stale KV above ``pos`` is position-masked and overwritten
+        before any future read), and no KV is rewritten.  One round ==
+        one engine clock step, so ``t_first``/TPOT stamps reflect the
+        speculative speedup; host syncs stay at one per round (between
+        1 and 1/(K+1) per emitted token).
+        """
+        K = self.spec.k
+        width = len(store)
+        tokens = np.zeros((width, K + 1), dtype=np.int32)
+        tokens[:, :1] = self._next_tokens(width, active, store)
+        for i in active:
+            req = store[i]
+            tokens[i, 1:] = self.spec.provider.propose(
+                i, req.prompt + req.out_tokens, K)
+            self.spec_drafted += K
+        out = self._forward_verify(tokens, self.pos.copy(), budgets)
+        self.n_host_syncs += 1
+        self.max_macro_tokens = max(self.max_macro_tokens,
+                                    int(budgets.sum()))
+        self.spec_rounds += 1
+        finished = []
+        for i in active:
+            req = store[i]
+            row = out[i]
+            v = int((row >= 0).sum())  # accepted length + 1, <= budget
+            if v > 0 and req.t_first is None and not req.out_tokens:
+                req.t_first = t0 + 1  # the round is one device step
+            emitted = [int(t) for t in row[:v]]
+            # matched drafts ARE the emitted tokens; the correction
+            # token (if emitted) differs from its draft by construction
+            self.spec_accepted += sum(
+                1 for j in range(min(v, K))
+                if emitted[j] == int(tokens[i, 1 + j]))
+            self.spec_emitted += v
+            self._spec_row_rounds += 1
+            req.out_tokens += emitted
+            self.tokens_generated += v
+            self.pos[i] += v
+            if req.done or self.pos[i] >= max_len - 1:
+                req.t_done = t0 + 1
+                finished.append((i, req))
+                self.policy.on_done(req, t0 + 1)
+        self.t = t0 + 1
+        return finished
+
+    def _forward_verify(self, tokens: np.ndarray, pos: np.ndarray,
+                        budgets: np.ndarray) -> np.ndarray:
+        """One fused draft-verify round over the (rows, K+1) chunk
+        ``[next input, K drafts]``.  Returns (rows, K+1) int32 emitted
+        tokens, -1 in non-emitted slots."""
+        raise NotImplementedError  # pragma: no cover - interface
+
     def step(self, k_cap: Optional[int] = None) -> List[Request]:
         raise NotImplementedError  # pragma: no cover - interface
 
@@ -322,9 +427,11 @@ class _SlotEngine(_EngineBase):
     """
 
     def __init__(self, cfg, *, max_batch: int, cache_len: int,
-                 prefill_chunk: int, decode_steps: int = 1, policy=None):
+                 prefill_chunk: int, decode_steps: int = 1, policy=None,
+                 speculative=None):
         super().__init__(cfg, prefill_chunk=prefill_chunk,
-                         decode_steps=decode_steps, policy=policy)
+                         decode_steps=decode_steps, policy=policy,
+                         speculative=speculative)
         self.max_batch = max_batch
         self.cache_len = cache_len
         self.pos = np.zeros(max_batch, dtype=np.int32)
@@ -345,7 +452,8 @@ class _SlotEngine(_EngineBase):
         block)."""
         return CapacityView(free_tokens=free_slots * self.cache_len,
                             total_tokens=self.max_batch * self.cache_len,
-                            granule=self.cache_len)
+                            granule=self.cache_len,
+                            spec_accept=self.spec_accept_mean())
 
     def _admit(self):
         """Prefill queued requests into free slots: ``prefill_chunk``
@@ -401,7 +509,11 @@ class _SlotEngine(_EngineBase):
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return []
-        k = (self.decode_k if k_cap is None
+        # a speculative round emits up to K+1 tokens per row in ONE
+        # device step, so its budget is token-denominated (drafts + the
+        # correction/bonus token), not scan-step-denominated
+        k = (self.spec.k + 1 if self.spec is not None
+             else self.decode_k if k_cap is None
              else max(1, min(self.decode_k, k_cap)))
         # per-row step budget: never decode past max_new_tokens or the
         # cache-headroom stop (pos >= cache_len - 1) inside the scan
@@ -411,9 +523,14 @@ class _SlotEngine(_EngineBase):
             budgets[i] = max(1, min(
                 k, req.max_new_tokens - len(req.out_tokens),
                 self.cache_len - 1 - int(self.pos[i])))
+        if self.spec is not None:
+            finished = self._spec_tail(self.slots, budgets, active,
+                                       self.cache_len, t0)
+        else:
+            finished = self._macro_tail(self.slots, budgets, active,
+                                        self.cache_len, t0, k_cap=k_cap)
         done = []
-        for i, req in self._macro_tail(self.slots, budgets, active,
-                                       self.cache_len, t0, k_cap=k_cap):
+        for i, req in finished:
             self.slots[i] = None
             self.policy.on_free(1, self.t)  # one slot granule returned
             done.append(req)
@@ -448,9 +565,10 @@ class _PagedEngine(_EngineBase):
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  prefill_chunk: int = 16, watermark_blocks: int = 0,
                  decode_steps: int = 1, policy=None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True, speculative=None):
         super().__init__(cfg, prefill_chunk=prefill_chunk,
-                         decode_steps=decode_steps, policy=policy)
+                         decode_steps=decode_steps, policy=policy,
+                         speculative=speculative)
         self.max_rows = max_rows
         self.max_len = max_len
         # prefix sharing defaults on: with no overlapping full-block
@@ -483,7 +601,8 @@ class _PagedEngine(_EngineBase):
         return CapacityView(free_tokens=self.pc.free_blocks * bs,
                             total_tokens=self.pc.num_blocks * bs,
                             granule=bs,
-                            shared_blocks=self.pc.probe_hit)
+                            shared_blocks=self.pc.probe_hit,
+                            spec_accept=self.spec_accept_mean())
 
     def _admit(self):
         """Token-level admission: the policy's choice admits whenever a
@@ -628,7 +747,10 @@ class _PagedEngine(_EngineBase):
         self.t += 1  # admission/rejection stamps land on the first step
         self.policy.on_step(self.t, self.queue, self._in_flight())
         self._admit()
-        k = (self.decode_k if k_cap is None
+        # a speculative round's budget is token-denominated (see
+        # _SlotEngine.step): _grow covers up to K+1 writes per row
+        k = (self.spec.k + 1 if self.spec is not None
+             else self.decode_k if k_cap is None
              else max(1, min(self.decode_k, k_cap)))
         budgets, clip = self._grow(k)
         # any copy-on-write the ledger queued (a row about to write a
@@ -640,11 +762,21 @@ class _PagedEngine(_EngineBase):
         active = [i for i, r in enumerate(self.rows) if r is not None]
         if not active:
             return []
-        caps = [c for c in (clip, k_cap) if c is not None]
-        cap = min(caps) if caps else None
+        if self.spec is not None:
+            # clip needs no special handling: emission clamps to the
+            # block-covered budget, the verify chunk's writes beyond it
+            # land in the scratch block (never read below the accepted
+            # length), and the SSM-resume hazard clip guards against
+            # cannot occur — speculation is gated to pure-attention archs
+            finished = self._spec_tail(self.rows, budgets, active,
+                                       self.max_len, t0)
+        else:
+            caps = [c for c in (clip, k_cap) if c is not None]
+            cap = min(caps) if caps else None
+            finished = self._macro_tail(self.rows, budgets, active,
+                                        self.max_len, t0, k_cap=cap)
         done = []
-        for i, req in self._macro_tail(self.rows, budgets, active,
-                                       self.max_len, t0, k_cap=cap):
+        for i, req in finished:
             self.rows[i] = None
             self._admit_order.remove(i)
             fb0 = self.pc.free_blocks
@@ -675,10 +807,11 @@ class ServingEngine(_SlotEngine):
     def __init__(self, cfg, params=None, *, max_batch: int = 4,
                  cache_len: int = 128, seed: int = 0,
                  prefill_chunk: int = 16, decode_steps: int = 1,
-                 policy=None):
+                 policy=None, speculative=None):
         super().__init__(cfg, max_batch=max_batch, cache_len=cache_len,
                          prefill_chunk=prefill_chunk,
-                         decode_steps=decode_steps, policy=policy)
+                         decode_steps=decode_steps, policy=policy,
+                         speculative=speculative)
         self.model = build_model(cfg)
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else self.model.init(key)
@@ -705,6 +838,16 @@ class ServingEngine(_SlotEngine):
         # per macro-step (counted in n_host_syncs; <= 1/K per token)
         return np.asarray(toks)
 
+    def _forward_verify(self, tokens: np.ndarray, pos: np.ndarray,
+                        budgets: np.ndarray) -> np.ndarray:
+        emit, self.caches = self._verify_jit(tokens.shape[1])(
+            self.params, self.caches,
+            {"token": jnp.asarray(tokens), "pos": jnp.asarray(pos),
+             "budget": jnp.asarray(budgets)})
+        # reprolint: disable-next=host-sync -- the ONE deliberate sync
+        # per verify round (counted in n_host_syncs; <= 1 per token)
+        return np.asarray(emit)
+
 
 class PagedServingEngine(_PagedEngine):
     """Monolithic paged engine: the continuous scheduler over one
@@ -721,13 +864,14 @@ class PagedServingEngine(_PagedEngine):
                  num_blocks: Optional[int] = None, seed: int = 0,
                  prefill_chunk: int = 16, watermark_blocks: int = 0,
                  decode_steps: int = 1, policy=None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True, speculative=None):
         super().__init__(cfg, max_rows=max_rows, max_len=max_len,
                          block_size=block_size, num_blocks=num_blocks,
                          prefill_chunk=prefill_chunk,
                          watermark_blocks=watermark_blocks,
                          decode_steps=decode_steps, policy=policy,
-                         prefix_sharing=prefix_sharing)
+                         prefix_sharing=prefix_sharing,
+                         speculative=speculative)
         self.model = build_model(cfg)
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else self.model.init(key)
@@ -769,3 +913,14 @@ class PagedServingEngine(_PagedEngine):
         # reprolint: disable-next=host-sync -- the ONE deliberate sync
         # per macro-step (counted in n_host_syncs; <= 1/K per token)
         return np.asarray(toks)
+
+    def _forward_verify(self, tokens: np.ndarray, pos: np.ndarray,
+                        budgets: np.ndarray) -> np.ndarray:
+        emit, self.caches = self._verify_jit(tokens.shape[1])(
+            self.params, self.caches,
+            {"token": jnp.asarray(tokens), "pos": jnp.asarray(pos),
+             "budget": jnp.asarray(budgets)},
+            self.pc.meta())
+        # reprolint: disable-next=host-sync -- the ONE deliberate sync
+        # per verify round (counted in n_host_syncs; <= 1 per token)
+        return np.asarray(emit)

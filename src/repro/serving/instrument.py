@@ -16,11 +16,12 @@ per-K macro-step jits are built lazily).
     ...
     counts.decode_dispatches / eng.tokens_generated   # <= 1/K + prefill
 
-Counter keys are the ``_jits`` names (``decode{k}``, ``prefill``,
-``reset``); pipelined engines' per-stage programs are prefixed
-``s{i}.``.  tests/test_engine_macro.py pins the dispatches-per-token
-regression; benchmarks/engine_bench.py reports the same numbers per
-engine/K cell.
+Counter keys are the ``_jits`` names (``decode{k}``, ``verify{s}``,
+``prefill``, ``reset``); pipelined engines' per-stage programs are
+prefixed ``s{i}.`` and a ModelDraft provider's programs ``draft.``.
+tests/test_engine_macro.py pins the dispatches-per-token regression;
+benchmarks/engine_bench.py and benchmarks/spec_bench.py report the
+same numbers per engine/K cell.
 """
 from __future__ import annotations
 
@@ -77,6 +78,24 @@ class EngineCounts:
                    if name.rsplit(".", 1)[-1] == "prefill")
 
     @property
+    def verify_dispatches(self) -> int:
+        """Fused draft-verify rounds (``verify{K+1}`` programs) —
+        deliberately NOT counted as decode dispatches: the hot-loop
+        ratio tests pin ``decode_dispatches`` to the plain macro-step
+        scan, and a speculative engine's analogue is
+        ``verify_dispatches / tokens_generated`` (between 1 and
+        1/(K+1))."""
+        return sum(n for name, n in self.counts.items()
+                   if name.rsplit(".", 1)[-1].startswith("verify"))
+
+    @property
+    def draft_dispatches(self) -> int:
+        """Draft-provider jit dispatches (``draft.*`` — a ModelDraft's
+        prefill chunks and proposal scans; 0 for host-only drafts)."""
+        return sum(n for name, n in self.counts.items()
+                   if name.startswith("draft."))
+
+    @property
     def total_dispatches(self) -> int:
         return sum(self.counts.values())
 
@@ -93,6 +112,10 @@ class EngineCounts:
         hot loop *calls* its programs; this says how many distinct
         programs those calls traced — the number that silently explodes
         when a shape or a captured Python value stops being stable.
+        Caveat: jax shares executable caches by underlying-function
+        identity, so jits over module-level functions (``reset``) can
+        see other engines' compiles — absolute assertions need a cold
+        cache (``jax.clear_caches()``), as test_engine_macro.py does.
         Entries without a compilation cache (e.g. a FakeEngine's plain
         callables, or an unexpectedly old jax) contribute zero, so a
         result of 0 means 'nothing measurable', not 'no compiles'."""
@@ -109,4 +132,8 @@ def instrument(engine) -> EngineCounts:
     for i, st in enumerate(getattr(engine, "stages", [])):
         st._jits = DispatchCounter(st._jits, ec.counts, prefix=f"s{i}.",
                                    raw=ec.raw)
+    spec = getattr(engine, "spec", None)
+    if spec is not None and hasattr(spec.provider, "_jits"):
+        spec.provider._jits = DispatchCounter(
+            spec.provider._jits, ec.counts, prefix="draft.", raw=ec.raw)
     return ec

@@ -61,8 +61,8 @@ from repro.microservice.partition import (StageSpec, decompose,
 from repro.models import build_model
 from repro.models.kvcache import (PagedCache, paged_copy_blocks,
                                   paged_reset_row)
-from repro.models.model import (greedy_scan_update, row_isolated,
-                                ssm_row_isolated)
+from repro.models.model import (greedy_scan_update, greedy_verify_update,
+                                row_isolated, ssm_row_isolated)
 from repro.models.transformer import segment_range
 from repro.serving.engine import (_PagedEngine, _SlotEngine,
                                   reset_cache_row)
@@ -372,6 +372,72 @@ class _NetShimMixin:
             self._ship(self.stages[-1].node, self.entry_node, n * 4 / 1e6)
 
     # ------------------------------------------------------------------
+    # fused draft-verify round: every stage chained inside one jitted
+    # chunk forward (the pipelined analogue of ``Model.verify_steps``)
+    # ------------------------------------------------------------------
+    def _verify_chain_jit(self, s: int):
+        """Fused verification of an (B, S) draft chunk across all
+        stages: one teacher-forced chunk forward chained through the
+        stage layer ranges (composition reproduces the monolithic
+        ``verify_steps`` op-for-op), then the greedy accept/emit mask
+        on device.  Named ``_verify_chain_jit`` (not ``_verify_jit``)
+        because ``_EngineBase._verify_jit`` wins the MRO and routes
+        monolithic models — the engines' ``_forward_verify`` below
+        calls this chain directly."""
+        key = f"verify{s}"
+        if key not in self._jits:
+            model = self.model
+            ranges = [(st.lo, st.hi) for st in self.stages]
+            vocab = self.cfg.vocab_size
+
+            def run(params_list, caches_list, tok, pos, budget,
+                    pmeta=None):
+                x = tok
+                new_list = []
+                for p, c, (lo, hi) in zip(params_list, caches_list,
+                                          ranges):
+                    x, nc, _ = model.run_stages(
+                        p, x, lo, hi, mode="chunk", pos=pos,
+                        caches=c, paged=pmeta)
+                    new_list.append(nc)
+                emit = greedy_verify_update(x, tok, budget, vocab)
+                return emit, new_list
+
+            self._jits[key] = jax.jit(run, donate_argnums=(1,))
+        return self._jits[key]
+
+    def _run_verify(self, tokens: np.ndarray, pos: np.ndarray,
+                    budgets: np.ndarray, pmeta=None) -> np.ndarray:
+        """Invoke the fused verify round, rebind every stage's caches
+        (they were donated), and account the per-round network hops."""
+        params_list = [st.params for st in self.stages]
+        caches_list = [st.caches for st in self.stages]
+        args = (() if pmeta is None else (pmeta,))
+        emit, new_caches = self._verify_chain_jit(tokens.shape[1])(
+            params_list, caches_list, jnp.asarray(tokens),
+            jnp.asarray(pos), jnp.asarray(budgets), *args)
+        for st, nc in zip(self.stages, new_caches):
+            st.caches = nc
+        self._account_verify(budgets, tokens.shape[1])
+        # reprolint: disable-next=host-sync -- the ONE deliberate sync
+        # per verify round (counted in n_host_syncs; <= 1 per token)
+        return np.asarray(emit)
+
+    def _account_verify(self, budgets: np.ndarray, s: int):
+        """Simulated-network accounting for one verify round: every
+        live row ships its whole (K+1)-token chunk at once — draft ids
+        entry->stage0, chunk activations between stages, emitted ids
+        back for detokenize.  One hop per round instead of one per
+        token is the speculative latency win on the wire."""
+        n = int((budgets > 0).sum())
+        if n == 0:
+            return
+        self._ship(self.entry_node, self.stages[0].node, n * s * 4 / 1e6)
+        for kk in range(len(self.stages)):
+            self._ship_between(kk, n * s, self._act_bytes)
+        self._ship(self.stages[-1].node, self.entry_node, n * s * 4 / 1e6)
+
+    # ------------------------------------------------------------------
     # network shim
     # ------------------------------------------------------------------
     def _ship(self, src: int, dst: int, mb: float):
@@ -403,10 +469,11 @@ class PipelinedEngine(_SlotEngine, _NetShimMixin):
                  prefill_chunk: int = 16, net=None,
                  placement: Optional[Dict[str, int]] = None,
                  entry_node: Optional[int] = None, decode_steps: int = 1,
-                 policy=None):
+                 policy=None, speculative=None):
         super().__init__(cfg, max_batch=max_batch, cache_len=cache_len,
                          prefill_chunk=prefill_chunk,
-                         decode_steps=decode_steps, policy=policy)
+                         decode_steps=decode_steps, policy=policy,
+                         speculative=speculative)
         self._init_stages_and_net(cfg, params, n_stages=n_stages,
                                   max_batch=max_batch, cache_len=cache_len,
                                   seed=seed, net=net, placement=placement,
@@ -433,6 +500,10 @@ class PipelinedEngine(_SlotEngine, _NetShimMixin):
                        budgets: np.ndarray, k: int) -> np.ndarray:
         return self._run_macro(tokens, pos, budgets, k)
 
+    def _forward_verify(self, tokens: np.ndarray, pos: np.ndarray,
+                        budgets: np.ndarray) -> np.ndarray:
+        return self._run_verify(tokens, pos, budgets)
+
 
 class PagedPipelinedEngine(_PagedEngine, _NetShimMixin):
     """Paged continuous-batching engine over placed core stages: the
@@ -451,13 +522,15 @@ class PagedPipelinedEngine(_PagedEngine, _NetShimMixin):
                  watermark_blocks: int = 0, net=None,
                  placement: Optional[Dict[str, int]] = None,
                  entry_node: Optional[int] = None, decode_steps: int = 1,
-                 policy=None, prefix_sharing: bool = True):
+                 policy=None, prefix_sharing: bool = True,
+                 speculative=None):
         super().__init__(cfg, max_rows=max_rows, max_len=max_len,
                          block_size=block_size, num_blocks=num_blocks,
                          prefill_chunk=prefill_chunk,
                          watermark_blocks=watermark_blocks,
                          decode_steps=decode_steps, policy=policy,
-                         prefix_sharing=prefix_sharing)
+                         prefix_sharing=prefix_sharing,
+                         speculative=speculative)
         self._init_stages_and_net(cfg, params, n_stages=n_stages,
                                   max_batch=max_rows, cache_len=max_len,
                                   seed=seed, net=net, placement=placement,
@@ -492,3 +565,8 @@ class PagedPipelinedEngine(_PagedEngine, _NetShimMixin):
                        budgets: np.ndarray, k: int) -> np.ndarray:
         return self._run_macro(tokens, pos, budgets, k,
                                pmeta=self.pc.meta())
+
+    def _forward_verify(self, tokens: np.ndarray, pos: np.ndarray,
+                        budgets: np.ndarray) -> np.ndarray:
+        return self._run_verify(tokens, pos, budgets,
+                                pmeta=self.pc.meta())

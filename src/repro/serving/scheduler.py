@@ -175,6 +175,11 @@ class CapacityView:
     # has no prefix index).  A cache hit shrinks the modeled service
     # demand in the effective-capacity admission test.
     shared_blocks: Optional[Callable[[List[int]], int]] = None
+    # speculative-decoding speedup: mean tokens emitted per live row
+    # per verify round (engine spec_accept_mean(); 1.0 when off).  The
+    # effective-capacity test scales *fixed* service-time priors by it
+    # — online-learned stats already observe the accelerated process.
+    spec_accept: float = 1.0
 
     def blocks(self, n_tokens: int) -> int:
         return -(-n_tokens // self.granule)
@@ -455,6 +460,14 @@ class EDFCapacityPolicy(EDFPolicy):
         shape, scale = self.service_stats()
         if shape is None:
             return DEFER, None
+        if self._fixed[0] is not None and view.spec_accept > 1.0:
+            # speculative decoding emits spec_accept tokens per row per
+            # step on average, so rows finish — and free blocks — that
+            # much faster.  Scaling the Gamma *scale* multiplies the
+            # mean freeing rate while keeping its shape (burstiness).
+            # Only fixed priors are discounted: the windowed EWMA
+            # estimate already observes the accelerated process.
+            scale = scale * view.spec_accept
         d = latency_budget(shape, scale, cls.eps, float(deficit))
         if d > slack:
             return REJECT, (

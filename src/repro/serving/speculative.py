@@ -1,0 +1,298 @@
+"""Draft-verify speculative decoding for the serving engines.
+
+Decode is memory-bandwidth-bound: one weight read per emitted token.
+Speculative decoding breaks that coupling — a cheap *draft* proposes K
+tokens per row, and the target model scores all K positions in **one**
+teacher-forced chunk forward (:meth:`repro.models.model.Model.
+verify_steps`), accepting the longest exactly-matching greedy prefix
+plus one correction/bonus token.  Greedy verification is *exact*: the
+emitted stream is byte-identical to plain greedy decode for any draft,
+any K, and any acceptance pattern (SERVING.md §Speculative decoding) —
+the drafts only change how many weight reads the stream costs.  This
+is the paper's "agile light service assists heavyweight core service"
+asymmetry applied to the token loop itself.
+
+Two draft providers ship:
+
+:class:`NgramDraft`
+    Self-drafting n-gram lookup over the request's own history (host
+    side, model-free, zero dispatches): match the longest recent
+    n-gram suffix, propose what followed it last time.  Greedy smoke
+    streams fall into short cycles, so acceptance is high exactly
+    where the win matters (long generations).
+:class:`ModelDraft`
+    A second, smaller model (e.g. a smollm-360m config drafting for
+    qwen2-72b) generating K greedy tokens against its own dense cache.
+    Rollback and preemption-resume are handled by syncing the draft
+    cache to the target history's common prefix — a pure position
+    truncation, no KV rewrite, legal because the draft config is
+    itself gated to pure-attention archs (stale KV above the
+    truncation point is position-masked).
+
+Arch gating: :func:`spec_supported` admits pure-attention decoder-only
+configs.  SSM/SWA state cannot be positionally rolled back (recurrent
+state and ring buffers have no "unwrite"), enc-dec/cross reads are
+unmasked, and MoE chunk verification co-batches all K+1 positions
+through expert-capacity routing (a different token mix than sequential
+decode — the same carve-out prefix sharing has).  Engines auto-gate
+``speculative=`` off on unsupported archs, mirroring
+``PagedCache.sharing_supported``.
+
+This module stays free of direct jax imports so the jax-free testbed
+(`serving/testbed.py`) can use :class:`SpecConfig`/:class:`NgramDraft`;
+:class:`ModelDraft` imports jax lazily on first use.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, List, Optional, Sequence
+
+import numpy as np
+
+
+def spec_supported(cfg) -> bool:
+    """Can ``cfg`` run draft-verify speculative decoding?
+
+    Pure-attention decoder-only configs only: every segment must be
+    full attention (``swa`` with a zero window degrades to full
+    attention and qualifies), no encoder-decoder, no MoE (chunk-mode
+    verification routes all K+1 positions through expert capacity at
+    once — not the sequential-decode token mix).
+    """
+    if getattr(cfg, "is_encoder_decoder", False):
+        return False
+    if getattr(cfg, "mlp_kind", "dense") == "moe":
+        return False
+    from repro.models.transformer import build_segments
+    for seg in build_segments(cfg):
+        if seg.kind == "attn":
+            continue
+        if seg.kind == "swa" and not cfg.window:
+            continue
+        return False
+    return True
+
+
+class NgramDraft:
+    """Self-drafting n-gram proposer (host-side, model-free).
+
+    ``propose`` finds the longest (up to ``n``) suffix of the history
+    that occurred earlier, and proposes the token that followed its
+    most recent earlier occurrence; proposals extend greedily (each
+    accepted proposal joins the working history).  With no match the
+    fallback repeats the last token.  Deterministic, stateless, and
+    free — the floor any model-based draft has to beat.
+    """
+
+    def __init__(self, n: int = 3):
+        self.n = max(1, int(n))
+
+    def propose(self, row: int, history: Sequence[int],
+                k: int) -> List[int]:
+        hist = list(history)
+        out: List[int] = []
+        for _ in range(k):
+            out.append(self._next(hist))
+            hist.append(out[-1])
+        return out
+
+    def _next(self, hist: List[int]) -> int:
+        if not hist:
+            return 0
+        for n in range(min(self.n, len(hist) - 1), 0, -1):
+            suf = hist[-n:]
+            for s in range(len(hist) - n - 1, -1, -1):
+                if hist[s:s + n] == suf:
+                    return hist[s + n]
+        return hist[-1]
+
+
+class ModelDraft:
+    """A second, smaller model proposes K greedy tokens per row.
+
+    The draft keeps one dense cache row per engine row plus a host-side
+    shadow ``_fed[row]`` — the token list whose KV its cache holds.
+    Each ``propose`` syncs the shadow to the target history's longest
+    common prefix (acceptance rollback, preemption-resume, and row
+    reuse all reduce to this truncation: stale draft KV above the
+    common prefix is position-masked, never rewritten), teacher-forces
+    the new history tail through chunked prefill, then runs a fused
+    ``decode_steps`` scan for K proposals — one draft sync per round,
+    counted in :attr:`n_host_syncs`.
+
+    The draft config must itself pass :func:`spec_supported` (the
+    truncation trick needs position-masked KV).  jax and the model
+    stack are imported lazily so this module stays importable on
+    jax-free hosts.
+    """
+
+    #: prefill chunking of teacher-forced history tails (pow2 tail
+    #: decomposition bounds the compiled program shapes, as in
+    #: serving/engine.py chunked admission)
+    PREFILL_CHUNK = 16
+
+    def __init__(self, cfg: Any = None, params: Any = None, *,
+                 seed: int = 0, cache_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.seed = seed
+        self.cache_len = cache_len
+        self.model = None
+        self.caches = None
+        self._fed: List[List[int]] = []
+        self._pos: Optional[np.ndarray] = None
+        self._jits: dict = {}
+        self.n_host_syncs = 0
+
+    # ------------------------------------------------------------- lazy
+    def _ensure(self, rows: int, length: int):
+        """(Re)allocate the draft cache to cover ``rows`` rows and
+        ``length`` positions; growth resets the shadow (rows simply
+        re-prefill on their next propose)."""
+        import jax
+        from repro.configs import get_smoke_config
+        from repro.models import build_model
+
+        if self.model is None:
+            cfg = self.cfg
+            if cfg is None or isinstance(cfg, str):
+                cfg = get_smoke_config(cfg or "smollm-360m")
+            if not spec_supported(cfg):
+                raise ValueError(
+                    "draft config must be a pure-attention decoder-only "
+                    "arch (spec_supported) — its cache rollback is a "
+                    "position truncation")
+            self.cfg = cfg
+            self.model = build_model(cfg)
+            if self.params is None:
+                self.params = self.model.init(jax.random.PRNGKey(self.seed))
+        if (self.caches is None or rows > len(self._fed)
+                or length > self.cache_len):
+            while self.cache_len < length:
+                self.cache_len *= 2
+            rows = max(rows, len(self._fed))
+            self.caches = self.model.init_cache(rows, self.cache_len)
+            self._fed = [[] for _ in range(rows)]
+            self._pos = np.zeros(rows, dtype=np.int32)
+
+    def _jit(self, key: str, fn, donate=(1,)):
+        import jax
+        if key not in self._jits:
+            self._jits[key] = jax.jit(fn, donate_argnums=donate)
+        return self._jits[key]
+
+    # ---------------------------------------------------------- propose
+    def propose(self, row: int, history: Sequence[int],
+                k: int) -> List[int]:
+        import functools
+
+        import jax.numpy as jnp
+
+        from repro.serving.engine import chunk_sizes
+
+        history = list(history)
+        self._ensure(row + 1, len(history) + k + 1)
+        fed = self._fed[row]
+        common = 0
+        for a, b in zip(fed, history):
+            if a != b:
+                break
+            common += 1
+        # teacher-force the unseen history tail (all but the last token,
+        # which seeds the proposal scan)
+        delta = history[common:-1]
+        i = 0
+        for c in chunk_sizes(len(delta), self.PREFILL_CHUNK):
+            fill = self._jit(f"draft_fill{c}", self.model.prefill_chunk)
+            _, self.caches = fill(
+                self.params, self.caches,
+                jnp.asarray(np.asarray(delta[i:i + c],
+                                       dtype=np.int32)[None]),
+                jnp.int32(common + i), jnp.int32(row))
+            i += c
+        pos = self._pos
+        pos[:] = [len(f) for f in self._fed]
+        pos[row] = len(history) - 1
+        tokens = np.zeros((len(self._fed), 1), dtype=np.int32)
+        tokens[row, 0] = history[-1]
+        budgets = np.zeros(len(self._fed), dtype=np.int32)
+        budgets[row] = k
+        step = self._jit(
+            f"draft_step{k}",
+            functools.partial(self.model.decode_steps, k=k))
+        toks, self.caches = step(
+            self.params, self.caches,
+            {"token": jnp.asarray(tokens), "pos": jnp.asarray(pos.copy()),
+             "budget": jnp.asarray(budgets)})
+        out = [int(t) for t in np.asarray(toks)[row]]
+        self.n_host_syncs += 1
+        # the scan fed history[-1] then its own first k-1 proposals
+        self._fed[row] = history + out[:-1]
+        return out
+
+
+@dataclass
+class SpecConfig:
+    """Speculative-decoding knob bundle (the engines' ``speculative=``).
+
+    ``k``
+        draft length per row per verify round; each round emits
+        between 1 and ``k + 1`` tokens per live row (matched prefix +
+        correction/bonus), so the host-sync cost is between 1 and
+        ``1/(k+1)`` per token.
+    ``draft`` / ``ngram`` / ``draft_cfg``
+        provider selection: ``"ngram"`` (default, n-gram order
+        ``ngram``) or ``"model"`` (a :class:`ModelDraft` over
+        ``draft_cfg`` — a ModelConfig, a smoke-config name, or None
+        for smollm-360m).
+    ``provider``
+        a pre-built draft provider (anything with
+        ``propose(row, history, k) -> list[int]``) — overrides
+        ``draft``; the testbed's scripted oracles plug in here.
+
+    :meth:`make` normalizes what engines accept: ``None``/``False``
+    (off), an int K, a dict of these fields, a provider instance, or a
+    SpecConfig.  It always returns a *fresh* config with a fresh
+    provider (unless one was given explicitly) — providers hold
+    per-row state, so engines must never share one, mirroring
+    ``make_policy``.
+    """
+
+    k: int = 4
+    draft: str = "ngram"
+    ngram: int = 3
+    draft_cfg: Any = None
+    provider: Any = None
+    seed: int = 0
+
+    @staticmethod
+    def make(spec) -> Optional["SpecConfig"]:
+        if spec is None or spec is False:
+            return None
+        if spec is True:
+            cfg = SpecConfig()
+        elif isinstance(spec, SpecConfig):
+            cfg = dataclasses.replace(spec)
+        elif isinstance(spec, int):
+            cfg = SpecConfig(k=spec)
+        elif isinstance(spec, dict):
+            cfg = SpecConfig(**spec)
+        elif hasattr(spec, "propose"):
+            cfg = SpecConfig(provider=spec)
+        else:
+            raise ValueError(
+                f"speculative= takes None/bool/int K/dict/SpecConfig/"
+                f"draft provider, got {spec!r}")
+        if cfg.k < 1:
+            raise ValueError(f"speculative draft length k must be >= 1, "
+                             f"got {cfg.k}")
+        if cfg.provider is None:
+            if cfg.draft == "model":
+                cfg.provider = ModelDraft(cfg.draft_cfg, seed=cfg.seed)
+            elif cfg.draft == "ngram":
+                cfg.provider = NgramDraft(n=cfg.ngram)
+            else:
+                raise ValueError(f"unknown draft kind {cfg.draft!r}; "
+                                 f"known: 'ngram', 'model'")
+        return cfg

@@ -29,10 +29,20 @@ tests/test_scheduler_props.py), and the goodput benchmark's
 FIFO-vs-EDF deltas come from the same state machine the JAX engines
 run (benchmarks/goodput_bench.py drives FakeEngine for its committed
 baseline so the numbers are host-independent).
+
+Speculative decoding runs here too: ``_forward_verify`` scores a
+draft chunk against the same recurrence (greedy target per position,
+longest matching prefix + correction, budget-clamped — the numpy
+mirror of :func:`repro.models.model.greedy_verify_update`), and
+:class:`ScriptedDraft` is a schedule-driven provider that proposes
+exactly ``a`` correct tokens per round — so acceptance-dependent
+scheduler paths (budget clamps, rollback accounting, the EC
+spec_accept discount) are unit-testable with *chosen* acceptance
+patterns (tests/test_spec_decode.py, tests/test_differential.py).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -57,6 +67,34 @@ def fake_stream(prompt, n: int) -> list:
     return out
 
 
+class ScriptedDraft:
+    """Schedule-driven draft provider for the testbed.
+
+    ``schedule[r]`` (cycled; default all-``k``) is how many of the K
+    proposals in round ``r`` are *correct* — the true recurrence
+    continuation of the row's history — before the provider switches
+    to deliberately-wrong tokens (``(true + 1) % _MOD``).  The engine
+    must then emit exactly ``min(a, K) + 1`` tokens for an unclamped
+    row (accepted prefix + correction/bonus), which makes acceptance
+    accounting and rollback arithmetic exactly predictable.  Rounds
+    are counted per row, mirroring how providers see one ``propose``
+    per live row per verify round.
+    """
+
+    def __init__(self, schedule: Optional[Sequence[int]] = None):
+        self.schedule = list(schedule) if schedule else None
+        self._round: dict = {}
+
+    def propose(self, row: int, history: Sequence[int], k: int) -> list:
+        r = self._round.get(row, 0)
+        self._round[row] = r + 1
+        a = k if self.schedule is None else self.schedule[r % len(
+            self.schedule)]
+        true = fake_stream(history, k)
+        return [t if j < a else (t + 1) % _MOD
+                for j, t in enumerate(true)]
+
+
 class FakeEngine(_PagedEngine):
     """The real paged scheduler over a scripted integer decoder."""
 
@@ -64,14 +102,15 @@ class FakeEngine(_PagedEngine):
                  block_size: int = 8, num_blocks: Optional[int] = None,
                  prefill_chunk: int = 16, watermark_blocks: int = 0,
                  decode_steps: int = 1, policy=None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True, speculative=None):
         cfg = cfg or get_smoke_config("smollm-360m")
         super().__init__(cfg, max_rows=max_rows, max_len=max_len,
                          block_size=block_size, num_blocks=num_blocks,
                          prefill_chunk=prefill_chunk,
                          watermark_blocks=watermark_blocks,
                          decode_steps=decode_steps, policy=policy,
-                         prefix_sharing=prefix_sharing)
+                         prefix_sharing=prefix_sharing,
+                         speculative=speculative)
 
     # ------------------------------------------------------- no devices
     def _reset_row(self, row: int):
@@ -88,4 +127,28 @@ class FakeEngine(_PagedEngine):
             for j in range(k):
                 tok = (_A * tok + _B * (p + j) + _C) % _MOD
                 out[i, j] = tok
+        return out
+
+    def _forward_verify(self, tokens: np.ndarray, pos: np.ndarray,
+                        budgets: np.ndarray) -> np.ndarray:
+        """Numpy mirror of ``Model.verify_steps`` over the testbed
+        recurrence: the greedy "target" at chunk slot j is the
+        recurrence applied to the *fed* token ``tokens[i, j]``, so the
+        accepted length is the longest prefix where drafts reproduce
+        the true continuation; emission is the accepted prefix plus
+        one correction, clamped to the row budget (-1 padding)."""
+        s = tokens.shape[1]
+        out = np.full((len(tokens), s), -1, dtype=np.int32)
+        for i in range(len(tokens)):
+            b = int(budgets[i])
+            if b <= 0:
+                continue
+            p = int(pos[i])
+            g = [(_A * int(tokens[i, j]) + _B * (p + j) + _C) % _MOD
+                 for j in range(s)]
+            acc = 0
+            while acc < s - 1 and g[acc] == int(tokens[i, acc + 1]):
+                acc += 1
+            n = min(acc + 1, b)
+            out[i, :n] = g[:n]
         return out

@@ -15,11 +15,22 @@ The example stream is seeded from a stable hash of the test's qualified
 name, so a failure reproduces identically on every run and machine
 (no PYTHONHASHSEED dependence).  On failure the falsifying example is
 attached to the raised error, mimicking hypothesis' report.
+
+Failure reporting is robust to hostile exceptions: an exception whose
+``args[0]`` is not a string (``OSError(2, "...")`` renders from
+``errno``/``strerror``, ignoring args mutation) or that is annotated
+by several nested ``given`` layers used to silently *lose* the
+per-case reproduction info.  Every annotation is therefore (a)
+appended to ``e._propcheck_notes``, (b) printed to stderr (pytest
+shows captured stderr for failing tests), and (c) best-effort
+prepended to string ``args`` — so the seed + case index survive no
+matter how the exception renders (tests/test_propcheck.py).
 """
 from __future__ import annotations
 
 import functools
 import inspect
+import sys
 import zlib
 
 import numpy as np
@@ -81,21 +92,52 @@ def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
     return deco
 
 
+def attach_note(e: BaseException, note: str):
+    """Attach a reproduction note so it survives any exception type.
+
+    Mutating ``e.args`` alone silently loses the note for exceptions
+    that do not render their args (``OSError`` prints from
+    ``errno``/``strerror``) and garbles multi-arg constructors, so the
+    note also lands on ``e._propcheck_notes`` (machine-readable, one
+    entry per nested ``given`` layer, innermost first) and on stderr
+    (pytest surfaces captured stderr for failing tests).
+    """
+    notes = getattr(e, "_propcheck_notes", None)
+    if notes is None:
+        notes = []
+        try:
+            e._propcheck_notes = notes
+        except Exception:  # __slots__-only exception: stderr still has it
+            pass
+    notes.append(note)
+    print(f"_propcheck: {note}", file=sys.stderr)
+    try:
+        if e.args and isinstance(e.args[0], str):
+            e.args = (f"{note} -- {e.args[0]}",) + e.args[1:]
+        else:
+            e.args = (note,) + tuple(e.args)
+    except Exception:  # exceptions may refuse args mutation entirely
+        pass
+
+
 def given(**strats):
     def deco(fn):
+        seed = zlib.crc32(fn.__qualname__.encode("utf-8"))
+
         @functools.wraps(fn)
         def wrapper(*args, **kwargs):
             n = getattr(wrapper, "_propcheck_max_examples",
                         DEFAULT_MAX_EXAMPLES)
-            rng = np.random.default_rng(
-                zlib.crc32(fn.__qualname__.encode("utf-8")))
+            rng = np.random.default_rng(seed)
             for i in range(n):
                 drawn = {k: s.example_from(rng) for k, s in strats.items()}
                 try:
                     fn(*args, **drawn, **kwargs)
                 except Exception as e:
-                    e.args = (f"falsifying example #{i}: {drawn!r} -- "
-                              f"{e.args[0] if e.args else ''}",) + e.args[1:]
+                    attach_note(
+                        e, f"falsifying example #{i}: {drawn!r} "
+                           f"[{fn.__qualname__}: seed={seed}, "
+                           f"case {i + 1}/{n}]")
                     raise
         wrapper._propcheck_max_examples = getattr(
             fn, "_propcheck_max_examples", DEFAULT_MAX_EXAMPLES)

@@ -66,6 +66,11 @@ def test_compile_count_stable_across_traces():
     across a two-trace run: the second, identically-shaped trace must
     add ZERO compiled programs, and a third request needing one new
     power-of-two tail macro must add exactly one."""
+    import jax
+    # absolute program counts need a cold cache: jax shares executable
+    # caches by underlying-function identity, so the module-level
+    # reset jit would otherwise see other tests' engines' compiles
+    jax.clear_caches()
     cfg = get_smoke_config("smollm-360m")
     eng = ServingEngine(cfg, max_batch=2, cache_len=64, prefill_chunk=4,
                         decode_steps=8)

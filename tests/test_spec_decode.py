@@ -1,0 +1,230 @@
+"""JAX-free unit tests for speculative decoding scheduler paths.
+
+Driven through :class:`repro.serving.testbed.FakeEngine` — the real
+``_PagedEngine`` state machine with a numpy verify oracle — and
+:class:`ScriptedDraft`, whose per-round acceptance schedule makes
+rollback/budget arithmetic exactly predictable.  Byte-identity of the
+streams themselves is pinned by tests/test_differential.py (randomized)
+and tests/test_speculative.py (real models); here we pin the
+*accounting*: budget clamps, position rollback, host-sync and counter
+bookkeeping, EC admission's spec_accept discount, and SpecConfig
+normalization.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.engine import Request
+from repro.serving.scheduler import (ADMIT, DEFER, REJECT, CapacityView,
+                                     EDFCapacityPolicy)
+from repro.serving.speculative import NgramDraft, SpecConfig
+from repro.serving.testbed import FakeEngine, ScriptedDraft, fake_stream
+
+
+def drive(spec, prompts=((1, 2, 3), (5, 6)), n=20, **kw):
+    kw.setdefault("max_len", 96)
+    eng = FakeEngine(speculative=spec, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(id=i, prompt=list(p), max_new_tokens=n))
+    done = eng.run()
+    return eng, {r.id: r for r in done}
+
+
+# ----------------------------------------------------------------------
+# stream correctness against the testbed oracle
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("k", [1, 4, 8])
+def test_spec_stream_matches_oracle(k):
+    eng, done = drive(k)
+    for r in done.values():
+        assert r.out_tokens == fake_stream(r.prompt, len(r.out_tokens))
+        assert len(r.out_tokens) == r.max_new_tokens
+
+
+def test_scripted_acceptance_schedule_exact():
+    """schedule=[a] with K drafts emits exactly min(a, K) + 1 tokens
+    per row per round (accepted prefix + correction/bonus)."""
+    for a, k, per_round in [(0, 4, 1), (2, 4, 3), (4, 4, 5), (6, 4, 5)]:
+        eng, done = drive({"k": k, "provider": ScriptedDraft([a])},
+                          prompts=[(1, 2, 3)], n=15, max_rows=1)
+        r = done[0]
+        assert r.out_tokens == fake_stream(r.prompt, 15)
+        full, rem = divmod(15, per_round)
+        assert eng.spec_rounds == full + (1 if rem else 0)
+        assert eng.spec_accept_mean() == pytest.approx(
+            15 / eng.spec_rounds)
+
+
+def test_budget_clamp_max_new_tokens():
+    """A row one token from its max_new_tokens cap emits exactly one
+    token from a fully-accepting verify round — never overshoots."""
+    eng, done = drive({"k": 8, "provider": ScriptedDraft()},
+                      prompts=[(1, 2, 3)], n=1, max_rows=1)
+    assert done[0].out_tokens == fake_stream([1, 2, 3], 1)
+    assert eng.spec_rounds == 1 and eng.spec_emitted == 1
+
+
+def test_rollback_accounting():
+    """pos advances only by emitted tokens; rejected draft tails leave
+    no trace in the ledger-visible position or the token counters."""
+    eng = FakeEngine(speculative={"k": 4, "provider": ScriptedDraft([1])},
+                     max_rows=1, max_len=96)
+    eng.submit(Request(id=0, prompt=[1, 2, 3], max_new_tokens=12))
+    plen = 3
+    emitted = 0
+    while not eng._idle():
+        eng.step()
+        req = eng.rows[0]
+        if req is not None:
+            emitted = len(req.out_tokens)
+            # emitted <= 2/round (schedule [1]); pos = prompt KV + out
+            assert emitted == eng.spec_emitted
+            assert int(eng.pos[0]) == plen - 1 + emitted
+    assert eng.spec_drafted == 4 * eng.spec_rounds
+    assert eng.spec_accepted == 1 * eng.spec_rounds
+
+
+def test_one_host_sync_per_round():
+    eng, done = drive({"k": 4, "provider": ScriptedDraft()}, n=24)
+    # prefill/reset are host no-ops in the testbed: every sync is a
+    # verify round — <= 1 sync/round, and each live row contributes at
+    # most K+1 tokens per round (the 1/(K+1) syncs-per-token floor)
+    assert eng.n_host_syncs == eng.spec_rounds
+    assert eng._spec_row_rounds * (4 + 1) >= eng.spec_emitted
+
+
+def test_acceptance_rate_bounds():
+    eng, _ = drive({"k": 4, "provider": ScriptedDraft([0, 4, 2])}, n=30)
+    assert 0.0 <= eng.acceptance_rate <= 1.0
+    assert 1.0 <= eng.spec_accept_mean() <= 5.0
+    # non-spec engine: neutral telemetry
+    eng2, _ = drive(None)
+    assert eng2.acceptance_rate == 0.0
+    assert eng2.spec_accept_mean() == 1.0
+    assert eng2.spec_rounds == 0
+
+
+def test_spec_off_identical_to_baseline():
+    _, base = drive(None)
+    _, spec = drive({"k": 4, "provider": ScriptedDraft()})
+    for i, r in base.items():
+        assert spec[i].out_tokens == r.out_tokens
+
+
+def test_preemption_resume_under_spec():
+    """A tight pool forces preempt-by-recompute mid-stream; resumed
+    rows must still match the oracle byte-for-byte."""
+    eng, done = drive({"k": 4, "provider": ScriptedDraft([4, 0])},
+                      prompts=[(1, 2, 3), (5, 6), (9, 9, 9, 2)],
+                      n=18, max_rows=2, block_size=8, num_blocks=8)
+    assert done and all(
+        r.out_tokens == fake_stream(r.prompt, len(r.out_tokens))
+        for r in done.values())
+
+
+# ----------------------------------------------------------------------
+# EC admission: spec_accept discount
+# ----------------------------------------------------------------------
+def _view(free, total, granule=8, spec_accept=1.0):
+    return CapacityView(free_tokens=free, total_tokens=total,
+                        granule=granule, spec_accept=spec_accept)
+
+
+def test_ec_discount_admits_with_speculative_speedup():
+    """With fixed Gamma priors, a deficit too slow to clear at 1
+    token/step clears in time at spec_accept tokens/step: the verdict
+    flips REJECT -> DEFER (waiting is now worth it)."""
+    def verdict(spec_accept):
+        pol = EDFCapacityPolicy(service_shape=1.0, service_scale=0.35)
+        req = Request(id=0, prompt=list(range(64)), max_new_tokens=8,
+                      qos="interactive")
+        req.t_submit = 0
+        return pol.admission_test(
+            req, 2, _view(0, 256, spec_accept=spec_accept))[0]
+
+    assert verdict(1.0) == REJECT
+    assert verdict(4.0) == DEFER
+
+
+def test_ec_discount_only_scales_fixed_priors():
+    """Online-learned service stats observe the accelerated process
+    already — spec_accept must not double-discount them."""
+    pol = EDFCapacityPolicy()
+    for _ in range(2 * pol.MIN_SAMPLES * pol.SAMPLE_WINDOW):
+        pol.on_step(pol._last_t + 1 if pol._last_t else 1, [], [])
+        pol.on_free(1, 0)
+    shape, scale = pol.service_stats()
+    assert shape is not None
+    req = Request(id=0, prompt=list(range(64)), max_new_tokens=8,
+                  qos="interactive")
+    req.t_submit = 0
+    t = 2 * pol.MIN_SAMPLES * pol.SAMPLE_WINDOW + 1
+    v1 = pol.admission_test(req, t, _view(0, 256, spec_accept=1.0))
+    v4 = pol.admission_test(req, t, _view(0, 256, spec_accept=4.0))
+    assert v1 == v4  # learned stats: discount is a no-op
+
+
+def test_capacity_view_defaults_spec_accept():
+    assert _view(0, 64).spec_accept == 1.0
+
+
+# ----------------------------------------------------------------------
+# SpecConfig normalization + draft providers
+# ----------------------------------------------------------------------
+def test_spec_config_make_forms():
+    assert SpecConfig.make(None) is None
+    assert SpecConfig.make(False) is None
+    assert SpecConfig.make(True).k == 4
+    assert SpecConfig.make(7).k == 7
+    cfg = SpecConfig.make({"k": 2, "ngram": 5})
+    assert cfg.k == 2 and isinstance(cfg.provider, NgramDraft)
+    assert cfg.provider.n == 5
+    sd = ScriptedDraft()
+    assert SpecConfig.make(sd).provider is sd
+    with pytest.raises(ValueError):
+        SpecConfig.make(0)
+    with pytest.raises(ValueError):
+        SpecConfig.make({"draft": "quantum"})
+    with pytest.raises(ValueError):
+        SpecConfig.make("ngram")
+
+
+def test_spec_config_never_shares_providers():
+    proto = SpecConfig(k=2)
+    a, b = SpecConfig.make(proto), SpecConfig.make(proto)
+    assert a is not proto and a is not b
+    assert a.provider is not b.provider
+
+
+def test_ngram_draft_repeats_and_matches():
+    d = NgramDraft(n=3)
+    # cyclic history: the n-gram index recovers the cycle exactly
+    hist = [1, 2, 3] * 4
+    assert d.propose(0, hist, 4) == [1, 2, 3, 1]
+    # no match anywhere: fall back to repeating the last token
+    assert d.propose(0, [9], 3) == [9, 9, 9]
+    assert d.propose(0, [], 2) == [0, 0]
+
+
+def test_gated_arch_disables_spec():
+    from repro.configs import get_smoke_config
+    eng = FakeEngine(cfg=get_smoke_config("falcon-mamba-7b"),
+                     speculative=4)
+    assert eng.spec is None and eng.spec_gated_off
+    eng.submit(Request(id=0, prompt=[1, 2, 3], max_new_tokens=6))
+    done = eng.run()
+    assert done[0].out_tokens == fake_stream([1, 2, 3], 6)
+    assert eng.spec_rounds == 0
+
+
+def test_timestamps_stamped_per_round():
+    """One verify round is one engine step: t_first lands on the same
+    device step as admission (non-spec convention) no matter how many
+    tokens the round emitted, and t_done on the *round's* step — an
+    18-token stream at 9 tokens/round finishes at step 2, which is the
+    TPOT speedup the stamps must reflect."""
+    eng, done = drive({"k": 8, "provider": ScriptedDraft()},
+                      prompts=[(1, 2, 3)], n=18, max_rows=1)
+    r = done[0]
+    assert r.t_first == r.t_admit
+    assert r.t_submit <= r.t_admit <= r.t_first <= r.t_done
+    assert r.t_done == r.t_first + eng.spec_rounds - 1

@@ -1,0 +1,144 @@
+"""Real-model speculative-decoding parity tests.
+
+The exactness contract: speculative streams are byte-identical to
+non-speculative greedy streams for every supported arch × K ∈ {1, 4, 8}
+— including preemption-resume and mid-stream admission — because every
+accepted draft IS the greedy target at its position and rollback is a
+pure position decrement (SERVING.md §Speculative decoding).
+
+Tier split: the smollm-360m column runs in tier-1; the bigger
+supported archs (qwen2-72b, command-r-35b) and the model-draft
+end-to-end cell are ``tier2`` (see TOOLING.md §Test tiers).
+tests/test_differential.py fuzzes the cross-engine diagonal;
+tests/test_spec_decode.py pins the JAX-free scheduler accounting.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.serving.engine import PagedServingEngine, Request, ServingEngine
+from repro.serving.instrument import instrument
+from repro.serving.speculative import spec_supported
+
+ARCHS = ["smollm-360m",
+         pytest.param("qwen2-72b", marks=pytest.mark.tier2),
+         pytest.param("command-r-35b", marks=pytest.mark.tier2)]
+
+PROMPTS = [[1, 2, 3, 4], [7, 8, 9], [5, 6, 5, 6, 5], [11, 3, 7, 2]]
+
+
+def run_paged(cfg, spec, *, num_blocks=10, max_rows=2, n=18):
+    """Tight pool (forces preemption) + mid-stream admission."""
+    eng = PagedServingEngine(cfg, seed=0, speculative=spec,
+                             max_rows=max_rows, max_len=48, block_size=8,
+                             num_blocks=num_blocks)
+    for i, p in enumerate(PROMPTS[:2]):
+        eng.submit(Request(id=i, prompt=list(p), max_new_tokens=n))
+    for _ in range(3):
+        eng.step()
+    for i, p in enumerate(PROMPTS[2:], start=2):
+        eng.submit(Request(id=i, prompt=list(p), max_new_tokens=n))
+    done = eng.run()
+    assert len(done) == len(PROMPTS)
+    return eng, {r.id: r.out_tokens for r in done}
+
+
+@pytest.fixture(scope="module")
+def baselines():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cache[arch] = run_paged(get_smoke_config(arch), None)[1]
+        return cache[arch]
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("k", [1, 4, 8])
+def test_spec_parity_paged(arch, k, baselines):
+    cfg = get_smoke_config(arch)
+    assert spec_supported(cfg)
+    eng, got = run_paged(cfg, k)
+    assert got == baselines(arch)
+    assert eng.spec_rounds > 0
+    assert 0.0 <= eng.acceptance_rate <= 1.0
+
+
+def test_spec_parity_dense_smollm():
+    cfg = get_smoke_config("smollm-360m")
+
+    def run(spec):
+        eng = ServingEngine(cfg, seed=0, speculative=spec, max_batch=3,
+                            cache_len=48)
+        for i, p in enumerate(PROMPTS):
+            eng.submit(Request(id=i, prompt=list(p), max_new_tokens=16))
+        return eng, {r.id: r.out_tokens for r in eng.run()}
+
+    _, base = run(None)
+    for k in (1, 4, 8):
+        eng, got = run(k)
+        assert got == base
+        # host syncs: exactly one per verify round, fewer rounds than
+        # emitted tokens once anything is accepted
+        assert eng.n_host_syncs == eng.spec_rounds
+
+
+@pytest.mark.tier2
+def test_model_draft_end_to_end(baselines):
+    """smollm-360m drafting for qwen2-72b: still byte-identical, and
+    the draft's own jit dispatches are visible under the ``draft.``
+    instrumentation prefix."""
+    cfg = get_smoke_config("qwen2-72b")
+    eng = PagedServingEngine(cfg, seed=0, max_rows=2, max_len=48,
+                             block_size=8, num_blocks=10,
+                             speculative={"k": 4, "draft": "model",
+                                          "draft_cfg": "smollm-360m"})
+    counts = instrument(eng)
+    for i, p in enumerate(PROMPTS[:2]):
+        eng.submit(Request(id=i, prompt=list(p), max_new_tokens=18))
+    for _ in range(3):
+        eng.step()
+    for i, p in enumerate(PROMPTS[2:], start=2):
+        eng.submit(Request(id=i, prompt=list(p), max_new_tokens=18))
+    done = eng.run()
+    got = {r.id: r.out_tokens for r in done}
+    assert got == baselines("qwen2-72b")
+    assert counts.verify_dispatches == eng.spec_rounds
+    assert counts.draft_dispatches > 0
+    assert counts.decode_dispatches == 0  # spec replaces the macro scan
+
+
+def test_verify_dispatch_accounting():
+    cfg = get_smoke_config("smollm-360m")
+    eng = PagedServingEngine(cfg, seed=0, speculative=4, max_rows=2,
+                             max_len=48, block_size=8, num_blocks=16)
+    counts = instrument(eng)
+    eng.submit(Request(id=0, prompt=[1, 2, 3], max_new_tokens=12))
+    eng.run()
+    assert counts.verify_dispatches == eng.spec_rounds > 0
+    assert counts.draft_dispatches == 0  # n-gram drafts are host-only
+    assert counts.decode_dispatches == 0
+    # one fused program for the whole run: the verify chunk shape is
+    # fixed at K+1, so no recompiles as rows finish
+    assert counts.counts["verify5"] == eng.spec_rounds
+
+
+def test_golden_decode_unchanged():
+    """The committed golden streams (recorded long before speculative
+    decoding existed) must be bit-for-bit reproducible with
+    speculation *on* — the strongest regression gate this PR has.
+    Engine parameters mirror tests/test_paged.py's golden capture."""
+    import json
+    import pathlib
+    golden = json.loads((pathlib.Path(__file__).parent
+                         / "golden_decode.json").read_text())
+    want = {int(i): t for i, t in golden["smollm-360m"].items()}
+    cfg = get_smoke_config("smollm-360m")
+    eng = ServingEngine(cfg, max_batch=3, cache_len=32, prefill_chunk=4,
+                        speculative=8)
+    for i, p in enumerate([[5, 6, 7, 2, 9, 3, 8, 1], [9, 10, 4],
+                           [11, 3, 5, 7, 2]]):
+        eng.submit(Request(id=i, prompt=list(p), max_new_tokens=5))
+    done = {r.id: r.out_tokens for r in eng.run()}
+    assert done == want

@@ -1,0 +1,170 @@
+"""Line-coverage gate over the serving-critical modules.
+
+``make test`` runs the tier-1 suite through this gate: coverage of
+``src/repro/serving/``, ``src/repro/core/``, and
+``src/repro/models/kvcache.py`` must stay at or above the committed
+floor (``COV_FLOOR`` in the Makefile — the measured baseline minus one
+point, so a PR that lands untested scheduler/cache code fails CI).
+
+Measurement backend, best available first:
+
+* ``pytest-cov`` when installed: the suite runs under ``--cov`` with
+  ``--cov-fail-under`` doing the enforcement;
+* stdlib ``sys.settrace`` otherwise: a selective tracer that only pays
+  per-line cost inside the target files (the global trace function
+  returns ``None`` for everything else, so jax/numpy internals — the
+  bulk of suite runtime — run untraced).  Executable lines come from
+  compiling each target file and walking its code objects' ``co_lines``
+  tables, the same universe ``coverage.py`` uses.
+
+Exit status: pytest's if the suite fails; 1 if the suite passes but
+coverage is below the floor; 0 otherwise.  ``--report`` prints the
+per-file table.  No third-party dependency is required, so the gate
+cannot silently vanish from CI when the environment is minimal.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import threading
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: coverage universe: the modules whose untested regressions hurt most
+#: (scheduler/engine state machines, the block ledger, the paper math)
+TARGETS = (
+    "src/repro/serving",
+    "src/repro/core",
+    "src/repro/models/kvcache.py",
+)
+
+
+def target_files() -> list:
+    out = []
+    for t in TARGETS:
+        p = os.path.join(ROOT, t)
+        if os.path.isfile(p):
+            out.append(p)
+        else:
+            for dirpath, _, names in os.walk(p):
+                out += [os.path.join(dirpath, n) for n in names
+                        if n.endswith(".py")]
+    return sorted(out)
+
+
+def executable_lines(path: str) -> set:
+    """Line numbers that can execute: the union of every code object's
+    ``co_lines`` table (functions, comprehensions, class and module
+    bodies), minus docstring-only entries compile() already omits."""
+    with open(path, "r", encoding="utf-8") as fh:
+        src = fh.read()
+    try:
+        code = compile(src, path, "exec")
+    except SyntaxError:
+        return set()
+    lines, stack = set(), [code]
+    while stack:
+        co = stack.pop()
+        for const in co.co_consts:
+            if hasattr(const, "co_lines"):
+                stack.append(const)
+        for _, _, lineno in co.co_lines():
+            if lineno is not None:
+                lines.add(lineno)
+    return lines
+
+
+def run_with_settrace(pytest_args: list):
+    """(pytest_rc, hits) — run the suite under a selective tracer."""
+    import pytest
+
+    targets = {os.path.realpath(p): p for p in target_files()}
+    hits = {p: set() for p in targets.values()}
+    # code objects carry whatever path the import system saw (relative
+    # PYTHONPATH entries, tests/../src detours) — canonicalize each
+    # distinct co_filename once, then it's one dict probe per call
+    canon: dict = {}
+
+    def local(frame, event, arg):
+        if event == "line":
+            hits[canon[frame.f_code.co_filename]].add(frame.f_lineno)
+        return local
+
+    def tracer(frame, event, arg):
+        fn = frame.f_code.co_filename
+        t = canon.get(fn, 0)
+        if t is None:
+            return None  # untraced frame: zero per-line overhead
+        if t == 0:
+            t = canon[fn] = (None if fn.startswith("<") else
+                             targets.get(os.path.realpath(fn)))
+            if t is None:
+                return None
+        return local(frame, event, arg)
+
+    threading.settrace(tracer)
+    sys.settrace(tracer)
+    try:
+        rc = pytest.main(pytest_args)
+    finally:
+        sys.settrace(None)
+        threading.settrace(None)
+    return rc, hits
+
+
+def run_with_pytest_cov(pytest_args: list, floor: float) -> int:
+    import pytest
+    cov_args = [f"--cov={t}" for t in
+                (os.path.join(ROOT, t) for t in TARGETS)]
+    return pytest.main(pytest_args + cov_args
+                       + [f"--cov-fail-under={floor}"])
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--floor", type=float, default=0.0,
+                    help="minimum percent line coverage over the "
+                         "target modules (0 = measure only)")
+    ap.add_argument("--report", action="store_true",
+                    help="print the per-file coverage table")
+    ap.add_argument("pytest_args", nargs="*",
+                    help="arguments forwarded to pytest")
+    args = ap.parse_args(argv)
+    pytest_args = args.pytest_args or ["-x", "-q", "-m", "not tier2"]
+
+    try:
+        import pytest_cov  # noqa: F401
+        return run_with_pytest_cov(pytest_args, args.floor)
+    except ImportError:
+        pass
+
+    rc, hits = run_with_settrace(pytest_args)
+    if rc != 0:
+        return rc
+
+    total_exec = total_hit = 0
+    rows = []
+    for path in sorted(hits):
+        ex = executable_lines(path)
+        if not ex:
+            continue
+        hit = len(ex & hits[path])
+        total_exec += len(ex)
+        total_hit += hit
+        rows.append((os.path.relpath(path, ROOT), hit, len(ex)))
+    pct = 100.0 * total_hit / max(1, total_exec)
+    if args.report:
+        for rel, hit, ex in rows:
+            print(f"{rel:<48} {hit:>5}/{ex:<5} {100.0 * hit / ex:6.1f}%")
+    print(f"covgate: {total_hit}/{total_exec} lines "
+          f"({pct:.1f}%) over {len(rows)} files; floor {args.floor}%")
+    if pct < args.floor:
+        print(f"covgate: FAIL — coverage {pct:.1f}% is below the "
+              f"committed floor {args.floor}%")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

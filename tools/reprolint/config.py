@@ -77,7 +77,8 @@ PRIVACY_RULES = ("ledger-privacy",)
 #: with a reason); anything else is a hot-loop host sync.  Read by the
 #: host-sync rule.
 HOT_LOOP_METHODS = {"_forward_steps", "_run_macro", "_macro_tail",
-                    "_apply_cow"}
+                    "_apply_cow", "_forward_verify", "_run_verify",
+                    "_spec_tail"}
 
 #: jit-wrapped functions allowed to skip donation without suppression:
 #: none — the known exemption (the profiling decode jit) carries an
