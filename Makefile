@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: lint typecheck test test-full smoke simbench engine-bench \
-        goodput-bench spec-bench docs ci
+        goodput-bench spec-bench quant-bench docs ci
 
 # line-coverage floor over the serving-critical modules (serving/,
 # core/, models/kvcache.py): measured tier-1 baseline (89.5%) minus
@@ -63,6 +63,14 @@ goodput-bench:
 spec-bench:
 	$(PY) -m benchmarks.spec_bench --out bench_spec.json
 	$(PY) -m benchmarks.report --spec bench_spec.json
+
+# weight-only quantization bench, full size: refreshes the committed
+# bench_quant.json baseline (int8 paged K=16 must clear 1.4x the bf16
+# cell and every golden gate — SERVING.md §Quantization; the
+# `make smoke` chain writes CI-sized numbers to bench_quant_quick.json)
+quant-bench:
+	$(PY) -m benchmarks.quant_bench --out bench_quant.json
+	$(PY) -m benchmarks.report --quant bench_quant.json
 
 # docs gate: every relative link in *.md resolves, quoted source-file
 # references in README/ARCHITECTURE/EXPERIMENTS/SERVING point at real

@@ -6,6 +6,13 @@ same deterministic mixed-length trace as `benchmarks/paged_bench.py`
 (scenario-modulated arrivals) and report
 
 * ``tok_per_s``                wall-clock generated tokens per second,
+* ``mfu`` / ``mbu``            nominal distance-to-roof (one TPU v5e
+                               chip sustaining the measured rate):
+                               model-flops and resident-bytes
+                               utilization per `launch.hlo_analysis`
+                               — the columns every kernel/format PR
+                               moves (quantization shrinks the bytes
+                               term, so equal tok/s costs less MBU),
 * ``dispatches_per_token``     decode jit dispatches / generated token
                                (counted by `src/repro/serving/instrument.py`),
 * ``syncs_per_token``          device->host materializations / token,
@@ -56,9 +63,12 @@ from __future__ import annotations
 import argparse
 import time
 
+import jax
+
 from benchmarks.paged_bench import build_trace
 from repro.configs import get_smoke_config
 from repro.experiments.results import save_results
+from repro.launch.hlo_analysis import mbu, mfu
 from repro.serving import (PagedPipelinedEngine, PagedServingEngine,
                            PipelinedEngine, Request, ServingEngine)
 from repro.serving.instrument import instrument
@@ -73,28 +83,53 @@ QOS_CYCLE = ("interactive", "standard", "batch")
 
 
 def make_engine(kind: str, cfg, k: int, *, max_batch, cache_len, max_rows,
-                block_size, num_blocks, prefill_chunk, n_stages=2):
+                block_size, num_blocks, prefill_chunk, n_stages=2,
+                quantization=None):
     if kind == "dense":
         return ServingEngine(cfg, max_batch=max_batch, cache_len=cache_len,
-                             prefill_chunk=prefill_chunk, decode_steps=k)
+                             prefill_chunk=prefill_chunk, decode_steps=k,
+                             quantization=quantization)
     if kind == "pipelined":
         return PipelinedEngine(cfg, n_stages=n_stages, max_batch=max_batch,
                                cache_len=cache_len,
-                               prefill_chunk=prefill_chunk, decode_steps=k)
+                               prefill_chunk=prefill_chunk, decode_steps=k,
+                               quantization=quantization)
     if kind == "paged":
         return PagedServingEngine(cfg, max_rows=max_rows, max_len=cache_len,
                                   block_size=block_size,
                                   num_blocks=num_blocks,
                                   prefill_chunk=prefill_chunk,
-                                  decode_steps=k)
+                                  decode_steps=k,
+                                  quantization=quantization)
     if kind == "paged_pipelined":
         return PagedPipelinedEngine(cfg, n_stages=n_stages,
                                     max_rows=max_rows, max_len=cache_len,
                                     block_size=block_size,
                                     num_blocks=num_blocks,
                                     prefill_chunk=prefill_chunk,
-                                    decode_steps=k)
+                                    decode_steps=k,
+                                    quantization=quantization)
     raise ValueError(f"unknown engine kind {kind!r}; known: {ENGINE_KINDS}")
+
+
+def _tree_bytes(tree) -> int:
+    return int(sum(x.nbytes for x in jax.tree.leaves(tree)))
+
+
+def resident_bytes(eng) -> tuple:
+    """(weight_bytes, kv_pool_bytes) actually resident on the engine.
+
+    Weights are the engine's (possibly quantized — packed q + scales)
+    params pytree, so int8/int4 shrink shows up here without any
+    format-specific arithmetic; the KV pool is the cache pytree (stage
+    caches for pipelined engines).  Pipelined stage params are slices
+    of ``eng.params``, counted once.
+    """
+    if hasattr(eng, "stages"):
+        kv = sum(_tree_bytes(st.caches) for st in eng.stages)
+    else:
+        kv = _tree_bytes(eng.caches)
+    return _tree_bytes(eng.params), kv
 
 
 def warmup(eng, k: int, prefill_chunk: int):
@@ -126,6 +161,12 @@ def drive(eng, trace, k: int, prefill_chunk: int, reps: int = 3) -> dict:
     warmup(eng, k, prefill_chunk)
     counts = instrument(eng)
     is_paged = hasattr(eng, "rows")
+    # roofline inputs for the MFU/MBU columns (launch.hlo_analysis):
+    # model flops/token and the resident bytes a fused decode step must
+    # stream (weights once + KV pool); quantized engines report smaller
+    # weight_bytes automatically because the packed pytree is measured
+    flops_per_token = 2.0 * eng.cfg.num_active_params()
+    weight_bytes, kv_pool_bytes = resident_bytes(eng)
     best = None
     outputs = None
     for rep in range(max(1, reps)):
@@ -159,12 +200,24 @@ def drive(eng, trace, k: int, prefill_chunk: int, reps: int = 3) -> dict:
         toks = eng.tokens_generated - tok0
         syncs = eng.n_host_syncs - sync0
         disp = counts.decode_dispatches - disp0
+        steps = max(eng.t - t0_step, 1)   # engine-clock decode steps
+        tok_per_s = toks / wall
         row = {
             "completed": len(done),
             "rejected": len(eng.rejected) - rej0,
             "tokens": toks,
             "wall_s": wall,
-            "tok_per_s": toks / wall,
+            "tok_per_s": tok_per_s,
+            # nominal distance-to-roof (one TPU v5e chip sustaining the
+            # measured token rate): model flops/token vs PEAK, and
+            # weights+KV streamed once per engine step vs HBM_BW
+            "mfu": mfu(flops_per_token, tok_per_s),
+            "mbu": mbu((weight_bytes + kv_pool_bytes) * steps
+                       / max(toks, 1), tok_per_s),
+            "flops_per_token": flops_per_token,
+            "weight_bytes": weight_bytes,
+            "kv_pool_bytes": kv_pool_bytes,
+            "engine_steps": int(steps),
             "decode_dispatches": disp,
             "dispatches_per_token": disp / max(toks, 1),
             "prefill_dispatches": counts.prefill_dispatches - pre0,
@@ -191,13 +244,14 @@ def main(configs: str = "smollm-360m", scenario: str = "bursty_mmpp",
          cache_len: int = 128, max_rows: int = 2, block_size: int = 16,
          prefill_chunk: int = 16, short_frac: float = 0.9,
          new_lo: int = 48, new_hi: int = 97,
-         reps: int = 3, seed: int = 0, out: str | None = None):
+         reps: int = 3, seed: int = 0, out: str | None = None,
+         quantization: str | None = None):
     num_blocks = max_batch * cache_len // block_size  # equal token-slots
     k_list = [int(s) for s in str(ks).split(",")]
     kinds = [s.strip() for s in str(engines).split(",")]
     geom = dict(max_batch=max_batch, cache_len=cache_len, max_rows=max_rows,
                 block_size=block_size, num_blocks=num_blocks,
-                prefill_chunk=prefill_chunk)
+                prefill_chunk=prefill_chunk, quantization=quantization)
     rows = []
     for arch in str(configs).split(","):
         cfg = get_smoke_config(arch)
@@ -208,7 +262,8 @@ def main(configs: str = "smollm-360m", scenario: str = "bursty_mmpp",
         res = {}
         print(f"\n== {arch} [{scenario}] {n_requests} reqs, "
               f"K in {k_list}, engines {kinds} ==")
-        print(f"{'engine':>15s} {'K':>3s} {'tok/s':>8s} {'disp/tok':>9s} "
+        print(f"{'engine':>15s} {'K':>3s} {'tok/s':>8s} {'mfu':>8s} "
+              f"{'mbu':>8s} {'disp/tok':>9s} "
               f"{'sync/tok':>9s} {'steady':>7s} {'upld/tok':>9s} "
               f"{'preempt':>7s} {'goodput':>8s} {'match':>6s}")
         for kind in kinds:
@@ -221,6 +276,7 @@ def main(configs: str = "smollm-360m", scenario: str = "bursty_mmpp",
                 r["outputs_match"] = outputs == ref
                 res[(kind, k)] = r
                 print(f"{kind:>15s} {k:3d} {r['tok_per_s']:8.1f} "
+                      f"{r['mfu']:8.1e} {r['mbu']:8.1e} "
                       f"{r['dispatches_per_token']:9.4f} "
                       f"{r['syncs_per_token']:9.4f} "
                       f"{r['steady_syncs_per_token']:7.4f} "
@@ -272,6 +328,10 @@ if __name__ == "__main__":
                     help="timed passes per cell; fastest wins (CI boxes "
                          "jitter more than the effect under test)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quantization", default=None,
+                    choices=[None, "bf16", "int8", "int4"],
+                    help="weight-only format for every engine cell "
+                         "(SERVING.md §Quantization)")
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized: fewer requests, K in {1,4}, "
                          "monolithic engines only")
@@ -287,4 +347,5 @@ if __name__ == "__main__":
          max_batch=args.max_batch, cache_len=args.cache_len,
          max_rows=args.rows, block_size=args.block_size,
          short_frac=args.short_frac, new_lo=args.new_lo,
-         new_hi=args.new_hi, reps=args.reps, seed=args.seed, out=args.out)
+         new_hi=args.new_hi, reps=args.reps, seed=args.seed, out=args.out,
+         quantization=args.quantization)

@@ -24,9 +24,11 @@ from repro.experiments.runner import make_grid, run_grid
 
 def main(n_trials: int = 12, horizon: int = 80, out: str | None = None,
          strategies=None, scenario: str = "baseline",
-         n_workers: int | None = None):
+         n_workers: int | None = None,
+         bytes_per_param: float | None = None):
     specs = make_grid(seeds=range(n_trials), strategies=strategies,
-                      scenarios=(scenario,), horizon_slots=horizon)
+                      scenarios=(scenario,), horizon_slots=horizon,
+                      bytes_per_param=bytes_per_param)
     rows = run_grid(specs, n_workers=n_workers, progress=True)
     print("scenario,strategy,seed,on_time,completed,total_cost,"
           "p95_latency_ms")
@@ -46,7 +48,8 @@ def main(n_trials: int = 12, horizon: int = 80, out: str | None = None,
         save_results(out, rows, meta={"section": "fig3",
                                       "scenario": scenario,
                                       "n_trials": n_trials,
-                                      "horizon_slots": horizon})
+                                      "horizon_slots": horizon,
+                                      "bytes_per_param": bytes_per_param})
     return rows
 
 
@@ -57,6 +60,10 @@ if __name__ == "__main__":
     ap.add_argument("--out", default=None)
     ap.add_argument("--scenario", default="baseline")
     ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--bytes-per-param", type=float, default=None,
+                    help="weight bytes/param for core-service memory "
+                         "demand (2.0 bf16 baseline, 1.0 int8, 0.5 "
+                         "int4 — SERVING.md §Quantization)")
     args = ap.parse_args()
     main(args.trials, args.horizon, args.out, scenario=args.scenario,
-         n_workers=args.workers)
+         n_workers=args.workers, bytes_per_param=args.bytes_per_param)

@@ -22,12 +22,14 @@ SEED_BASE = 1000   # disjoint from fig3's seed range
 
 
 def main(n_trials: int = 6, horizon: int = 80, out: str | None = None,
-         scenario: str = "baseline", n_workers: int | None = None):
+         scenario: str = "baseline", n_workers: int | None = None,
+         bytes_per_param: float | None = None):
     specs = make_grid(seeds=range(SEED_BASE, SEED_BASE + n_trials),
                       strategies=("proposal", "prop_avg"),
                       scenarios=(scenario,),
                       rate_multipliers=MULTIPLIERS,
-                      horizon_slots=horizon)
+                      horizon_slots=horizon,
+                      bytes_per_param=bytes_per_param)
     rows = run_grid(specs, n_workers=n_workers, progress=True)
     print("load,strategy,completed_mean,completed_std,on_time_mean,"
           "on_time_std,gap_mean,cost_mean,cost_std")
@@ -42,7 +44,8 @@ def main(n_trials: int = 6, horizon: int = 80, out: str | None = None,
                                       "scenario": scenario,
                                       "n_trials": n_trials,
                                       "horizon_slots": horizon,
-                                      "rate_multipliers": MULTIPLIERS})
+                                      "rate_multipliers": MULTIPLIERS,
+                                      "bytes_per_param": bytes_per_param})
     return rows
 
 
@@ -53,6 +56,10 @@ if __name__ == "__main__":
     ap.add_argument("--out", default=None)
     ap.add_argument("--scenario", default="baseline")
     ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--bytes-per-param", type=float, default=None,
+                    help="weight bytes/param for core-service memory "
+                         "demand (2.0 bf16 baseline, 1.0 int8, 0.5 "
+                         "int4 — SERVING.md §Quantization)")
     args = ap.parse_args()
     main(args.trials, args.horizon, args.out, scenario=args.scenario,
-         n_workers=args.workers)
+         n_workers=args.workers, bytes_per_param=args.bytes_per_param)

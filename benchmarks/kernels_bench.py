@@ -4,6 +4,14 @@ On CPU the Pallas kernels run in interpret mode (orders of magnitude
 slower than compiled TPU); we therefore time the *ref* path (XLA-compiled
 jnp) for wall numbers and report the kernels' analytic FLOPs as
 `derived` (GFLOP per call) so the CSV stays meaningful on this host.
+
+The weight-only quant sweep (second CSV block) times the deployable
+``models.quantize.qdot`` paths at a decode-shaped matmul and reports
+weight bytes streamed + achieved GB/s against the dense bf16 baseline
+— the byte-traffic race that makes quantization a decode win
+(SERVING.md §Quantization).  The f32 row is the CPU transparency cell:
+XLA emulates bf16 on this host, so dense-bf16 walltime is pessimistic
+relative to TPU; bytes are exact either way.
 """
 from __future__ import annotations
 
@@ -13,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.models import quantize as qz
 
 
 def _time_us(fn, *args, iters=5):
@@ -67,6 +76,31 @@ def main():
     print("name,us_per_call,derived_gflop")
     for name, us, gf in rows:
         print(f"{name},{us:.1f},{gf:.3f}")
+
+    # ---- weight-only quant matmuls (decode shape: 4 rows) ----
+    m, kq, nq = 4, 2048, 4096
+    kx, kw = jax.random.split(key)
+    w32 = jax.random.normal(kw, (kq, nq), jnp.float32)
+    x32 = jax.random.normal(kx, (m, kq), jnp.float32)
+    cells = [
+        ("dense_bf16", x32.astype(jnp.bfloat16), w32.astype(jnp.bfloat16)),
+        ("dense_f32", x32, w32),
+        ("int8", x32, qz.quantize_int8(w32)),
+        ("int4", x32, qz.quantize_int4(w32)),
+    ]
+    qdot = jax.jit(qz.qdot)
+    print("\nname,us_per_call,weight_mb,achieved_gbps")
+    base_us = None
+    for name, x, w in cells:
+        us = _time_us(qdot, x, w)
+        if base_us is None:
+            base_us = us        # dense bf16 is the comparison row
+        wb = sum(leaf.nbytes for leaf in jax.tree.leaves(w))
+        print(f"quant_matmul_{name}_2kx4k,{us:.1f},{wb / 1e6:.2f},"
+              f"{wb / (us * 1e-6) / 1e9:.2f}")
+    print(f"# int8/int4 rows stream {2 * kq * nq / 1e6:.1f}MB of bf16 "
+          f"weight as packed ints; speedup vs dense bf16 is in "
+          f"bench_quant.json (engine-level criterion)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,201 @@
+"""Weight-only quantization bench: the bytes-per-weight race at the
+decode roofline (SERVING.md §Quantization).
+
+Cells: the paged engine at K=16 replays the same deterministic
+decode-dominant trace with weights in
+
+* ``bf16`` — the production dtype, quantization off (the baseline the
+  committed criterion is measured against),
+* ``f32``  — transparency cell: XLA *emulates* bf16 on this CPU host
+  (per-op upcast), so the bf16 walltime is pessimistic relative to TPU;
+  the f32 row shows the native-dtype dense speed for calibration,
+* ``int8`` / ``int4`` — packed weight-only formats via
+  ``quantization=`` (models/quantize.py).
+
+The cells run a widened variant of the smoke config (d_model x d_ff
+large enough that weight streaming dominates a decode step — the
+regime quantization targets; at smoke dims the step is overhead-bound
+and no format can win).  Each row reports tokens/s, MFU and MBU
+(nominal v5e distance-to-roof per `launch.hlo_analysis` — note the
+quantized cells' weight_bytes shrink, so equal tokens/s costs less
+MBU), and the speedup vs the bf16 cell.
+
+Golden gates ride along at the committed harness geometry (the *plain*
+smoke config — the goldens' recipe):
+
+* quantization off must reproduce ``tests/golden_decode.json``
+  byte-identically,
+* each quantized format must reproduce its own
+  ``tests/golden_decode_quant.json`` stream exactly AND clear the
+  absolute-token-match floor vs the dense golden
+  (``quantize.golden_token_match_floor``; policy in SERVING.md).
+
+Committed baseline: ``make quant-bench`` -> bench_quant.json; the CI
+smoke chain (`benchmarks.run --quick`) writes a CI-sized cell to the
+scratch bench_quant_quick.json instead.  Criterion: int8 paged K=16
+>= 1.4x the bf16 cell's tokens/s.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+
+from benchmarks.engine_bench import drive, make_engine
+from benchmarks.paged_bench import build_trace
+from repro.configs import get_smoke_config
+from repro.experiments.results import save_results
+from repro.models import quantize
+from repro.serving import Request, ServingEngine
+
+K = 16
+MIN_SPEEDUP = 1.4
+FMTS = ("bf16", "f32", "int8", "int4")
+PROMPTS = [[5, 6, 7, 2, 9, 3, 8, 1], [9, 10, 4], [11, 3, 5, 7, 2]]
+_TESTS = pathlib.Path(__file__).resolve().parent.parent / "tests"
+
+
+def bench_config(arch: str, d_model: int, d_ff: int,
+                 dtype: str = "bfloat16"):
+    """Widen the smoke config until weight streaming dominates a decode
+    step (head_dim stays modest: the MLP is the byte budget)."""
+    cfg = get_smoke_config(arch)
+    return dataclasses.replace(cfg, d_model=d_model, d_ff=d_ff,
+                               head_dim=64, dtype=dtype)
+
+
+def _golden_outputs(cfg, quantization=None):
+    eng = ServingEngine(cfg, max_batch=3, cache_len=32, prefill_chunk=4,
+                        quantization=quantization)
+    for i, p in enumerate(PROMPTS):
+        eng.submit(Request(id=i, prompt=list(p), max_new_tokens=5))
+    return {int(r.id): list(map(int, r.out_tokens)) for r in eng.run()}
+
+
+def golden_gates(arch: str, fmts) -> dict:
+    """Run the committed golden recipe per format; returns the gate
+    fields merged into the bench rows."""
+    cfg = get_smoke_config(arch)
+    dense_golden = {int(i): t for i, t in json.loads(
+        (_TESTS / "golden_decode.json").read_text())[arch].items()}
+    quant_golden = json.loads(
+        (_TESTS / "golden_decode_quant.json").read_text()).get(arch, {})
+    gates = {}
+    for fmt in fmts:
+        if fmt == "f32":
+            continue   # speed-transparency cell only, no golden claim
+        if fmt == "bf16":
+            outs = _golden_outputs(cfg, quantization=None)
+            gates[fmt] = {"golden_match": outs == dense_golden}
+            continue
+        outs = _golden_outputs(cfg, quantization=fmt)
+        pinned = {int(i): t for i, t in quant_golden[fmt].items()}
+        match = tot = 0
+        for i, toks in outs.items():
+            for a, b in zip(toks, dense_golden[i]):
+                tot += 1
+                match += int(a == b)
+        floor = quantize.golden_token_match_floor(arch, fmt)
+        gates[fmt] = {
+            "golden_match": outs == pinned,
+            "token_match_frac": match / tot,
+            "token_match_floor": floor,
+            "token_match_ok": match / tot >= floor,
+        }
+    return gates
+
+
+def main(arch: str = "smollm-360m", d_model: int = 1024, d_ff: int = 4096,
+         fmts: str = ",".join(FMTS), scenario: str = "bursty_mmpp",
+         n_requests: int = 6, cache_len: int = 64, new_lo: int = 24,
+         new_hi: int = 33, reps: int = 2, seed: int = 0,
+         out: str | None = None):
+    fmt_list = [f.strip() for f in str(fmts).split(",")]
+    trace = build_trace(scenario, seed, n_requests, cache_len,
+                        short_frac=1.0, new_lo=new_lo, new_hi=new_hi)
+    geom = dict(max_batch=2, cache_len=cache_len, max_rows=2,
+                block_size=16, num_blocks=2 * cache_len // 16,
+                prefill_chunk=8)
+    gates = golden_gates(arch, fmt_list)
+    print(f"\n== quant bench: {arch} paged K={K}, "
+          f"{d_model}x{d_ff}, {n_requests} reqs ==")
+    print(f"{'cell':>6s} {'tok/s':>8s} {'vs bf16':>8s} {'mfu':>8s} "
+          f"{'mbu':>8s} {'weightMB':>9s} {'golden':>7s}")
+    rows, base = [], None
+    for fmt in fmt_list:
+        dtype = "float32" if fmt == "f32" else "bfloat16"
+        q = fmt if fmt in ("int8", "int4") else None
+        cfg = bench_config(arch, d_model, d_ff, dtype=dtype)
+        eng = make_engine("paged", cfg, K, **geom, quantization=q)
+        r = drive(eng, trace, K, geom["prefill_chunk"], reps=reps)
+        r.pop("outputs")
+        if fmt == "bf16":
+            base = r["tok_per_s"]
+        r.update({"arch": arch, "cell": fmt, "k": K, "quantization": q,
+                  "speedup_vs_bf16": r["tok_per_s"] / base if base else 0.0,
+                  **gates.get(fmt, {})})
+        gstr = ("-" if fmt == "f32"
+                else str(r["golden_match"]
+                         and r.get("token_match_ok", True)))
+        print(f"{fmt:>6s} {r['tok_per_s']:8.1f} "
+              f"{r['speedup_vs_bf16']:7.2f}x {r['mfu']:8.1e} "
+              f"{r['mbu']:8.1e} {r['weight_bytes'] / 1e6:9.2f} "
+              f"{gstr:>7s}")
+        rows.append(r)
+    by = {r["cell"]: r for r in rows}
+    summary = {"arch": arch, "cell": "summary", "k": K,
+               "min_speedup": MIN_SPEEDUP}
+    if "int8" in by and "bf16" in by:
+        sp = by["int8"]["speedup_vs_bf16"]
+        goldens_ok = all(
+            r["golden_match"] and r.get("token_match_ok", True)
+            for r in rows if "golden_match" in r)
+        summary.update(
+            speedup_int8_vs_bf16=sp,
+            meets_criterion=sp >= MIN_SPEEDUP and goldens_ok,
+            goldens_ok=goldens_ok)
+        print(f"\nint8 paged K={K} is {sp:.2f}x the bf16 cell "
+              f"(criterion >= {MIN_SPEEDUP}x: "
+              f"{'met' if sp >= MIN_SPEEDUP else 'NOT met'}); "
+              f"golden gates {'pass' if goldens_ok else 'FAIL'}")
+    rows.append(summary)
+    if out:
+        save_results(out, rows, meta={
+            "section": "quant_bench", "arch": arch, "k": K,
+            "d_model": d_model, "d_ff": d_ff, "scenario": scenario,
+            "n_requests": n_requests, "cache_len": cache_len,
+            "new_lo": new_lo, "new_hi": new_hi, "reps": reps,
+            "seed": seed, "fmts": fmts,
+            "note": "tok_per_s is host-dependent; XLA emulates bf16 on "
+                    "CPU (see the f32 transparency cell) — on TPU the "
+                    "bf16 baseline is the fast dense path and the "
+                    "quant win is the bytes term (MBU column). Golden "
+                    "gate fields are deterministic."})
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--d-model", type=int, default=1024)
+    ap.add_argument("--d-ff", type=int, default=4096)
+    ap.add_argument("--fmts", default=",".join(FMTS))
+    ap.add_argument("--scenario", default="bursty_mmpp")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--cache-len", type=int, default=64)
+    ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized: narrower model, fewer requests, "
+                         "bf16+int8 cells only")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    kw = dict(arch=args.arch, d_model=args.d_model, d_ff=args.d_ff,
+              fmts=args.fmts, scenario=args.scenario,
+              n_requests=args.requests, cache_len=args.cache_len,
+              reps=args.reps, seed=args.seed, out=args.out)
+    if args.quick:
+        kw.update(d_model=512, d_ff=2048, fmts="bf16,int8",
+                  n_requests=4, reps=1)
+    main(**kw)

@@ -93,12 +93,17 @@ def engine_table(path: str) -> None:
           f"(scenario={meta.get('scenario', '?')}, "
           f"trace={meta.get('n_requests', '?')} reqs, "
           f"batch={meta.get('max_batch', '?')})\n")
-    print("| arch | engine | K | tok/s | disp/token | syncs/token | "
-          "steady syncs | uploads/token | match |")
-    print("|---|---|---|---|---|---|---|---|---|")
+    print("| arch | engine | K | tok/s | MFU | MBU | disp/token | "
+          "syncs/token | steady syncs | uploads/token | match |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
     for r in rows:
+        # MFU/MBU columns exist from the quantization PR on; older
+        # committed baselines render as '-'
+        mfu_s = f"{r['mfu']:.1e}" if "mfu" in r else "-"
+        mbu_s = f"{r['mbu']:.1e}" if "mbu" in r else "-"
         print(f"| {r['arch']} | {r['engine']} | {r['k']} "
-              f"| {r['tok_per_s']:.0f} | {r['dispatches_per_token']:.4f} "
+              f"| {r['tok_per_s']:.0f} | {mfu_s} | {mbu_s} "
+              f"| {r['dispatches_per_token']:.4f} "
               f"| {r['syncs_per_token']:.4f} "
               f"| {r['steady_syncs_per_token']:.4f} "
               f"| {r['uploads_per_token']:.4f} "
@@ -189,6 +194,43 @@ def goodput_table(path: str) -> None:
                   f"| {'-' if ttft is None else f'{ttft:.1f}'} |")
 
 
+def quant_table(path: str) -> None:
+    """Markdown summary of a benchmarks.quant_bench JSON: tokens/s,
+    speedup vs the bf16 cell, MFU/MBU, resident weight bytes, and the
+    golden-gate verdicts per format, plus the committed
+    speedup-criterion line (SERVING.md §Quantization)."""
+    from repro.experiments.results import load_results
+    try:
+        rows, meta = load_results(path)
+    except FileNotFoundError:
+        print(f"\n### §Quantization — {path}: missing, skipped\n")
+        return
+    print(f"\n### §Quantization — {path} "
+          f"({meta.get('arch', '?')} paged K={meta.get('k', '?')}, "
+          f"{meta.get('d_model', '?')}x{meta.get('d_ff', '?')}, "
+          f"{meta.get('n_requests', '?')} reqs)\n")
+    print("| cell | tok/s | vs bf16 | MFU | MBU | weight MB | "
+          "golden pin | token match |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["cell"] == "summary":
+            continue
+        pin = "-" if "golden_match" not in r else str(r["golden_match"])
+        tm = ("-" if "token_match_frac" not in r else
+              f"{r['token_match_frac']:.2f} >= {r['token_match_floor']}")
+        print(f"| {r['cell']} | {r['tok_per_s']:.0f} "
+              f"| {r['speedup_vs_bf16']:.2f}x | {r['mfu']:.1e} "
+              f"| {r['mbu']:.1e} | {r['weight_bytes'] / 1e6:.1f} "
+              f"| {pin} | {tm} |")
+    for r in rows:
+        if r["cell"] == "summary" and "speedup_int8_vs_bf16" in r:
+            print(f"\n{r['arch']}: int8 paged K={r['k']} is "
+                  f"{r['speedup_int8_vs_bf16']:.2f}x the bf16 cell "
+                  f"(criterion >= {r['min_speedup']}x: "
+                  f"{'met' if r['meets_criterion'] else 'NOT met'}, "
+                  f"goldens_ok={r['goldens_ok']})")
+
+
 def experiments_tables(paths) -> None:
     """Markdown summaries of replication-runner JSON result files."""
     from repro.experiments.results import (load_results, markdown_table,
@@ -224,6 +266,9 @@ def main():
     ap.add_argument("--spec", default=None,
                     help="benchmarks.spec_bench JSON to summarize "
                          "(e.g. bench_spec.json)")
+    ap.add_argument("--quant", default=None,
+                    help="benchmarks.quant_bench JSON to summarize "
+                         "(e.g. bench_quant.json)")
     args = ap.parse_args()
 
     if args.experiments:
@@ -234,7 +279,10 @@ def main():
         goodput_table(args.goodput)
     if args.spec:
         spec_table(args.spec)
-    if (args.engine or args.goodput or args.spec) and not args.experiments:
+    if args.quant:
+        quant_table(args.quant)
+    if (args.engine or args.goodput or args.spec or args.quant) \
+            and not args.experiments:
         return
 
     dry = load(args.dryrun)
@@ -256,20 +304,28 @@ def main():
 
     print("\n### §Roofline (unit-extrapolated audit, single-pod 16x16)\n")
     print("| arch | shape | t_compute s | t_mem(raw) s | t_mem(kernel) s | "
-          "t_coll s | dominant(kernel) | MODEL/HLO flops |")
-    print("|---|---|---|---|---|---|---|---|")
+          "t_coll s | dominant(kernel) | MFU(kernel) | MBU(kernel) | "
+          "MODEL/HLO flops |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
     for r in roof:
         if r.get("status") != "ok":
-            print(f"| {r['arch']} | {r['shape']} | | | | | {r['status']} | |")
+            print(f"| {r['arch']} | {r['shape']} | | | | | {r['status']} "
+                  f"| | | |")
             continue
         km = kernel_model_bytes(r["arch"], r["shape"])
         t_mk = km / HBM_BW
         terms = {"compute": r["t_compute_s"], "memory": t_mk,
                  "collective": r["t_collective_s"]}
         dom = max(terms, key=terms.get)
+        # distance-to-roof under the *kernel-model* memory column: the
+        # fraction of a roofline-optimal step each pipe is busy
+        t_step = max(terms.values())
+        mfu_k = terms["compute"] / t_step if t_step else 0.0
+        mbu_k = terms["memory"] / t_step if t_step else 0.0
         print(f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} | "
               f"{r['t_memory_s']:.2e} | {t_mk:.2e} | "
               f"{r['t_collective_s']:.2e} | {dom} | "
+              f"{mfu_k:.3f} | {mbu_k:.3f} | "
               f"{r['useful_ratio']:.3f} |")
 
 

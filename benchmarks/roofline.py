@@ -134,6 +134,14 @@ def audit(arch: str, shape_name: str, layout: str = "heads",
 
     terms = roofline_terms(total["flops"], total["hbm"], total["coll"],
                            mesh.devices.size)
+    # analytic distance-to-roof at the roofline-optimal step time: the
+    # fraction of a max(terms) step each pipe is busy.  mfu==1 means
+    # compute-bound (the roof), mbu==1 memory-bound; both shrink as the
+    # third term dominates.
+    t_step = max(terms["t_compute_s"], terms["t_memory_s"],
+                 terms["t_collective_s"])
+    terms["mfu"] = terms["t_compute_s"] / t_step if t_step else 0.0
+    terms["mbu"] = terms["t_memory_s"] / t_step if t_step else 0.0
     # MODEL_FLOPS: useful per-device flops
     tokens = shape.global_batch * (1 if shape.is_decode else shape.seq_len)
     n_active = cfg.num_active_params()
@@ -174,16 +182,17 @@ def main():
     archs = [args.arch] if args.arch else list(ARCH_IDS)
     shapes = [args.shape] if args.shape else list(SHAPES)
     print("arch,shape,layout,status,t_compute_s,t_memory_s,t_collective_s,"
-          "dominant,useful_ratio,hint")
+          "dominant,mfu,mbu,useful_ratio,hint")
     for a in archs:
         for s in shapes:
             r = audit(a, s, layout=args.layout)
             if r.get("status") != "ok":
-                print(f"{a},{s},{args.layout},{r.get('status')},,,,,,")
+                print(f"{a},{s},{args.layout},{r.get('status')},,,,,,,,")
                 continue
             print(f"{a},{s},{args.layout},ok,{r['t_compute_s']:.3e},"
                   f"{r['t_memory_s']:.3e},{r['t_collective_s']:.3e},"
-                  f"{r['dominant']},{r['useful_ratio']:.3f},"
+                  f"{r['dominant']},{r['mfu']:.3f},{r['mbu']:.3f},"
+                  f"{r['useful_ratio']:.3f},"
                   f"\"{BOTTLENECK_HINT[r['dominant']]}\"", flush=True)
             if args.out:
                 with open(args.out, "a") as f:

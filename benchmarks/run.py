@@ -13,6 +13,9 @@
            (SERVING.md §Speculative decoding)
   goodput  SLO-goodput: FIFO vs EDF vs EDF+effective-capacity on a
            mixed-QoS overload trace (SERVING.md §Scheduling)
+  quant    weight-only int8/int4 vs bf16 on the paged K=16 decode
+           loop: tokens/s, MFU/MBU, golden gates
+           (SERVING.md §Quantization)
   simbench vectorized simulator core vs scalar reference (trials/s)
   scale    scale_load population sweep via experiments.report
 
@@ -40,7 +43,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=[None, "fig3", "fig4", "ablation", "kernels",
                              "pipeline", "paged", "engine", "spec",
-                             "goodput", "simbench", "scale"])
+                             "goodput", "quant", "simbench", "scale"])
     ap.add_argument("--scenario", default="baseline",
                     help="registered scenario for fig3/fig4 "
                          "(see --list-scenarios)")
@@ -182,6 +185,19 @@ def main() -> None:
                out="bench_goodput_quick.json")
         else:
             gp(out="bench_goodput.json")
+
+    if args.only in (None, "quant"):
+        print("=" * 72)
+        print("## Weight-only quantization — int8/int4 vs bf16, paged "
+              "K=16 decode loop + golden gates")
+        from benchmarks.quant_bench import main as qb
+        if args.quick:
+            # CI-sized output goes to a scratch name; bench_quant.json
+            # is the committed full-run baseline (make quant-bench)
+            qb(d_model=512, d_ff=2048, fmts="bf16,int8", n_requests=4,
+               reps=1, out="bench_quant_quick.json")
+        else:
+            qb(out="bench_quant.json")
 
     print("=" * 72)
     print("done. roofline: PYTHONPATH=src python -m benchmarks.roofline")

@@ -93,6 +93,21 @@ table):
                   its mean is the speculative speedup EC
                   admission sees (``CapacityView.spec_accept``,
                   serving analogue of a service-rate scale)
+  weight-only     packed int8/int4 projection weights, dequant    ``models/quantize.py``, ``kernels/quant_matmul.py``
+  quantization    fused into the matmul; activations, KV, and
+                  the arithmetic stay full-precision, so only
+                  the weight *bytes* shrink (engines thread it
+                  as ``quantization=``; placement sees it as
+                  ``bytes_per_param`` on r_m's RAM/VRAM dims)
+  MFU             Model FLOPs Utilization: achieved useful        ``launch.hlo_analysis.mfu``,
+                  FLOP/s over the accelerator peak —              bench rows in bench_engine/quant.json
+                  distance to the compute roof (reported
+                  against nominal v5e peak on this CPU host)
+  MBU             Model Bandwidth Utilization: achieved bytes/s   ``launch.hlo_analysis.mbu``
+                  (weights once per step + KV pool) over peak
+                  HBM bandwidth — distance to the memory roof;
+                  the decode regime lives here, which is why
+                  shrinking weight bytes is a tokens/s win
   ==============  ==============================================  ==========
 
 See README.md §Paper ↔ code mapping for the construct-level table,

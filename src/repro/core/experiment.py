@@ -40,17 +40,22 @@ def spawn_rng(*entropy: int) -> np.random.Generator:
 
 
 def build_strategy(name: str, horizon_slots: int = 100, eps: float = 0.2,
-                   kappa: Optional[int] = None, seed: int = 0):
+                   kappa: Optional[int] = None, seed: int = 0,
+                   bytes_per_param: Optional[float] = None):
     """Instantiate a registered strategy with per-kind kwargs.
 
     `kappa` overrides the proposal's diversity constraint (ablations);
-    `seed` feeds the GA's internal generator so replications differ.
+    `seed` feeds the GA's internal generator so replications differ;
+    `bytes_per_param` rescales the core services' memory demand for
+    quantized placement re-runs (SERVING.md §Quantization).
     """
     cls = STRATEGIES[name]
     if name in ("proposal", "prop_avg"):
         kw = {"horizon_slots": horizon_slots, "eps": eps}
         if kappa is not None:
             kw["kappa"] = kappa
+        if bytes_per_param is not None:
+            kw["bytes_per_param"] = bytes_per_param
         return cls(**kw)
     if name == "ga":
         return cls(seed=seed)

@@ -89,13 +89,18 @@ class ProposalStrategy:
 
     def __init__(self, eps: float = 0.2, kappa: int = 8,
                  xi: float = sp.XI_DEFAULT, eta: float = ETA,
-                 phi: float = PHI_DEFAULT, horizon_slots: int = 100):
+                 phi: float = PHI_DEFAULT, horizon_slots: int = 100,
+                 bytes_per_param: float | None = None):
         self.eps = eps
         self.kappa = kappa
         self.xi = xi
         self.eta = eta
         self.phi = phi
         self.horizon = horizon_slots
+        # weight bytes per parameter for the core services' memory
+        # demand (None = the bf16 calibration; quantized re-runs pass
+        # models.quantize.bytes_per_param(fmt))
+        self.bytes_per_param = bytes_per_param
         self.queues = ArrayQueues(zeta=ZETA)
 
     # ------------------------------------------------------------------
@@ -110,7 +115,8 @@ class ProposalStrategy:
         self._y_cap = {m: ec.y_max for m, ec in self.ec.items()}
         z, q = qos_scores(app, net)
         prob = sp.build_problem(app, net, z, q, kappa=self.kappa,
-                                xi=self.xi, horizon_slots=self.horizon)
+                                xi=self.xi, horizon_slots=self.horizon,
+                                bytes_per_param=self.bytes_per_param)
         return sp.solve(prob)
 
     # ------------------------------------------------------------------

@@ -422,13 +422,16 @@ SCALAR_STRATEGIES = {
 
 
 def build_scalar_strategy(name: str, horizon_slots: int = 100,
-                          eps: float = 0.2, kappa=None, seed: int = 0):
+                          eps: float = 0.2, kappa=None, seed: int = 0,
+                          bytes_per_param=None):
     """Scalar counterpart of `repro.core.experiment.build_strategy`."""
     cls = SCALAR_STRATEGIES[name]
     if name in ("proposal", "prop_avg"):
         kw = {"horizon_slots": horizon_slots, "eps": eps}
         if kappa is not None:
             kw["kappa"] = kappa
+        if bytes_per_param is not None:
+            kw["bytes_per_param"] = bytes_per_param
         return cls(**kw)
     if name == "ga":
         return cls(seed=seed)
@@ -452,7 +455,8 @@ def run_one_scalar(spec) -> dict:
     modulation = scen.arrival_modulation(spawn_rng(spec.seed, sid, 2))
     strat = build_scalar_strategy(
         spec.strategy, horizon_slots=spec.horizon_slots, eps=spec.eps,
-        kappa=spec.kappa, seed=spec.seed)
+        kappa=spec.kappa, seed=spec.seed,
+        bytes_per_param=getattr(spec, "bytes_per_param", None))
     sim = ScalarSimulator(app, net, strat,
                           rng=spawn_rng(spec.seed, sid,
                                         stable_seed(spec.strategy)),
@@ -464,5 +468,6 @@ def run_one_scalar(spec) -> dict:
              rate_multiplier=spec.rate_multiplier,
              horizon_slots=spec.horizon_slots,
              drain_slots=getattr(spec, "drain_slots", 400), eps=spec.eps,
-             kappa=spec.kappa)
+             kappa=spec.kappa,
+             bytes_per_param=getattr(spec, "bytes_per_param", None))
     return m

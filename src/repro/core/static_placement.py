@@ -62,16 +62,37 @@ class PlacementProblem:
         return self.open_sites(x) >= self.kappa
 
 
+#: bf16 weight bytes — the baseline service sizes are calibrated to it
+DENSE_BYTES_PER_PARAM = 2.0
+#: Table-I resource columns that scale with the weight footprint
+_MEM_DIMS = (1, 3)   # ram, vram (network.RESOURCE_NAMES)
+
+
 def build_problem(app, net, z_tilde, q_score, kappa: int,
-                  xi: float = XI_DEFAULT, horizon_slots: int = 1
+                  xi: float = XI_DEFAULT, horizon_slots: int = 1,
+                  bytes_per_param: Optional[float] = None
                   ) -> PlacementProblem:
+    """``bytes_per_param`` rescales the memory dimensions (RAM/VRAM) of
+    every *core* service's demand vector by ``bytes_per_param / 2.0``
+    before the C1 box is computed — the placement view of weight-only
+    quantization (SERVING.md §Quantization): int8 halves and int4
+    quarters the resident weight bytes, so each site's box bound admits
+    proportionally more instances.  Compute dims and light services are
+    untouched (dequant happens inside the matmul; FLOPs are unchanged)."""
+    mem_scale = (1.0 if bytes_per_param is None
+                 else bytes_per_param / DENSE_BYTES_PER_PARAM)
     cost, box = {}, {}
     for m in app.core_ids:
         ms = app.ms(m)
         cost[m] = ms.c_dp + ms.c_mt * horizon_slots
+        r = np.asarray(ms.r, dtype=float).copy()
+        if mem_scale != 1.0:
+            for k in _MEM_DIMS:
+                if k < r.shape[-1]:
+                    r[..., k] *= mem_scale
         # C1 box: r_{m,k} * x <= R_{v,k}  ->  x <= min_k floor(R/r)
         with np.errstate(divide="ignore"):
-            per_k = np.floor(net.R / np.maximum(ms.r, 1e-9))
+            per_k = np.floor(net.R / np.maximum(r, 1e-9))
         box[m] = per_k.min(axis=1).astype(int)
     return PlacementProblem(cost=cost, q=q_score, z=z_tilde, box=box,
                             kappa=kappa, xi=xi)

@@ -45,6 +45,9 @@ class TrialSpec:
     drain_slots: int = 400          # post-horizon completion window
     eps: float = 0.2
     kappa: Optional[int] = None     # proposal diversity override
+    #: weight bytes/param for core-service memory demand (None = the
+    #: bf16 calibration; quantized re-runs pass 1.0 for int8, 0.5 int4)
+    bytes_per_param: Optional[float] = None
 
 
 def make_grid(seeds: Iterable[int],
@@ -53,12 +56,14 @@ def make_grid(seeds: Iterable[int],
               rate_multipliers: Sequence[float] = (1.0,),
               horizon_slots: int = 100, drain_slots: int = 400,
               eps: float = 0.2,
-              kappas: Sequence[Optional[int]] = (None,)) -> List[TrialSpec]:
+              kappas: Sequence[Optional[int]] = (None,),
+              bytes_per_param: Optional[float] = None) -> List[TrialSpec]:
     """Cartesian replication grid in deterministic order."""
     return [TrialSpec(seed=int(seed), strategy=name, scenario=scen,
                       rate_multiplier=float(mult),
                       horizon_slots=horizon_slots,
-                      drain_slots=drain_slots, eps=eps, kappa=kappa)
+                      drain_slots=drain_slots, eps=eps, kappa=kappa,
+                      bytes_per_param=bytes_per_param)
             for scen in scenarios
             for mult in rate_multipliers
             for seed in seeds
@@ -79,7 +84,8 @@ def run_one(spec: TrialSpec) -> Dict:
     modulation = scen.arrival_modulation(
         spawn_rng(spec.seed, sid, _MOD_STREAM))
     strat = build_strategy(spec.strategy, horizon_slots=spec.horizon_slots,
-                           eps=spec.eps, kappa=spec.kappa, seed=spec.seed)
+                           eps=spec.eps, kappa=spec.kappa, seed=spec.seed,
+                           bytes_per_param=spec.bytes_per_param)
     sim = Simulator(app, net, strat,
                     rng=spawn_rng(spec.seed, sid,
                                   stable_seed(spec.strategy)),
@@ -91,7 +97,7 @@ def run_one(spec: TrialSpec) -> Dict:
              rate_multiplier=spec.rate_multiplier,
              horizon_slots=spec.horizon_slots,
              drain_slots=spec.drain_slots, eps=spec.eps,
-             kappa=spec.kappa)
+             kappa=spec.kappa, bytes_per_param=spec.bytes_per_param)
     return m
 
 

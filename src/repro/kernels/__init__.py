@@ -5,4 +5,5 @@ ops.py: jit'd public wrappers; ref.py: pure-jnp oracles.
 Validated on CPU via interpret=True (see tests/test_kernels.py).
 """
 from repro.kernels.ops import (  # noqa: F401
-    decode_attention, flash_attention, rmsnorm, selective_scan)
+    decode_attention, flash_attention, quant_matmul, rmsnorm,
+    selective_scan)

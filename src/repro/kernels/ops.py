@@ -11,10 +11,12 @@ import functools
 import os
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.quant_matmul import quant_matmul_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.selective_scan import selective_scan_pallas
 
@@ -57,6 +59,20 @@ def selective_scan(dt, b_mat, c_mat, x, a_neg, h0, *,
     interpret = _interpret_default() if interpret is None else interpret
     return selective_scan_pallas(dt, b_mat, c_mat, x, a_neg, h0,
                                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def quant_matmul(x, q, s, *, use_pallas: bool = True,
+                 interpret: bool | None = None):
+    """Weight-only dequant-fused matmul; format inferred from q.dtype
+    (int8 = per-channel, uint8 = packed int4 per-group — layouts in
+    kernels/quant_matmul.py; producer in models/quantize.py)."""
+    if not use_pallas:
+        if q.dtype == jnp.int8:
+            return ref.quant_matmul_int8_ref(x, q, s)
+        return ref.quant_matmul_int4_ref(x, q, s)
+    interpret = _interpret_default() if interpret is None else interpret
+    return quant_matmul_pallas(x, q, s, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "use_pallas",

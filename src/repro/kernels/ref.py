@@ -86,6 +86,41 @@ def selective_scan_ref(dt, b_mat, c_mat, x, a_neg, h0):
     return jnp.moveaxis(ys, 0, 1), h_t
 
 
+def quant_matmul_int8_ref(x, q, s):
+    """x (..., K) @ dequant(q (K, N) int8, s (1, N) f32) -> (..., N).
+
+    Per-output-channel symmetric scales: w = q * s.  Dequant-then-dot
+    in f32, result cast back to x.dtype — the numeric contract the
+    fused Pallas kernel must reproduce to f32 round-off.
+    """
+    w = q.astype(jnp.float32) * s
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def unpack_int4_ref(packed):
+    """(K//2, N) uint8 -> (K, N) int8 in [-8, 7].
+
+    Packed row r holds k=2r in the low nibble and k=2r+1 in the high
+    nibble; stored nibbles are biased by +8 (see models/quantize.py).
+    """
+    lo = (packed & 0xF).astype(jnp.int8) - 8
+    hi = (packed >> 4).astype(jnp.int8) - 8
+    k2, n = packed.shape
+    return jnp.stack([lo, hi], axis=1).reshape(2 * k2, n)
+
+
+def quant_matmul_int4_ref(x, q, s):
+    """x (..., K) @ dequant(q (K//2, N) packed uint8, s (K//G, N) f32).
+
+    Per-group scales along K (G inferred from the shapes):
+    w[k] = (nibble[k] - 8) * s[k // G].
+    """
+    k = q.shape[-2] * 2
+    g = k // s.shape[-2]
+    w = unpack_int4_ref(q).astype(jnp.float32) * jnp.repeat(s, g, axis=0)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
 def rmsnorm_ref(x, scale, eps: float = 1e-5):
     x32 = x.astype(jnp.float32)
     var = jnp.mean(x32 * x32, axis=-1, keepdims=True)

@@ -115,3 +115,30 @@ def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
         "t_collective_s": t_collective,
         "dominant": dominant,
     }
+
+
+def mfu(flops_per_token: float, tok_per_s: float) -> float:
+    """Model FLOPs Utilization: useful model FLOP/s as a fraction of one
+    chip's ``PEAK_FLOPS_BF16``.
+
+    ``flops_per_token`` is the *model* count (2 x active params for
+    inference, 6 x for training), not the HLO count — MFU deliberately
+    excludes rematerialization and padding so it measures how much of
+    the roof goes to the model.  Benches that measure ``tok_per_s`` on
+    the CPU host report this as a *nominal* distance-to-roof: the
+    utilization one v5e chip would see sustaining that token rate.
+    """
+    return flops_per_token * tok_per_s / PEAK_FLOPS_BF16
+
+
+def mbu(bytes_per_token: float, tok_per_s: float) -> float:
+    """Model Bandwidth Utilization: resident-state traffic per second as
+    a fraction of one chip's ``HBM_BW``.
+
+    ``bytes_per_token`` is what a fused decode step *must* stream per
+    generated token — weights once per step plus the KV pool — so MBU
+    is the decode roofline's memory axis: weight-only quantization
+    lowers bytes_per_token and therefore the bandwidth a given tokens/s
+    costs (SERVING.md §Quantization).
+    """
+    return bytes_per_token * tok_per_s / HBM_BW

@@ -30,8 +30,13 @@ class StageSpec:
     act_bytes_out: int   # activation bytes shipped to the next stage
 
 
-def decompose(cfg, n_core_stages: int = 2, tokens_per_req: int = 64
-              ) -> List[StageSpec]:
+def decompose(cfg, n_core_stages: int = 2, tokens_per_req: int = 64,
+              bytes_per_param: float = 2.0) -> List[StageSpec]:
+    """``bytes_per_param`` sets the resident weight bytes per parameter
+    for the core stages' `param_bytes` (2.0 = bf16 dense; weight-only
+    quantization passes models.quantize.bytes_per_param(fmt), shrinking
+    the service memory footprint the placement IP sees).  FLOPs are
+    unchanged — dequant happens inside the matmul."""
     d = cfg.d_model
     stages: List[StageSpec] = [
         StageSpec("tokenize", "light", None, 1e3, 1 << 20, tokens_per_req * 4),
@@ -41,7 +46,8 @@ def decompose(cfg, n_core_stages: int = 2, tokens_per_req: int = 64
                      * cfg.layer_params("attn") * 2)
         stages.append(StageSpec(
             "encoder", "core", (0, cfg.n_encoder_layers), enc_flops,
-            cfg.n_encoder_layers * cfg.layer_params("attn") * 2,
+            int(cfg.n_encoder_layers * cfg.layer_params("attn")
+                * bytes_per_param),
             cfg.encoder_seq * d * 2))
     per = cfg.n_layers // n_core_stages
     for i in range(n_core_stages):
@@ -49,8 +55,8 @@ def decompose(cfg, n_core_stages: int = 2, tokens_per_req: int = 64
         hi = cfg.n_layers if i == n_core_stages - 1 else (i + 1) * per
         flops = sum(cfg.layer_active_params(cfg.block_pattern[j]) * 2
                     for j in range(lo, hi))
-        pbytes = sum(cfg.layer_params(cfg.block_pattern[j]) * 2
-                     for j in range(lo, hi))
+        pbytes = int(sum(cfg.layer_params(cfg.block_pattern[j])
+                         * bytes_per_param for j in range(lo, hi)))
         stages.append(StageSpec(f"stage{i}", "core", (lo, hi),
                                 flops, pbytes, d * 2))
     stages.append(StageSpec("sample", "light", None,

@@ -1,1 +1,3 @@
 from repro.models.model import Model, build_model  # noqa: F401
+from repro.models.quantize import (  # noqa: F401
+    quantize_params, dequantize_params, bytes_per_param)

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import _dense_init, rotary
+from repro.models.quantize import qdot
 from repro.sharding.specs import constrain
 
 NEG_INF = -1e30
@@ -43,7 +44,10 @@ def attention_init(key, cfg, dtype, cross: bool = False) -> dict:
 
 
 def _proj_q(params, x, cfg):
-    q = jnp.einsum("...d,dh->...h", x, params["wq"])
+    # qdot == the einsum these projections always ran for plain
+    # arrays; packed weight leaves (models/quantize.py) take the
+    # dequant-fused path — biases stay in the model dtype either way
+    q = qdot(x, params["wq"])
     if "bq" in params:
         q = q + params["bq"]
     q = q.reshape(*x.shape[:-1], cfg.n_heads, cfg.head_dim)
@@ -51,8 +55,8 @@ def _proj_q(params, x, cfg):
 
 
 def _proj_kv(params, x, cfg):
-    k = jnp.einsum("...d,dh->...h", x, params["wk"])
-    v = jnp.einsum("...d,dh->...h", x, params["wv"])
+    k = qdot(x, params["wk"])
+    v = qdot(x, params["wv"])
     if "bk" in params:
         k = k + params["bk"]
         v = v + params["bv"]
@@ -78,7 +82,7 @@ def _gqa_out(probs, v, params, cfg, out_dtype):
     out = jnp.einsum("bngqs,bsnh->bqngh", probs, v.astype(jnp.float32))
     out = out.reshape(b, out.shape[1], cfg.n_heads * cfg.head_dim)
     out = out.astype(out_dtype)
-    return jnp.einsum("...h,hd->...d", out, params["wo"])
+    return qdot(out, params["wo"])
 
 
 def _causal_mask(qlen: int, klen: int, q_offset, window: int = 0):

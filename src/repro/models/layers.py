@@ -8,6 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.models.quantize import qdot
 from repro.sharding.specs import constrain
 
 
@@ -89,7 +90,9 @@ def mlp_init(key, d: int, d_ff: int, dtype) -> dict:
 
 
 def mlp(params: dict, x: jnp.ndarray) -> jnp.ndarray:
-    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
-    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    # qdot == the einsum these sites always ran for plain arrays;
+    # packed leaves (models/quantize.py) take the dequant-fused path
+    g = qdot(x, params["w_gate"])
+    u = qdot(x, params["w_up"])
     h = constrain(jax.nn.silu(g) * u, "act_btf")
-    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+    return qdot(h, params["w_down"])

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
+from repro.models import quantize
 from repro.models import transformer as tfm
 from repro.models.kvcache import cache_struct
 from repro.models.layers import embed, embed_init, rmsnorm, rmsnorm_init, unembed
@@ -31,11 +32,22 @@ from repro.sharding.specs import constrain
 
 
 class Model:
-    def __init__(self, cfg: ModelConfig, unroll: bool = False):
+    def __init__(self, cfg: ModelConfig, unroll: bool = False,
+                 qformat: Optional[str] = None):
         self.cfg = cfg
         self.segments = tfm.build_segments(cfg)
         self.dtype = jnp.dtype(cfg.dtype)
         self.unroll = unroll  # Python-loop layers (roofline cost audit)
+        # weight-only quantization format tag ("int8"/"int4", or None
+        # for the bf16 baseline).  The model never quantizes params
+        # itself — callers pack them via models.quantize.quantize_params
+        # (engines do this at construction); qdot dispatches on the
+        # packed leaves structurally, and this tag rides through
+        # apply_segments so every path is labelled with its format.
+        if qformat not in quantize.QFORMATS:
+            raise ValueError(f"unknown qformat {qformat!r}; "
+                             f"known: {quantize.QFORMATS}")
+        self.qformat = qformat if qformat != "bf16" else None
 
     # ------------------------------------------------------------------
     def init(self, key) -> dict:
@@ -77,7 +89,8 @@ class Model:
         positions = jnp.broadcast_to(jnp.arange(s), (b, s))
         x, _, _ = tfm.apply_segments(
             params["encoder"]["blocks"], frontend.astype(self.dtype),
-            cfg=enc_cfg, mode="train", positions=positions, causal=False)
+            cfg=enc_cfg, mode="train", positions=positions, causal=False,
+            qformat=self.qformat)
         return rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
 
     def _head(self, params, x):
@@ -103,7 +116,7 @@ class Model:
             positions=positions, caches=caches,
             frontend=frontend.astype(self.dtype) if (
                 frontend is not None and not cfg.is_encoder_decoder) else None,
-            enc_src=enc_src, unroll=self.unroll)
+            enc_src=enc_src, unroll=self.unroll, qformat=self.qformat)
         if return_hidden:
             x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
             return x, new_caches, aux
@@ -161,7 +174,7 @@ class Model:
             stage_p["blocks"], x, cfg=cfg, mode=mode,
             segs=tfm.segment_range(cfg, lo, hi),
             positions=positions, pos=pos, caches=caches, unroll=self.unroll,
-            paged=paged)
+            paged=paged, qformat=self.qformat)
         if "lm_head" in stage_p:
             x = rmsnorm(stage_p["final_norm"], x, cfg.norm_eps)
             x = unembed(stage_p["lm_head"], x)
@@ -186,7 +199,7 @@ class Model:
             x, new_row, _ = tfm.apply_segments(
                 params["blocks"], x, cfg=self.cfg, mode="chunk",
                 segs=self.segments, pos=pos, caches=row,
-                unroll=self.unroll)
+                unroll=self.unroll, qformat=self.qformat)
             return x, new_row
 
         return row_isolated(run, caches, slot)
@@ -207,7 +220,7 @@ class Model:
         x, new_caches, _ = tfm.apply_segments(
             params["blocks"], x, cfg=self.cfg, mode="decode",
             segs=self.segments, pos=pos, caches=caches, unroll=self.unroll,
-            paged=paged)
+            paged=paged, qformat=self.qformat)
         return x, new_caches
 
     def decode_step(self, params, caches, batch):
@@ -293,7 +306,7 @@ class Model:
         x, new_caches, _ = tfm.apply_segments(
             params["blocks"], x, cfg=self.cfg, mode="chunk",
             segs=self.segments, pos=batch["pos"], caches=caches,
-            unroll=self.unroll, paged=paged)
+            unroll=self.unroll, paged=paged, qformat=self.qformat)
         logits = self._head(params, x)                   # (B,S,V_pad)
         emit = greedy_verify_update(logits, batch["token"],
                                     batch["budget"], self.cfg.vocab_size)
@@ -333,7 +346,7 @@ class Model:
             x, new_caches, _ = tfm.apply_segments(
                 params["blocks"], x, cfg=self.cfg, mode="chunk",
                 segs=self.segments, pos=pos, caches=row_caches,
-                unroll=self.unroll, paged=paged)
+                unroll=self.unroll, paged=paged, qformat=self.qformat)
             return x, new_caches
 
         return ssm_row_isolated(run, self.segments, caches, row)
@@ -420,5 +433,6 @@ def row_isolated(apply_fn, caches, slot):
     return out, caches
 
 
-def build_model(cfg: ModelConfig, unroll: bool = False) -> Model:
-    return Model(cfg, unroll=unroll)
+def build_model(cfg: ModelConfig, unroll: bool = False,
+                qformat: Optional[str] = None) -> Model:
+    return Model(cfg, unroll=unroll, qformat=qformat)

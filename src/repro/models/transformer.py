@@ -82,12 +82,20 @@ def block_apply(params: dict, x, *, kind: str, cfg, mode: str,
                 positions=None, pos=None, cache: Optional[dict] = None,
                 frontend=None, enc_src=None, causal: bool = True,
                 paged: Optional[dict] = None,
+                qformat: Optional[str] = None,
                 ) -> Tuple[jnp.ndarray, Optional[dict], dict]:
     """Apply one block.  Returns (x, cache_out, aux).
 
     ``paged`` switches the decode/chunk cache paths to block-pool
     addressing (block tables from ``models.kvcache.PagedCache.meta``);
     train/prefill modes are dense-only.
+
+    ``qformat`` tags the weight format the params were packed to
+    ("int8"/"int4", `models/quantize.py`).  Numeric dispatch is
+    *structural* — ``qdot`` routes on packed-leaf-vs-array, so a block
+    whose weights stayed dense (SSM, MoE, odd-K) runs the exact dense
+    math — but the tag travels with the call so jit keys, stage
+    slices, and the roofline audit all see which format they measure.
     """
     aux = _empty_aux()
     h = rmsnorm(params["ln1"], x, cfg.norm_eps)
@@ -282,7 +290,8 @@ def slice_blocks(blocks: dict, cfg, lo: int, hi: int) -> dict:
 
 def apply_segments(blocks, x, *, cfg, mode, segs=None, positions=None,
                    pos=None, caches=None, frontend=None, enc_src=None,
-                   causal=True, remat=None, unroll=False, paged=None):
+                   causal=True, remat=None, unroll=False, paged=None,
+                   qformat=None):
     """Run all segments.  caches: list aligned with segments (or None).
 
     remat: checkpoint each block in training so backward recomputes
@@ -292,6 +301,9 @@ def apply_segments(blocks, x, *, cfg, mode, segs=None, positions=None,
     paged: block-table metadata dict for paged decode/chunk caches —
     shared by every segment (tables are per-request, not per-layer), so
     it rides in the closure, not through the scan.
+    qformat: weight-format tag for packed params (models/quantize.py) —
+    rides in the closure like ``paged``; packed {"q","s"} leaves stack
+    and slice through the scan exactly like dense weights.
     """
     segs = segs if segs is not None else build_segments(cfg)
     remat = (mode == "train") if remat is None else remat
@@ -302,7 +314,7 @@ def apply_segments(blocks, x, *, cfg, mode, segs=None, positions=None,
         cache = caches[i] if caches is not None else None
         kw = dict(kind=seg.kind, cfg=cfg, mode=mode, positions=positions,
                   pos=pos, frontend=frontend, enc_src=enc_src, causal=causal,
-                  paged=paged)
+                  paged=paged, qformat=qformat)
 
         def apply_one(p, xx, c):
             return block_apply(p, xx, cache=c, **kw)

@@ -71,7 +71,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import build_model
+from repro.models import build_model, quantize_params
 from repro.models.kvcache import (PagedCache, paged_copy_blocks,
                                   paged_reset_row)
 from repro.serving.scheduler import (DEFER, REJECT, CapacityView,
@@ -807,14 +807,20 @@ class ServingEngine(_SlotEngine):
     def __init__(self, cfg, params=None, *, max_batch: int = 4,
                  cache_len: int = 128, seed: int = 0,
                  prefill_chunk: int = 16, decode_steps: int = 1,
-                 policy=None, speculative=None):
+                 policy=None, speculative=None, quantization=None):
         super().__init__(cfg, max_batch=max_batch, cache_len=cache_len,
                          prefill_chunk=prefill_chunk,
                          decode_steps=decode_steps, policy=policy,
                          speculative=speculative)
-        self.model = build_model(cfg)
+        self.model = build_model(cfg, qformat=quantization)
+        self.quantization = self.model.qformat
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else self.model.init(key)
+        # pack projection weights once at construction; the packed
+        # leaves enter every jit as static-shaped non-donated operands
+        # (weights are not linear state — only caches donate), so no
+        # recompile churn and the donation contract is untouched
+        self.params = quantize_params(self.params, self.quantization)
         self.caches = self.model.init_cache(max_batch, cache_len)
         self._jits["prefill"] = jax.jit(self.model.prefill_chunk,
                                         donate_argnums=(1,))
@@ -864,7 +870,8 @@ class PagedServingEngine(_PagedEngine):
                  num_blocks: Optional[int] = None, seed: int = 0,
                  prefill_chunk: int = 16, watermark_blocks: int = 0,
                  decode_steps: int = 1, policy=None,
-                 prefix_sharing: bool = True, speculative=None):
+                 prefix_sharing: bool = True, speculative=None,
+                 quantization=None):
         super().__init__(cfg, max_rows=max_rows, max_len=max_len,
                          block_size=block_size, num_blocks=num_blocks,
                          prefill_chunk=prefill_chunk,
@@ -872,9 +879,13 @@ class PagedServingEngine(_PagedEngine):
                          decode_steps=decode_steps, policy=policy,
                          prefix_sharing=prefix_sharing,
                          speculative=speculative)
-        self.model = build_model(cfg)
+        self.model = build_model(cfg, qformat=quantization)
+        self.quantization = self.model.qformat
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else self.model.init(key)
+        # packed at construction; static non-donated jit operands (see
+        # ServingEngine — same contract, reprolint quant-static-weights)
+        self.params = quantize_params(self.params, self.quantization)
         self.caches = self.pc.struct(self.model.dtype)
         self._jits["prefill"] = jax.jit(self.model.paged_prefill_chunk,
                                         donate_argnums=(1,))

@@ -58,7 +58,7 @@ from repro.core.network import resource_index
 from repro.core.qos import qos_scores
 from repro.microservice.partition import (StageSpec, decompose,
                                           profile_stage_ms, to_application)
-from repro.models import build_model
+from repro.models import build_model, bytes_per_param, quantize_params
 from repro.models.kvcache import (PagedCache, paged_copy_blocks,
                                   paged_reset_row)
 from repro.models.model import (greedy_scan_update, greedy_verify_update,
@@ -72,7 +72,8 @@ PLACEMENT_STRATEGIES = ("static_ip", "colocate", "round_robin", "random")
 
 def place_stages(app, net, strategy: str = "static_ip", *, kappa: int = 2,
                  xi: float = sp.XI_DEFAULT, horizon_slots: int = 100,
-                 rng: Optional[np.random.Generator] = None
+                 rng: Optional[np.random.Generator] = None,
+                 bytes_per_param: Optional[float] = None
                  ) -> Dict[str, int]:
     """Map each core service of ``app`` to a network node.
 
@@ -86,7 +87,8 @@ def place_stages(app, net, strategy: str = "static_ip", *, kappa: int = 2,
     if strategy == "static_ip":
         z, q = qos_scores(app, net)
         prob = sp.build_problem(app, net, z, q, kappa=kappa, xi=xi,
-                                horizon_slots=horizon_slots)
+                                horizon_slots=horizon_slots,
+                                bytes_per_param=bytes_per_param)
         x = sp.solve(prob)
         return {app.ms(m).name: (int(np.argmax(x[m])) if x[m].sum() > 0
                                  else es[0]) for m in core}
@@ -222,15 +224,25 @@ class _NetShimMixin:
 
     def _init_stages_and_net(self, cfg, params, *, n_stages, max_batch,
                              cache_len, seed, net, placement, entry_node,
-                             paged: Optional[PagedCache] = None):
+                             paged: Optional[PagedCache] = None,
+                             quantization=None):
         assert 1 <= n_stages <= cfg.n_layers, (n_stages, cfg.n_layers)
-        self.model = build_model(cfg)
+        self.model = build_model(cfg, qformat=quantization)
+        self.quantization = self.model.qformat
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else self.model.init(key)
+        # pack projection weights BEFORE stage construction so every
+        # stage's slice_blocks slice carries the packed leaves; static
+        # non-donated jit operands, same contract as the monolithic
+        # engines (reprolint quant-static-weights)
+        self.params = quantize_params(self.params, self.quantization)
         self.batch_width = max_batch
 
+        # stage service sizes reflect the *resident* weight format, so
+        # profile->place->execute sees the quantized footprint
         self.stage_specs: List[StageSpec] = decompose(
-            cfg, n_core_stages=n_stages)
+            cfg, n_core_stages=n_stages,
+            bytes_per_param=bytes_per_param(self.quantization))
         decoder = [s for s in self.stage_specs
                    if s.kind == "core" and s.name != "encoder"]
         self.stages = [
@@ -469,7 +481,7 @@ class PipelinedEngine(_SlotEngine, _NetShimMixin):
                  prefill_chunk: int = 16, net=None,
                  placement: Optional[Dict[str, int]] = None,
                  entry_node: Optional[int] = None, decode_steps: int = 1,
-                 policy=None, speculative=None):
+                 policy=None, speculative=None, quantization=None):
         super().__init__(cfg, max_batch=max_batch, cache_len=cache_len,
                          prefill_chunk=prefill_chunk,
                          decode_steps=decode_steps, policy=policy,
@@ -477,7 +489,8 @@ class PipelinedEngine(_SlotEngine, _NetShimMixin):
         self._init_stages_and_net(cfg, params, n_stages=n_stages,
                                   max_batch=max_batch, cache_len=cache_len,
                                   seed=seed, net=net, placement=placement,
-                                  entry_node=entry_node)
+                                  entry_node=entry_node,
+                                  quantization=quantization)
 
     # ------------------------------------------------------------------
     # _SlotEngine hooks
@@ -523,7 +536,7 @@ class PagedPipelinedEngine(_PagedEngine, _NetShimMixin):
                  placement: Optional[Dict[str, int]] = None,
                  entry_node: Optional[int] = None, decode_steps: int = 1,
                  policy=None, prefix_sharing: bool = True,
-                 speculative=None):
+                 speculative=None, quantization=None):
         super().__init__(cfg, max_rows=max_rows, max_len=max_len,
                          block_size=block_size, num_blocks=num_blocks,
                          prefill_chunk=prefill_chunk,
@@ -534,7 +547,8 @@ class PagedPipelinedEngine(_PagedEngine, _NetShimMixin):
         self._init_stages_and_net(cfg, params, n_stages=n_stages,
                                   max_batch=max_rows, cache_len=max_len,
                                   seed=seed, net=net, placement=placement,
-                                  entry_node=entry_node, paged=self.pc)
+                                  entry_node=entry_node, paged=self.pc,
+                                  quantization=quantization)
 
     # ------------------------------------------------------------------
     # _PagedEngine hooks

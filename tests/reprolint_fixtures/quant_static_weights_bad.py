@@ -1,0 +1,29 @@
+"""Violating: packing outside quantize.py, mutating packed leaves,
+donating weights into jit."""
+import jax
+
+from repro.models import quantize as qz
+
+
+def repack_locally(w):
+    packed = qz.quantize_int8(w)            # EXPECT: quant-static-weights
+    nibbles = qz.pack_int4(w)               # EXPECT: quant-static-weights
+    return packed, nibbles
+
+
+def patch_scales(params, new_scale):
+    params["wq"]["s"] = new_scale           # EXPECT: quant-static-weights
+    params["wq"]["q"] += 1                  # EXPECT: quant-static-weights
+    return params
+
+
+def decode(params, caches, x):
+    return caches, x
+
+
+def build_jits():
+    bad = jax.jit(decode, donate_argnums=(0, 1))   # EXPECT: quant-static-weights
+    ok = jax.jit(decode, donate_argnums=(1,))
+    also_bad = jax.jit(decode,              # EXPECT: quant-static-weights
+                       donate_argnames=("params",))
+    return bad, ok, also_bad

@@ -1,0 +1,30 @@
+"""Clean: packing via the public API, caches donated, weights static."""
+import jax
+
+from repro.models import quantize as qz
+
+
+def build_engine_params(params, fmt):
+    # the one sanctioned entry point: the format decision stays in
+    # models/quantize.py
+    return qz.quantize_params(params, fmt)
+
+
+def rebuild(params, new_scale):
+    # packed leaves are immutable: rebuild the tree instead of patching
+    return {**params, "wq": {"q": params["wq"]["q"], "s": new_scale}}
+
+
+def queries(state, q):
+    # unrelated "q"-keyed stores on non-weight names are fine
+    state["q"] = q
+    return state
+
+
+def decode(params, caches, x):
+    return caches, x
+
+
+def build_jits():
+    # caches are linear state and donate; weights ride along static
+    return jax.jit(decode, donate_argnums=(1,))

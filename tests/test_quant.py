@@ -1,0 +1,136 @@
+"""Quantized golden-token harness + engine threading (SERVING.md
+§Quantization).
+
+``golden_decode_quant.json`` pins the quantized greedy streams per
+(arch, format) with the same recipe as ``golden_decode.json``:
+``_outputs(ServingEngine(cfg, max_batch=3, cache_len=32,
+prefill_chunk=4, quantization=fmt))``.  The policy is two gates:
+
+1. *Exact pin* — a quantized stream must reproduce its own committed
+   golden byte-identically (determinism + cross-engine parity stay
+   hard gates; quantization never relaxes them).
+2. *Token-match floor* — the fraction of tokens equal to the bf16
+   golden must clear ``quantize.golden_token_match_floor(arch, fmt)``
+   (quantization error flips argmax only at near-ties; the floor
+   catches a broken dequant path at golden-regeneration time).
+
+The bf16 golden itself must stay byte-identical with quantization off
+— asserted directly in tests/test_paged.py (dense == golden) and
+re-checked here via the qformat-off engine.
+"""
+import json
+import pathlib
+
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import quantize
+from repro.serving import (PagedPipelinedEngine, PagedServingEngine,
+                           PipelinedEngine, Request, ServingEngine)
+
+PROMPTS = [[5, 6, 7, 2, 9, 3, 8, 1], [9, 10, 4], [11, 3, 5, 7, 2]]
+
+_HERE = pathlib.Path(__file__).parent
+_GOLDEN_BF16 = json.loads((_HERE / "golden_decode.json").read_text())
+_GOLDEN_QUANT = json.loads((_HERE / "golden_decode_quant.json").read_text())
+
+QUANT_ARCHS = ["smollm-360m", "mixtral-8x7b", "falcon-mamba-7b",
+               "zamba2-7b", "gemma3-12b"]
+#: tier split (TOOLING.md §Test tiers): one arch in tier-1, rest tier2
+SWEEP_ARCHS = [QUANT_ARCHS[0]] + [
+    pytest.param(a, marks=pytest.mark.tier2) for a in QUANT_ARCHS[1:]]
+
+
+def _outputs(eng, new_tokens=5):
+    for i, p in enumerate(PROMPTS):
+        eng.submit(Request(id=i, prompt=list(p), max_new_tokens=new_tokens))
+    return {r.id: r.out_tokens for r in eng.run()}
+
+
+def _match_frac(outs, ref):
+    match = tot = 0
+    for i, toks in outs.items():
+        for a, b in zip(toks, ref[i]):
+            tot += 1
+            match += int(a == b)
+    return match / tot
+
+
+@pytest.mark.parametrize("fmt", ["int8", "int4"])
+@pytest.mark.parametrize("arch", SWEEP_ARCHS)
+def test_quant_golden(arch, fmt):
+    cfg = get_smoke_config(arch)
+    golden = {int(i): toks
+              for i, toks in _GOLDEN_QUANT[arch][fmt].items()}
+    bf16 = {int(i): toks for i, toks in _GOLDEN_BF16[arch].items()}
+
+    slot = _outputs(ServingEngine(cfg, max_batch=3, cache_len=32,
+                                  prefill_chunk=4, quantization=fmt))
+    assert slot == golden          # gate 1: exact pin to own golden
+    frac = _match_frac(slot, bf16)
+    floor = quantize.golden_token_match_floor(arch, fmt)
+    assert frac >= floor, (frac, floor)   # gate 2: tolerance vs bf16
+
+    # cross-engine parity is unchanged by the format: paged == slot
+    paged = _outputs(PagedServingEngine(cfg, max_rows=2, max_len=32,
+                                        block_size=8, prefill_chunk=4,
+                                        quantization=fmt))
+    assert paged == slot
+
+
+def test_bf16_stream_unchanged_with_quantization_off():
+    cfg = get_smoke_config("smollm-360m")
+    import jax
+    eng = ServingEngine(cfg, max_batch=3, cache_len=32, prefill_chunk=4,
+                        quantization=None)
+    assert eng.quantization is None
+    assert not any(quantize.is_quantized(leaf) for leaf in jax.tree.leaves(
+        eng.params, is_leaf=quantize.is_quantized))
+    outs = _outputs(eng)
+    assert outs == {int(i): t
+                    for i, t in _GOLDEN_BF16["smollm-360m"].items()}
+    # "bf16" normalizes to the off state (same jit programs, same HLO)
+    assert ServingEngine(cfg, max_batch=3, cache_len=32, prefill_chunk=4,
+                         quantization="bf16").quantization is None
+
+
+def test_all_engines_agree_quantized():
+    """The format must be invisible to the engine layer: all four
+    engines produce the same int8 stream (the quant analogue of the
+    dense cross-engine parity sweeps)."""
+    cfg = get_smoke_config("smollm-360m")
+    ref = _outputs(ServingEngine(cfg, max_batch=3, cache_len=32,
+                                 prefill_chunk=4, quantization="int8"))
+    assert ref == {int(i): t for i, t in
+                   _GOLDEN_QUANT["smollm-360m"]["int8"].items()}
+    assert _outputs(PipelinedEngine(
+        cfg, n_stages=2, max_batch=3, cache_len=32, prefill_chunk=4,
+        quantization="int8")) == ref
+    assert _outputs(PagedServingEngine(
+        cfg, max_rows=3, max_len=32, block_size=8, prefill_chunk=4,
+        quantization="int8")) == ref
+    assert _outputs(PagedPipelinedEngine(
+        cfg, n_stages=2, max_rows=3, max_len=32, block_size=8,
+        prefill_chunk=4, quantization="int8")) == ref
+
+
+def test_pipelined_stages_carry_packed_leaves():
+    """Stage slicing must preserve packed leaves: each stage's params
+    hold quant dicts for its block slice, and the quantized weight
+    bytes are genuinely smaller than the bf16 tree."""
+    cfg = get_smoke_config("smollm-360m")
+    eng = PipelinedEngine(cfg, n_stages=2, max_batch=2, cache_len=16,
+                          prefill_chunk=4, quantization="int8")
+    import jax
+    n_packed = 0
+    for st in eng.stages:
+        blocks = st.params.get("blocks", {})
+        n_packed += sum(1 for leaf in jax.tree.leaves(
+            blocks, is_leaf=quantize.is_quantized)
+            if quantize.is_quantized(leaf))
+    assert n_packed > 0
+    dense = PipelinedEngine(cfg, n_stages=2, max_batch=2, cache_len=16,
+                            prefill_chunk=4)
+    def nbytes(t):
+        return sum(x.nbytes for x in jax.tree.leaves(t))
+    assert nbytes(eng.params) < nbytes(dense.params)

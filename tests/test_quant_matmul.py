@@ -1,0 +1,188 @@
+"""Weight-only quantization units: Pallas dequant-matmul kernels vs the
+ref.py oracles, quantization-error pins vs the dense matmul, and the
+models/quantize.py pytree contract (key gating, idempotence, qdot
+dispatch equivalence).
+
+Tolerances (documented in kernels/quant_matmul.py): Pallas vs ref is
+f32 round-off only (both dequantize to f32 before the dot; the
+accumulation order differs) — atol 1e-3 at unit scale.  Ref vs the
+*unquantized* dense matmul is the quantization error itself: rel-RMS
+~1e-2 for int8 (per-channel), ~1e-1 for int4 (per-64-group), pinned
+from both sides so a silently-dense path (error ~0) fails too.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ops import quant_matmul
+from repro.kernels.quant_matmul import quant_matmul_pallas
+from repro.models import quantize as qz
+
+SHAPES = [
+    (4, 64, 32),     # small, single tile
+    (3, 128, 96),    # odd rows, non-multiple-of-block N
+    (2, 96, 48),     # K=96: int4 group falls back to gcd(96, 64) = 32
+    (1, 256, 300),   # decode row, N padding
+]
+
+
+def _weights(k, n, key=0):
+    kw, kx = jax.random.split(jax.random.PRNGKey(key))
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    return w, kx
+
+
+def _qs(w, fmt):
+    packed = qz.quantize_int8(w) if fmt == "int8" else qz.quantize_int4(w)
+    return packed["q"], packed["s"]
+
+
+def _rel_rms(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return float(np.sqrt(np.mean((a - b) ** 2)) / np.sqrt(np.mean(b ** 2)))
+
+
+# ----------------------------------------------------------------------
+# Pallas kernel vs ref oracle
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("fmt", ["int8", "int4"])
+def test_pallas_matches_ref(m, k, n, fmt):
+    w, kx = _weights(k, n)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    q, s = _qs(w, fmt)
+    exp = (ref.quant_matmul_int8_ref(x, q, s) if fmt == "int8"
+           else ref.quant_matmul_int4_ref(x, q, s))
+    out = quant_matmul_pallas(x, q, s, block_m=8, block_n=64,
+                              interpret=True)
+    assert out.shape == exp.shape and out.dtype == x.dtype
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=1e-3, rtol=0)
+
+
+@pytest.mark.parametrize("fmt", ["int8", "int4"])
+def test_ops_wrapper_dispatches(fmt):
+    w, kx = _weights(128, 64)
+    x = jax.random.normal(kx, (2, 128), jnp.float32)
+    q, s = _qs(w, fmt)
+    np.testing.assert_allclose(
+        np.asarray(quant_matmul(x, q, s, use_pallas=True, interpret=True)),
+        np.asarray(quant_matmul(x, q, s, use_pallas=False)),
+        atol=1e-3, rtol=0)
+
+
+def test_batched_x_reshapes():
+    w, kx = _weights(64, 32)
+    q, s = _qs(w, "int8")
+    x = jax.random.normal(kx, (2, 3, 64), jnp.float32)
+    out = quant_matmul_pallas(x, q, s, interpret=True)
+    assert out.shape == (2, 3, 32)
+    flat = quant_matmul_pallas(x.reshape(6, 64), q, s, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out.reshape(6, 32)),
+                                  np.asarray(flat))
+
+
+# ----------------------------------------------------------------------
+# Quantization error vs the dense matmul — pinned from both sides
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("fmt,lo,hi", [("int8", 1e-4, 3e-2),
+                                       ("int4", 1e-2, 2e-1)])
+def test_quant_error_pinned(fmt, lo, hi):
+    w, kx = _weights(256, 128, key=7)
+    x = jax.random.normal(kx, (8, 256), jnp.float32)
+    dense = x @ w
+    q, s = _qs(w, fmt)
+    out = (ref.quant_matmul_int8_ref(x, q, s) if fmt == "int8"
+           else ref.quant_matmul_int4_ref(x, q, s))
+    err = _rel_rms(out, dense)
+    assert lo < err < hi, err
+
+
+# ----------------------------------------------------------------------
+# models/quantize.py: pack/unpack, pytree contract, qdot dispatch
+# ----------------------------------------------------------------------
+def test_int4_pack_unpack_roundtrip():
+    q = jnp.clip(jax.random.randint(jax.random.PRNGKey(3), (64, 16),
+                                    -8, 8), -8, 7).astype(jnp.int8)
+    np.testing.assert_array_equal(
+        np.asarray(qz.unpack_int4(qz.pack_int4(q))), np.asarray(q))
+
+
+def test_dequantize_bounds():
+    w, _ = _weights(128, 64, key=5)
+    for fmt, tol in (("int8", 0.02), ("int4", 0.2)):
+        packed = qz._quantize_leaf(w, fmt, qz.DEFAULT_GROUP)
+        assert qz.is_quantized(packed)
+        err = np.max(np.abs(np.asarray(qz.dequantize(packed) - w)))
+        # symmetric per-channel/group scales bound the error by s/2-ish
+        assert err < tol * float(np.max(np.abs(np.asarray(w)))), err
+
+
+def test_quantize_params_gating_and_idempotence():
+    key = jax.random.PRNGKey(0)
+    params = {
+        "wq": jax.random.normal(key, (32, 64)),
+        "w_up": jax.random.normal(key, (32, 128)),
+        "embed": jax.random.normal(key, (100, 32)),   # not a QUANT_KEY
+        "scale": jnp.ones((32,)),                      # norm, stays dense
+        "bq": jnp.zeros((64,)),                        # bias, ndim < 2
+        "conv_w": jax.random.normal(key, (4, 32)),     # SSM, not gated in
+    }
+    out = qz.quantize_params(params, "int8")
+    assert qz.is_quantized(out["wq"]) and qz.is_quantized(out["w_up"])
+    for k in ("embed", "scale", "bq", "conv_w"):
+        assert not qz.is_quantized(out[k])
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(params[k]))
+    # idempotent: re-quantizing a packed tree is a no-op
+    again = qz.quantize_params(out, "int8")
+    np.testing.assert_array_equal(np.asarray(again["wq"]["q"]),
+                                  np.asarray(out["wq"]["q"]))
+    # None / "bf16" are identity; unknown formats raise
+    assert qz.quantize_params(params, None) is params
+    assert qz.quantize_params(params, "bf16") is params
+    with pytest.raises(ValueError):
+        qz.quantize_params(params, "fp8")
+
+
+def test_odd_k_stays_dense_for_int4():
+    params = {"wq": jax.random.normal(jax.random.PRNGKey(1), (33, 64))}
+    out = qz.quantize_params(params, "int4")
+    assert not qz.is_quantized(out["wq"])   # int4 packs K-pairs
+    out8 = qz.quantize_params(params, "int8")
+    assert qz.is_quantized(out8["wq"])      # int8 has no such constraint
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_qdot_dense_is_exact_einsum(dtype):
+    w, kx = _weights(64, 32)
+    w = w.astype(dtype)
+    x = jax.random.normal(kx, (2, 5, 64), dtype)
+    np.testing.assert_array_equal(
+        np.asarray(qz.qdot(x, w)),
+        np.asarray(jnp.einsum("...k,kn->...n", x, w)))
+
+
+@pytest.mark.parametrize("fmt,tol", [("int8", 3e-2), ("int4", 2e-1)])
+def test_qdot_quant_close_to_dense(fmt, tol):
+    w, kx = _weights(192, 64, key=11)   # K=192: int4 group 64, 3 groups
+    x = jax.random.normal(kx, (4, 192), jnp.float32)
+    packed = qz._quantize_leaf(w, fmt, qz.DEFAULT_GROUP)
+    assert _rel_rms(qz.qdot(x, packed), x @ w) < tol
+    # and the scan-chunked path agrees with the flat ref dequant
+    refd = (ref.quant_matmul_int8_ref(x, packed["q"], packed["s"])
+            if fmt == "int8"
+            else ref.quant_matmul_int4_ref(x, packed["q"], packed["s"]))
+    np.testing.assert_allclose(np.asarray(qz.qdot(x, packed)),
+                               np.asarray(refd), atol=1e-3, rtol=0)
+
+
+def test_chunk_len_divides():
+    for k in (1, 2, 64, 96, 192, 1000, 4096):
+        c = qz._chunk_len(k)
+        assert k % c == 0 and c <= 256
+    assert qz._chunk_len(192, multiple=64) == 192
+    assert qz._chunk_len(4096, multiple=64) == 256

@@ -38,6 +38,7 @@ FIXTURE_RULES = [
     ("ledger_privacy", "ledger-privacy"),
     ("traced_truthiness", "traced-truthiness"),
     ("mutable_default", "mutable-default"),
+    ("quant_static_weights", "quant-static-weights"),
 ]
 
 

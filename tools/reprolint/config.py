@@ -60,6 +60,9 @@ SCOPED_RULES = {
 #: rule -> paths exempt from it.  ledger-privacy: the ledger itself and
 #: its dedicated test harnesses (they assert on refcounts/free lists by
 #: design); everything else goes through the public PagedCache API.
+#: quant-static-weights: quantize.py owns the packers, its unit tests
+#: exercise them directly, and the kernel benches time raw packed
+#: buffers; everything else goes through quantize_params(params, fmt).
 RULE_EXEMPT_PATHS = {
     "ledger-privacy": (
         "src/repro/models/kvcache.py",
@@ -67,10 +70,17 @@ RULE_EXEMPT_PATHS = {
         "tests/test_paged_props.py",
         "tests/test_prefix_sharing.py",
     ),
+    "quant-static-weights": (
+        "src/repro/models/quantize.py",
+        "tests/test_quant_matmul.py",
+        "tests/test_quant.py",
+        "tests/test_kernels.py",
+        "benchmarks/kernels_bench.py",
+    ),
 }
 
-#: ledger-privacy is scoped-on-everywhere minus its exemptions
-PRIVACY_RULES = ("ledger-privacy",)
+#: owner-module rules: scoped-on-everywhere minus their exemptions
+PRIVACY_RULES = ("ledger-privacy", "quant-static-weights")
 
 #: methods forming the engine macro-step host path: the one deliberate
 #: device->host materialization per macro-step lives here (suppressed

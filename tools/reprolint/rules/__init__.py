@@ -1,5 +1,6 @@
 """Rule modules — importing this package registers every rule."""
 from tools.reprolint.rules import (host_layer, host_sync,  # noqa: F401
                                    jit_donation, ledger_privacy,
-                                   mutable_default, seeded_rng,
-                                   step_clock, traced_truthiness)
+                                   mutable_default, quant_static_weights,
+                                   seeded_rng, step_clock,
+                                   traced_truthiness)

@@ -1,0 +1,175 @@
+"""quant-static-weights: packed weights are static, non-donated, and
+only models/quantize.py packs them.
+
+Weight-only quantization (SERVING.md §Quantization) ships packed
+``{"q": ints, "s": scales}`` leaves through every jit in the decode
+path.  The contract that keeps the whole stack correct:
+
+* **Packing is quantize.py's job.**  Everything else calls
+  ``quantize_params(params, fmt)`` once at engine construction; a
+  stray ``quantize_int8`` / ``pack_int4`` call elsewhere forks the
+  format decision (group size, scale dtype, nibble order) away from
+  the one module that owns it — and silently diverges from the golden
+  harness when quantize.py evolves.
+* **Packed leaves are immutable.**  The engines treat weights as
+  constants; writing into a packed leaf's ``"q"``/``"s"`` slot after
+  construction invalidates the committed goldens without failing any
+  shape check (int8 buffers accept any int8 garbage).
+* **Weights are never donated.**  The decode jits donate *caches*
+  (linear state, rebound every call) but reuse the same weight buffers
+  for the process lifetime; a ``jax.jit`` that donates a
+  params/weights-named argument frees the packed buffers after the
+  first call and the next step reads deallocated memory (or silently
+  copies, on backends that refuse).
+
+The rule is AST-static: it flags (1) packer calls outside the
+exemption list (quantize.py itself, its unit tests, and the kernels
+microbench that times raw packed buffers), (2) stores into a
+``["q"]``/``["s"]`` subscript of a params/weights/packed-named
+expression, (3) ``jax.jit(..., donate_argnums/argnames)`` covering a
+params/weights-named parameter of a resolvable local def or lambda.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator, List, Optional
+
+from tools.reprolint.context import FileContext
+from tools.reprolint.framework import Finding, Rule, register
+
+#: the packing entry points owned by models/quantize.py
+PACKERS = ("quantize_int8", "quantize_int4", "pack_int4",
+           "_quantize_leaf")
+
+#: parameter / base-expression names that hold model weights
+WEIGHTS_RE = re.compile(r"(^|_)(params?|weights?|packed|quant)(_|$)")
+
+
+def _param_names(fn: ast.AST) -> List[str]:
+    args = fn.args
+    return [a.arg for a in args.posonlyargs + args.args]
+
+
+def _base_name(node: ast.AST) -> str:
+    """Innermost Name/Attribute identifier of a subscript chain."""
+    while isinstance(node, (ast.Subscript, ast.Attribute)):
+        node = node.value if isinstance(node, ast.Subscript) \
+            else node.value
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+def _last_attr(node: ast.AST) -> str:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+@register
+class QuantStaticWeights(Rule):
+    name = "quant-static-weights"
+    description = ("packed quant weights enter jit static and "
+                   "non-donated, are never mutated, and only "
+                   "models/quantize.py packs them")
+    motivation = ("a stray packer call forks the format decision; a "
+                  "mutated or donated packed leaf invalidates the "
+                  "committed goldens without failing any shape check")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                yield from self._check_packer_call(ctx, node)
+                if ctx.call_qualname(node) == "jax.jit":
+                    yield from self._check_donation(ctx, node)
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                yield from self._check_store(ctx, node)
+
+    # -- (1) packing outside quantize.py -------------------------------
+    def _check_packer_call(self, ctx, call) -> Iterator[Finding]:
+        name = _last_attr(call.func)
+        if name in PACKERS:
+            yield self.finding(
+                ctx, call,
+                f"{name}() packs quant weights outside models/quantize.py"
+                f" — go through quantize_params(params, fmt) so the "
+                f"format decision (group size, scales, nibble order) "
+                f"stays in the module that owns it")
+
+    # -- (2) mutating a packed leaf ------------------------------------
+    def _check_store(self, ctx, node) -> Iterator[Finding]:
+        targets = node.targets if isinstance(node, ast.Assign) \
+            else [node.target]
+        for t in targets:
+            if not isinstance(t, ast.Subscript):
+                continue
+            key = t.slice
+            if not (isinstance(key, ast.Constant)
+                    and key.value in ("q", "s")):
+                continue
+            if WEIGHTS_RE.search(_base_name(t)):
+                yield self.finding(
+                    ctx, node,
+                    f"store into packed quant leaf slot "
+                    f"[{key.value!r}] — packed weights are immutable "
+                    f"after quantize_params(); rebuild the tree instead")
+
+    # -- (3) donating a weights-named jit argument ---------------------
+    def _check_donation(self, ctx, call) -> Iterator[Finding]:
+        donated_names = set()
+        donated_idxs = set()
+        for kw in call.keywords:
+            if kw.arg == "donate_argnames":
+                donated_names |= _const_set(kw.value, str)
+            elif kw.arg == "donate_argnums":
+                donated_idxs |= _const_set(kw.value, int)
+        if not donated_names and not donated_idxs:
+            return
+        fn = self._resolve(ctx, call)
+        if fn is None:
+            # unresolvable target: only literal argnames are checkable
+            for p in donated_names:
+                if WEIGHTS_RE.search(p):
+                    yield self.finding(ctx, call, self._msg(p))
+            return
+        for i, p in enumerate(_param_names(fn)):
+            if not WEIGHTS_RE.search(p):
+                continue
+            if i in donated_idxs or p in donated_names:
+                yield self.finding(ctx, call, self._msg(p))
+
+    @staticmethod
+    def _msg(p: str) -> str:
+        return (f"jax.jit donates weights-named parameter {p!r} — "
+                f"packed quant weights are static operands reused "
+                f"every step; donating them frees the buffers after "
+                f"the first call (donate the caches, not the params)")
+
+    @staticmethod
+    def _resolve(ctx, call) -> Optional[ast.AST]:
+        if not call.args:
+            return None
+        target = call.args[0]
+        if isinstance(target, ast.Lambda):
+            return target
+        if isinstance(target, ast.Name):
+            defs = [n for n in ast.walk(ctx.tree)
+                    if isinstance(n, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef))
+                    and n.name == target.id]
+            if defs:
+                return defs[-1]
+        return None
+
+
+def _const_set(node: ast.AST, typ) -> set:
+    if isinstance(node, ast.Constant) and isinstance(node.value, typ):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return {e.value for e in node.elts
+                if isinstance(e, ast.Constant)
+                and isinstance(e.value, typ)}
+    return set()
